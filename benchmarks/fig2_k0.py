@@ -1,0 +1,38 @@
+"""Paper Fig. 2: effect of k0 on CR and wall time — CR decline then
+stabilise as k0 rises; time grows with k0 (FedGiA_G more than FedGiA_D)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import run_algorithm
+
+K0S = [1, 2, 4, 6, 8, 10, 14, 20]
+TRIALS = 2
+
+
+def run():
+    rows = []
+    for variant in ("fedgia_d", "fedgia_g"):
+        for k0 in K0S:
+            rs = [run_algorithm(variant, "linreg", k0, seed=s) for s in range(TRIALS)]
+            rows.append({
+                "variant": variant, "k0": k0,
+                "cr": float(np.mean([r["cr"] for r in rs])),
+                "time_s": float(np.mean([r["time_s"] for r in rs])),
+            })
+    return rows
+
+
+def main():
+    rows = run()
+    print("variant,k0,CR,time_s")
+    for r in rows:
+        print(f"{r['variant']},{r['k0']},{r['cr']:.1f},{r['time_s']:.3f}")
+    for variant in ("fedgia_d", "fedgia_g"):
+        crs = [r["cr"] for r in rows if r["variant"] == variant]
+        assert crs[0] >= crs[-1], f"{variant}: CR should decline with k0"
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Render §Dry-run and §Roofline of EXPERIMENTS.md from results/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.fill_experiments
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.roofline import analyse, load_records, model_flops
+from repro.configs import list_architectures
+from repro.config import INPUT_SHAPES
+
+MARK_DRY = "<!-- DRYRUN_SUMMARY -->"
+MARK_ROOF = "<!-- ROOFLINE_TABLE -->"
+
+
+def fmt_ms(x):
+    return f"{x:9.1f}"
+
+
+def render(recs):
+    base = [r for r in recs if r["algo"] in ("fedgia", "serve")
+            and r.get("collapsed", True) and not r.get("fsdp")
+            and not r.get("replicate_params")]
+    rows = analyse(base)
+
+    # ---- dry-run summary: compile matrix + memory fit
+    n1 = sum(1 for r in base if r["mesh"] == "16x16")
+    n2 = sum(1 for r in base if r["mesh"] == "2x16x16")
+    lines = [f"Compiled OK: {n1}/40 single-pod, {n2}/40 multi-pod.", ""]
+    lines.append("Per-chip memory (args+outputs+temps, GiB) from "
+                 "`compiled.memory_analysis()` of the PRODUCTION (scan+remat) "
+                 "lowering — v5e budget is 16 GiB:")
+    lines.append("")
+    lines.append("| arch | train_4k | prefill_32k | decode_32k | long_500k |")
+    lines.append("|---|---|---|---|---|")
+    fit = {(r["arch"], r["shape"], r["mesh"]): r for r in rows}
+    for arch in list_architectures():
+        cells = []
+        for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            r = fit.get((arch, shape, "16x16"))
+            if r is None:
+                cells.append("—")
+                continue
+            g = r["fit_gib"]
+            cells.append(f"{g:.1f}" + (" ⚠" if g > 16 else ""))
+        lines.append(f"| {arch} | " + " | ".join(cells) + " |")
+    lines.append("")
+    lines.append("⚠ = exceeds one v5e chip's 16 GiB HBM as configured; "
+                 "every such case is addressed or explained in §Perf / "
+                 "DESIGN §5b (FedGiA's per-client state floor; unfused "
+                 "bytes upper bound).")
+    dry = "\n".join(lines)
+
+    # ---- roofline table
+    rl = ["| arch | shape | mesh | compute ms | memory ms | collective ms |"
+          " bottleneck | useful ratio |",
+          "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        rl.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+            f" {r['t_compute_ms']:.1f} | {r['t_memory_ms']:.1f} |"
+            f" {r['t_collective_ms']:.1f} | {r['bottleneck']} |"
+            f" {r['useful_ratio']:.2f} |"
+        )
+    rl.append("")
+    rl.append("`useful ratio` = MODEL_FLOPS / HLO_FLOPS per chip, where "
+              "MODEL_FLOPS = 6·N_active·tokens (train round; FedGiA computes "
+              "ONE gradient per round) or 2·N_active·tokens (serving). "
+              "Ratios < 1 expose non-model compute: the quadratic attention "
+              "term (dominant at 32k prefill), MoE dispatch overhead "
+              "(capacity factor 1.25), and non-causal-skipped score blocks "
+              "in the jnp streaming attention (the Pallas kernel skips them)."
+              " Per-(arch,mesh) bottleneck notes follow in §Roofline notes.")
+    roof = "\n".join(rl)
+    return dry, roof
+
+
+def main():
+    recs = load_records()
+    dry, roof = render(recs)
+    with open("EXPERIMENTS.md") as f:
+        s = f.read()
+    s = s.replace(MARK_DRY, dry)
+    s = s.replace(MARK_ROOF, roof)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(s)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

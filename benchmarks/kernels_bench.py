@@ -1,0 +1,74 @@
+"""Kernel/algorithm micro-benchmarks (CPU wall time; the analytic TPU
+roofline numbers live in benchmarks/roofline.py).
+
+  1. collapsed vs unrolled FedGiA round (DESIGN §6 B1): the measurable
+     computational-efficiency win of the closed-form round.
+  2. FedGiA vs FedAvg per-round cost (paper Table I: one gradient vs k0).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FedConfig
+from repro.core import make_algorithm
+from repro.data import linreg_noniid
+from repro.models import LeastSquares
+
+
+def _time(fn, *args, iters=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def bench_collapsed_vs_unrolled(n=200_000, m=16, k0=20):
+    model = LeastSquares(100)
+    batch = {k: jnp.asarray(v) for k, v in linreg_noniid(0, 3200, 100, m).items()}
+    rows = []
+    for collapsed in (True, False):
+        fed = FedConfig(algorithm="fedgia", num_clients=m, k0=k0,
+                        collapsed=collapsed, sigma_t=0.2, h_policy="diag_ema")
+        algo = make_algorithm(fed, model.loss, model=model)
+        state = algo.init(model.init(jax.random.PRNGKey(0)),
+                          jax.random.PRNGKey(1), init_batch=batch)
+        rnd = jax.jit(lambda s, b: algo.round(s, b)[0]["z"])
+        us = _time(rnd, state, batch)
+        rows.append((f"fedgia_round_{'collapsed' if collapsed else 'unrolled'}_k0{k0}",
+                     us))
+    return rows
+
+
+def bench_fedgia_vs_fedavg(m=16, k0=10):
+    model = LeastSquares(100)
+    batch = {k: jnp.asarray(v) for k, v in linreg_noniid(0, 6400, 100, m).items()}
+    rows = []
+    for name in ("fedgia", "fedavg"):
+        fed = FedConfig(algorithm=name, num_clients=m, k0=k0, sigma_t=0.2,
+                        lr=0.01, h_policy="scalar")
+        algo = make_algorithm(fed, model.loss, model=model)
+        state = algo.init(model.init(jax.random.PRNGKey(0)),
+                          jax.random.PRNGKey(1), init_batch=batch)
+        rnd = jax.jit(lambda s, b: algo.round(s, b)[0]["x"])
+        rows.append((f"{name}_round_k0{k0}", _time(rnd, state, batch)))
+    return rows
+
+
+def main():
+    rows = []
+    rows += bench_collapsed_vs_unrolled()
+    rows += bench_fedgia_vs_fedavg()
+    for name, us in rows:
+        print(f"{name},{us:.1f},")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

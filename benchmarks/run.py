@@ -1,0 +1,45 @@
+"""Benchmark entry point: one module per paper table/figure.
+
+  table4           — paper Table IV (4+ algorithms x k0 x 3 problems)
+  fig1_convergence — paper Fig. 1 (k0 effect on iterations-to-converge)
+  fig2_k0          — paper Fig. 2 (k0 effect on CR and wall time)
+  fig3_alpha       — paper Fig. 3 (selection-fraction effect)
+  kernels_bench    — collapsed-vs-unrolled round + FedGiA-vs-FedAvg cost
+  roofline         — §Roofline table from the dry-run artifacts
+
+Run everything:  PYTHONPATH=src python -m benchmarks.run
+One section:     PYTHONPATH=src python -m benchmarks.run --only table4
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import fig1_convergence, fig2_k0, fig3_alpha, kernels_bench
+from benchmarks import roofline, table4
+
+SECTIONS = {
+    "table4": table4.main,
+    "fig1": fig1_convergence.main,
+    "fig2": fig2_k0.main,
+    "fig3": fig3_alpha.main,
+    "kernels": kernels_bench.main,
+    "roofline": roofline.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=sorted(SECTIONS), default=None)
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(SECTIONS)
+    for name in names:
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        SECTIONS[name]()
+        print(f"----- {name} done in {time.time()-t0:.1f}s -----")
+
+
+if __name__ == "__main__":
+    main()

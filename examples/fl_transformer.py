@@ -1,0 +1,90 @@
+"""End-to-end driver: federated training of a ~100M-parameter decoder LM
+with FedGiA (a few hundred optimizer steps = rounds x k0).
+
+    PYTHONPATH=src python examples/fl_transformer.py \
+        --rounds 40 --k0 5 --clients 4 --batch 2 --seq-len 64
+
+The model (d_model=768, 12 layers, 32k vocab ≈ 134M params) trains on a
+synthetic non-iid bigram token stream; the script reports the per-round
+objective and verifies it decreases. The identical round function is what
+the multi-pod dry-run lowers for the production mesh.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FedConfig, ModelConfig
+from repro.core import make_algorithm
+from repro.data.tokens import synthetic_batch_for
+from repro.models import Transformer
+
+
+def lm_100m() -> ModelConfig:
+    return ModelConfig(
+        name="fl-lm-134m",
+        family="dense",
+        num_layers=12,
+        d_model=768,
+        num_heads=12,
+        num_kv_heads=12,
+        d_ff=2048,
+        vocab_size=32000,
+        dtype="float32",
+        source="examples/fl_transformer.py",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--k0", type=int, default=5)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--sigma-t", type=float, default=30.0,
+                    help="sigma = t * r_hat / m. The init-point Lipschitz "
+                         "probe UNDER-estimates transformer curvature, so t "
+                         "must be >> the paper's 0.15 (t=30 ~= the theory's "
+                         "sigma >= 6r/m with the true r; t<1 diverges, "
+                         "exactly as Lemma IV.1 predicts).")
+    args = ap.parse_args()
+
+    cfg = lm_100m()
+    model = Transformer(cfg)
+    print(f"model: {cfg.name}  params={cfg.param_count()/1e6:.0f}M")
+
+    batch = jax.tree.map(
+        jnp.asarray,
+        synthetic_batch_for(cfg, args.clients, args.batch, args.seq_len),
+    )
+    fed = FedConfig(
+        algorithm="fedgia", num_clients=args.clients, k0=args.k0, alpha=1.0,
+        sigma_t=args.sigma_t, h_policy="diag_ema", auto_lipschitz=True,
+    )
+    algo = make_algorithm(fed, model.loss, model=model)
+    params0 = model.init(jax.random.PRNGKey(0))
+    state = algo.init(params0, jax.random.PRNGKey(1), init_batch=batch)
+    print(f"sigma={float(state['sigma']):.4f} r_hat={float(state['r']):.3f}")
+
+    round_fn = jax.jit(algo.round)
+    t0 = time.time()
+    first = None
+    for r in range(args.rounds):
+        state, met = round_fn(state, batch)
+        f = float(met["f_xbar"])
+        assert f == f and f < 1e4, (
+            f"diverged at round {r}: sigma too small (raise --sigma-t)"
+        )
+        first = first if first is not None else f
+        print(f"round {r:3d}  steps={(r+1)*args.k0:4d}  f={f:.4f}  "
+              f"|grad|^2={float(met['grad_sq_norm']):.3e}  "
+              f"({time.time()-t0:.0f}s)")
+    assert f < first, "objective did not improve"
+    print(f"OK: {first:.4f} -> {f:.4f} over {args.rounds * args.k0} steps "
+          f"({2 * args.rounds} communications)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Reproduce the paper's §V experiments end-to-end (compact settings).
+
+    PYTHONPATH=src python examples/paper_experiments.py [--full]
+
+Covers: Table IV (algorithm comparison), Fig. 1 (k0 vs iterations),
+Fig. 2 (k0 vs CR/time), Fig. 3 (alpha effect). The heavyweight sweep
+behind EXPERIMENTS.md runs via `python -m benchmarks.run`.
+"""
+import argparse
+
+from benchmarks import fig1_convergence, fig2_k0, fig3_alpha, table4
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="all three problems (default: linreg only)")
+    args = ap.parse_args()
+
+    print("== Table IV (Obj / CR / time) ==")
+    problems = ("linreg", "logreg", "ncvx_logreg") if args.full else ("linreg",)
+    rows = table4.run(problems=problems, trials=1)
+    for r in rows:
+        print(f"  {r['problem']:12s} {r['algo']:9s} k0={r['k0']:<3d}"
+              f" obj={r['obj']:.4f} CR={r['cr']:7.1f} t={r['time_s']:.2f}s")
+
+    print("== Fig. 1: k0 vs iterations to converge ==")
+    for r in fig1_convergence.run():
+        print(f"  k0={r['k0']:<3d} iterations={r['iterations']:<6d}"
+              f" rounds={r['rounds']:<5d} f={r['final_obj']:.6f}")
+
+    print("== Fig. 2: k0 vs CR / time ==")
+    for r in fig2_k0.run():
+        print(f"  {r['variant']:9s} k0={r['k0']:<3d} CR={r['cr']:7.1f}"
+              f" t={r['time_s']:.2f}s")
+
+    print("== Fig. 3: alpha vs CR / time ==")
+    for r in fig3_alpha.run():
+        print(f"  alpha={r['alpha']:<5.2f} CR={r['cr']:<6d} t={r['time_s']:.2f}s"
+              f" obj={r['obj']:.6f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Quickstart: FedGiA on the paper's Example V.1 in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Solves a 128-client non-iid federated least-squares problem to the paper's
+tolerance (eq. 35) and contrasts the communication rounds with FedAvg.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.config import FedConfig
+from repro.core import make_algorithm
+from repro.data import linreg_noniid
+from repro.models import LeastSquares
+
+M, N, D = 128, 100, 12800
+TOL = 1e-7
+
+batch = {k: jnp.asarray(v) for k, v in linreg_noniid(0, D, N, M).items()}
+model = LeastSquares(N)
+
+for algo_name, hp in [
+    ("fedgia", dict(sigma_t=0.15, h_policy="diag_ema", alpha=0.5)),
+    ("fedavg", dict(lr=0.01, alpha=1.0)),
+]:
+    fed = FedConfig(algorithm=algo_name, num_clients=M, k0=5, **hp)
+    algo = make_algorithm(fed, model.loss, model=model)
+    state = algo.init(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(1),
+                      init_batch=batch)
+    round_fn = jax.jit(algo.round)
+    for r in range(600):
+        state, met = round_fn(state, batch)
+        if float(met["grad_sq_norm"]) < TOL:
+            break
+    print(f"{algo_name:8s}: f={float(met['f_xbar']):.6f} "
+          f"|grad f|^2={float(met['grad_sq_norm']):.2e} "
+          f"CR={2 * (r + 1)} (k0=5, m={M})")

@@ -1,0 +1,81 @@
+"""Pytree checkpointing: npz for leaves + json for the treedef/metadata.
+
+Round-robust: checkpoints are written atomically (tmp + rename) and named
+by step; `load_checkpoint` restores the exact pytree structure and dtypes,
+including federated algorithm state (client duals etc.).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+_META = "meta.json"
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves, dtypes = [], [], []
+    for path, leaf in flat:
+        arr = np.asarray(leaf)
+        dtypes.append(str(arr.dtype))
+        if arr.dtype.name == "bfloat16":  # npz cannot store bf16
+            arr = arr.astype(np.float32)
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(arr)
+    return names, leaves, dtypes, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree, extra: Optional[Dict] = None):
+    os.makedirs(directory, exist_ok=True)
+    names, leaves, dtypes, _ = _flatten_with_names(tree)
+    tmp = tempfile.mkdtemp(dir=directory)
+    arrays = {f"leaf_{i}": l for i, l in enumerate(leaves)}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    meta = {"step": step, "names": names, "dtypes": dtypes, "extra": extra or {}}
+    with open(os.path.join(tmp, _META), "w") as f:
+        json.dump(meta, f)
+    final = os.path.join(directory, f"ckpt_{step:08d}")
+    if os.path.exists(final):
+        import shutil
+
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for f in os.listdir(directory)
+        if (m := re.fullmatch(r"ckpt_(\d+)", f))
+    ]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: int, tree_like) -> Tuple[Any, Dict]:
+    """tree_like: a pytree with the target structure (values ignored)."""
+    path = os.path.join(directory, f"ckpt_{step:08d}")
+    with open(os.path.join(path, _META)) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves = [data[f"leaf_{i}"] for i in range(len(meta["names"]))]
+    ref_leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+    assert len(ref_leaves) == len(leaves), (
+        f"checkpoint has {len(leaves)} leaves, target structure has "
+        f"{len(ref_leaves)}"
+    )
+    import jax.numpy as jnp
+
+    restored = [
+        jnp.asarray(l, dtype=r.dtype) if hasattr(r, "dtype") else jnp.asarray(l)
+        for l, r in zip(leaves, ref_leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, restored), meta["extra"]

@@ -1,0 +1,9 @@
+from repro.config.base import (
+    FedConfig,
+    MeshConfig,
+    ModelConfig,
+    ServeConfig,
+    ShapeConfig,
+    TrainConfig,
+    INPUT_SHAPES,
+)

@@ -1,0 +1,33 @@
+"""DeepSeek-V3 671B — MLA attention, 1 shared + 256 routed experts (top-8),
+first 3 layers dense, multi-token-prediction aux head. [arXiv:2412.19437]
+
+moe_d_ff=2048 per assignment; the leading dense layers use the model-card
+dense FFN width 18432.
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,
+    d_ff=18432,  # dense layers (model card); experts use moe_d_ff
+    vocab_size=129280,
+    moe=True,
+    num_experts=256,
+    experts_per_token=8,
+    num_shared_experts=1,
+    moe_d_ff=2048,
+    first_dense_layers=3,
+    router_aux_coef=0.001,
+    attention_type="mla",
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_rope_dim=64,
+    qk_nope_dim=128,
+    v_head_dim=128,
+    mtp=True,
+    source="arXiv:2412.19437",
+)

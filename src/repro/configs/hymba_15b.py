@@ -1,0 +1,19 @@
+"""Hymba 1.5B — hybrid-head: attention heads and Mamba(SSM) heads run in
+PARALLEL inside every block and their outputs are fused. [arXiv:2411.13676]
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    attention_type="hybrid",
+    ssm_state=16,
+    source="arXiv:2411.13676",
+)

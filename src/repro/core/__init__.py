@@ -1,0 +1,6 @@
+from repro.core.api import FederatedAlgorithm, make_algorithm
+from repro.core.fedgia import FedGiA
+from repro.core.baselines.fedavg import FedAvg
+from repro.core.baselines.fedprox import FedProx
+from repro.core.baselines.fedpd import FedPD
+from repro.core.baselines.scaffold import Scaffold

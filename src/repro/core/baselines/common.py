@@ -1,0 +1,27 @@
+"""Shared pieces for the paper's comparison baselines (§V.D).
+
+All baselines use the paper's learning-rate schedule
+    gamma_k(a) = a / log2(k + 2)
+with k the GLOBAL inner-iteration counter, and the paper's full-device-
+participation comparison protocol (all m clients update every step).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import broadcast_clients, per_client_value_and_grad
+from repro.utils import pytree as pt
+
+
+def lr_schedule(a, k):
+    return a / (jnp.log2(k.astype(jnp.float32) + 2.0))
+
+
+def round_metrics(losses, grads, round_idx):
+    gmean = pt.tree_mean_over_axis(grads, axis=0)
+    return {
+        "f_xbar": jnp.mean(losses),
+        "grad_sq_norm": pt.tree_sq_norm(gmean),
+        "cr": 2.0 * (round_idx + 1).astype(jnp.float32),
+    }

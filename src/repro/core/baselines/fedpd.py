@@ -1,0 +1,99 @@
+"""FedPD [Zhang et al. 2021] — oracle choice I / option I per paper §V.D:
+primal-dual with inexact local solves.
+
+Per inner step, each client approximately solves
+    x_i ≈ argmin f_i(x) + <lam_i, x − x̄_i> + 1/(2 eta) ||x − x̄_i||²
+with `inner_steps` GD iterations (lr = gamma_k), then
+    lam_i += (x_i − x̄_i)/eta ;   x̄_i ← x_i + eta*lam_i.
+Aggregation every k0 steps: x̄ = mean_i x̄_i (deterministic, matching the
+paper's modification of FedPD's probabilistic aggregation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FedConfig
+from repro.core.api import LossFn, broadcast_clients
+from repro.core.baselines.common import lr_schedule, round_metrics
+from repro.utils import pytree as pt
+
+
+class FedPD:
+    name = "fedpd"
+
+    def __init__(self, fed: FedConfig, loss_fn: LossFn, model=None):
+        self.fed = fed
+        self.loss_fn = loss_fn
+        self.model = model
+
+    def init(self, params0, rng, init_batch=None):
+        sdt = jnp.dtype(self.fed.state_dtype)
+        m = self.fed.num_clients
+        x = pt.tree_cast(params0, sdt)
+        return {
+            "x": x,
+            "lam": pt.tree_zeros_like(broadcast_clients(x, m)),
+            "round": jnp.zeros((), jnp.int32),
+            "step": jnp.zeros((), jnp.int32),
+            "rng": rng,
+        }
+
+    def round(self, state, batch):
+        fed = self.fed
+        m = fed.num_clients
+        eta = fed.fedpd_eta
+        anchors = broadcast_clients(state["x"], m)
+
+        vg = jax.vmap(
+            jax.value_and_grad(lambda p, b: self.loss_fn(p, b)[0]), in_axes=(0, 0)
+        )
+
+        def local_step(carry, j):
+            anchor, lam, first = carry
+            lr = lr_schedule(fed.lr, state["step"] + j)
+
+            def inner(x, _):
+                losses, grads = vg(x, batch)
+                g = jax.tree.map(
+                    lambda gg, xx, ll, aa: gg + ll + (xx - aa) / eta,
+                    grads, x, lam, anchor,
+                )
+                x_new = jax.tree.map(lambda p, d: p - lr * d.astype(p.dtype), x, g)
+                return x_new, (losses, grads)
+
+            xi, (losses, grads) = jax.lax.scan(
+                inner, anchor, None, length=fed.inner_steps
+            )
+            lam_new = jax.tree.map(
+                lambda ll, xx, aa: ll + (xx - aa) / eta, lam, xi, anchor
+            )
+            anchor_new = jax.tree.map(
+                lambda xx, ll: xx + eta * ll, xi, lam_new
+            )
+            first = jax.tree.map(
+                lambda f, new: jnp.where(j == 0, new, f),
+                first,
+                (
+                    jax.tree.map(lambda a: a[0], losses),
+                    jax.tree.map(lambda a: a[0], grads),
+                ),
+            )
+            return (anchor_new, lam_new, first), None
+
+        first0 = (jnp.zeros((m,), jnp.float32), pt.tree_zeros_like(anchors))
+        (anchors_new, lam_new, (losses0, grads0)), _ = jax.lax.scan(
+            local_step, (anchors, state["lam"], first0), jnp.arange(fed.k0)
+        )
+        x_new = pt.tree_mean_over_axis(anchors_new, axis=0)
+
+        new_state = dict(state)
+        new_state.update(
+            x=x_new,
+            lam=lam_new,
+            round=state["round"] + 1,
+            step=state["step"] + fed.k0,
+        )
+        metrics = round_metrics(losses0, grads0, state["round"])
+        metrics["local_grad_evals"] = jnp.float32(fed.k0 * fed.inner_steps)
+        return new_state, metrics

@@ -1,0 +1,80 @@
+"""FedProx [Li et al. 2020] — per paper §V.D: each client descends the
+proximal objective  f_i(x) + (mu/2)||x − x̄||²  with GD, k0 steps between
+aggregations (inner_steps GD iterations per step)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FedConfig
+from repro.core.api import LossFn, broadcast_clients
+from repro.core.baselines.common import lr_schedule, round_metrics
+from repro.utils import pytree as pt
+
+
+class FedProx:
+    name = "fedprox"
+
+    def __init__(self, fed: FedConfig, loss_fn: LossFn, model=None):
+        self.fed = fed
+        self.loss_fn = loss_fn
+        self.model = model
+
+    def init(self, params0, rng, init_batch=None):
+        sdt = jnp.dtype(self.fed.state_dtype)
+        return {
+            "x": pt.tree_cast(params0, sdt),
+            "round": jnp.zeros((), jnp.int32),
+            "step": jnp.zeros((), jnp.int32),
+            "rng": rng,
+        }
+
+    def round(self, state, batch):
+        fed = self.fed
+        m = fed.num_clients
+        xbar = state["x"]
+        xc = broadcast_clients(xbar, m)
+
+        vg = jax.vmap(
+            jax.value_and_grad(lambda p, b: self.loss_fn(p, b)[0]), in_axes=(0, 0)
+        )
+
+        def prox_grad(x, plain_grads, anchor):
+            return jax.tree.map(
+                lambda g, p, a: g + fed.prox_mu * (p - a), plain_grads, x, anchor
+            )
+
+        def local_step(carry, j):
+            x, first = carry
+            lr = lr_schedule(fed.lr, state["step"] + j)
+
+            def inner(x, _):
+                losses, grads = vg(x, batch)
+                g = prox_grad(x, grads, xc)
+                x_new = jax.tree.map(lambda p, gg: p - lr * gg.astype(p.dtype), x, g)
+                return x_new, (losses, grads)
+
+            x, (losses, grads) = jax.lax.scan(inner, x, None, length=fed.inner_steps)
+            first = jax.tree.map(
+                lambda f, new: jnp.where(j == 0, new, f),
+                first,
+                (
+                    jax.tree.map(lambda a: a[0], losses),
+                    jax.tree.map(lambda a: a[0], grads),
+                ),
+            )
+            return (x, first), None
+
+        first0 = (jnp.zeros((m,), jnp.float32), pt.tree_zeros_like(xc))
+        (xc_new, (losses0, grads0)), _ = jax.lax.scan(
+            local_step, (xc, first0), jnp.arange(fed.k0)
+        )
+        x_new = pt.tree_mean_over_axis(xc_new, axis=0)
+
+        new_state = dict(state)
+        new_state.update(
+            x=x_new, round=state["round"] + 1, step=state["step"] + fed.k0
+        )
+        metrics = round_metrics(losses0, grads0, state["round"])
+        metrics["local_grad_evals"] = jnp.float32(fed.k0 * fed.inner_steps)
+        return new_state, metrics

@@ -1,0 +1,99 @@
+"""SCAFFOLD [Karimireddy et al. 2020] — stochastic controlled averaging
+with client/server control variates (paper Table I comparison set).
+
+Local: y ← y − lr (∇f_i(y) − c_i + c), k0 steps.
+Control update (option II): c_i⁺ = c_i − c + (x̄ − y)/(k0·lr).
+Server: x̄ += mean(y − x̄);  c += mean(c_i⁺ − c_i).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FedConfig
+from repro.core.api import LossFn, broadcast_clients
+from repro.core.baselines.common import lr_schedule, round_metrics
+from repro.utils import pytree as pt
+
+
+class Scaffold:
+    name = "scaffold"
+
+    def __init__(self, fed: FedConfig, loss_fn: LossFn, model=None):
+        self.fed = fed
+        self.loss_fn = loss_fn
+        self.model = model
+
+    def init(self, params0, rng, init_batch=None):
+        sdt = jnp.dtype(self.fed.state_dtype)
+        m = self.fed.num_clients
+        x = pt.tree_cast(params0, sdt)
+        stacked = broadcast_clients(x, m)
+        return {
+            "x": x,
+            "c": pt.tree_zeros_like(x),
+            "ci": pt.tree_zeros_like(stacked),
+            "round": jnp.zeros((), jnp.int32),
+            "step": jnp.zeros((), jnp.int32),
+            "rng": rng,
+        }
+
+    def round(self, state, batch):
+        fed = self.fed
+        m = fed.num_clients
+        xbar = state["x"]
+        xc = broadcast_clients(xbar, m)
+        lr = lr_schedule(fed.lr, state["step"])
+
+        vg = jax.vmap(
+            jax.value_and_grad(lambda p, b: self.loss_fn(p, b)[0]), in_axes=(0, 0)
+        )
+
+        def local_step(carry, j):
+            y, first = carry
+            losses, grads = vg(y, batch)
+            lr_j = lr_schedule(fed.lr, state["step"] + j)
+            y_new = jax.tree.map(
+                lambda p, g, cc, ci: p - lr_j * (g + cc[None] - ci).astype(p.dtype),
+                y,
+                grads,
+                state["c"],
+                state["ci"],
+            )
+            first = jax.tree.map(
+                lambda f, new: jnp.where(j == 0, new, f), first, (losses, grads)
+            )
+            return (y_new, first), None
+
+        first0 = (jnp.zeros((m,), jnp.float32), pt.tree_zeros_like(xc))
+        (y, (losses0, grads0)), _ = jax.lax.scan(
+            local_step, (xc, first0), jnp.arange(fed.k0)
+        )
+
+        denom = fed.k0 * lr
+        ci_new = jax.tree.map(
+            lambda ci, cc, xx, yy: ci - cc[None] + (xx[None] - yy) / denom,
+            state["ci"],
+            state["c"],
+            xbar,
+            y,
+        )
+        x_new = pt.tree_mean_over_axis(y, axis=0)
+        c_new = jax.tree.map(
+            lambda cc, cin, ci: cc + jnp.mean(cin - ci, axis=0),
+            state["c"],
+            ci_new,
+            state["ci"],
+        )
+
+        new_state = dict(state)
+        new_state.update(
+            x=x_new,
+            c=c_new,
+            ci=ci_new,
+            round=state["round"] + 1,
+            step=state["step"] + fed.k0,
+        )
+        metrics = round_metrics(losses0, grads0, state["round"])
+        metrics["local_grad_evals"] = jnp.float32(fed.k0)
+        return new_state, metrics

@@ -1,0 +1,73 @@
+"""FedGiA hyper-parameter policies: sigma and H_i (paper Remark IV.1 / Table III).
+
+Theory requirements (Lemma IV.1): sigma >= 6 r / m and 0 <= H_i <= r_i I.
+  * sigma = t * r / m with t from Table III (t >= 6 gives the guaranteed
+    regime; the paper uses smaller t in practice and still converges).
+  * H policies:
+      scalar   — H_i = r_hat * I           (always theory-compliant)
+      diag_ema — per-parameter diagonal curvature proxy from gradient
+                 magnitudes, clipped to [0, r_hat]  (compliant by Remark IV.1)
+      gram     — H_i = Gram matrix of the client data (linear models only;
+                 paper's FedGiA_G)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import pytree as pt
+
+EMA_BETA = 0.9
+
+
+def sigma_from(t: float, r: float, m: int):
+    return t * r / m
+
+
+def estimate_lipschitz(loss_fn, params, batch, key, probes: int = 4, eps: float = 1e-2):
+    """r_hat = max over random probes of ||g(x+d) - g(x)|| / ||d||."""
+    g0 = jax.grad(lambda p: loss_fn(p, batch)[0])(params)
+
+    def probe(k):
+        d = jax.tree.map(
+            lambda a, kk: eps * jax.random.normal(kk, a.shape, jnp.float32),
+            params,
+            _split_like(k, params),
+        )
+        p2 = pt.tree_add(params, jax.tree.map(lambda x, a: x.astype(a.dtype), d, params))
+        g1 = jax.grad(lambda p: loss_fn(p, batch)[0])(p2)
+        num = pt.tree_norm(pt.tree_sub(g1, g0))
+        den = pt.tree_norm(d)
+        return num / jnp.maximum(den, 1e-12)
+
+    keys = jax.random.split(key, probes)
+    vals = jnp.stack([probe(k) for k in keys])
+    return jnp.maximum(vals.max(), 1e-8)
+
+
+def _split_like(key, tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = list(jax.random.split(key, len(leaves)))
+    return jax.tree.unflatten(treedef, keys)
+
+
+def update_diag_h(h, gbar, r_hat, m: int):
+    """EMA diagonal curvature proxy, clipped to [0, r_hat] (Remark IV.1).
+
+    gbar is the scaled gradient (1/m) grad f_i; rescale to grad f_i before
+    normalising so the proxy is invariant to m.
+    """
+    g2 = jax.tree.map(lambda g: jnp.square(g.astype(jnp.float32) * m), gbar)
+    gmax = jax.tree.reduce(
+        jnp.maximum,
+        jax.tree.map(lambda a: a.max(), g2),
+        jnp.float32(1e-30),
+    )
+    h_new = jax.tree.map(
+        lambda hh, gg: jnp.clip(
+            EMA_BETA * hh + (1 - EMA_BETA) * (r_hat * gg / gmax), 0.0, r_hat
+        ),
+        h,
+        g2,
+    )
+    return h_new

@@ -1,0 +1,19 @@
+"""Client selection: the paper draws |C| = alpha*m clients uniformly without
+replacement each communication round (§V.B)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def num_selected(m: int, alpha: float) -> int:
+    return max(1, min(m, int(round(alpha * m))))
+
+
+def selection_mask(key, m: int, alpha: float) -> jax.Array:
+    """(m,) bool — True = client runs the inexact-ADMM branch this round."""
+    n_sel = num_selected(m, alpha)
+    if n_sel == m:
+        return jnp.ones((m,), bool)
+    ranks = jax.random.permutation(key, m)
+    return ranks < n_sel

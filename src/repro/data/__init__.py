@@ -1,0 +1,7 @@
+from repro.data.synthetic import (
+    linreg_noniid,
+    logreg_data,
+    make_client_batches,
+)
+from repro.data.partition import dirichlet_partition, equal_partition
+from repro.data.tokens import synthetic_lm_batches, synthetic_batch_for

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each subpackage ships kernel.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), ops.py (jit'd public wrapper with an interpret flag for CPU
+validation) and ref.py (pure-jnp oracle the tests assert against).
+
+  fedgia_update   — the paper's per-round client update, eqs (12)-(17),
+                    fused into one elementwise pass (DESIGN §6 B1/B2)
+  flash_attention — blocked causal GQA attention (+ sliding window), the
+                    prefill/train hot-spot
+  rwkv6_scan      — RWKV-6 data-dependent-decay recurrence, chunked over
+                    time with the state held in VMEM
+"""

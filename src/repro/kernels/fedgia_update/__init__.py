@@ -1,0 +1,2 @@
+from repro.kernels.fedgia_update.ops import fedgia_update
+from repro.kernels.fedgia_update.ref import fedgia_update_ref

@@ -1,0 +1,28 @@
+"""Public wrapper: pads the parameter stream to the lane width, dispatches
+to the Pallas kernel (TPU) or the jnp reference (CPU / interpret)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.fedgia_update.kernel import LANES, fedgia_update_kernel
+from repro.kernels.fedgia_update.ref import fedgia_update_ref
+
+
+def fedgia_update(xbar, gbar, pi, h, sel, sigma, m, *, k0: int,
+                  use_kernel: bool = True, interpret: bool = False):
+    """Flattened-vector FedGiA round update. All arrays (N,)."""
+    if not use_kernel:
+        return fedgia_update_ref(xbar, gbar, pi, h, sel, sigma, m, k0=k0)
+    n = xbar.shape[0]
+    pad = (-n) % LANES
+    if pad:
+        pad1 = lambda v: jnp.pad(v, (0, pad))
+        xbar, gbar, pi, h = map(pad1, (xbar, gbar, pi, h))
+    x, p, z = fedgia_update_kernel(
+        xbar, gbar, pi, h,
+        jnp.asarray(sel), jnp.asarray(sigma, jnp.float32), m,
+        k0=k0, interpret=interpret,
+    )
+    if pad:
+        x, p, z = x[:n], p[:n], z[:n]
+    return x, p, z

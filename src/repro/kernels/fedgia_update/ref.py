@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the fused FedGiA update — the paper-faithful
+UNROLLED iteration of eqs (12)-(14), plus the GD branch (15)-(17)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fedgia_update_ref(xbar, gbar, pi, h, sel, sigma, m, *, k0: int):
+    """Same signature as the kernel; iterates the ADMM update k0 times."""
+    xbar32 = xbar.astype(jnp.float32)
+    g = gbar.astype(jnp.float32)
+    pi0 = pi.astype(jnp.float32)
+    d = 1.0 / (h.astype(jnp.float32) / m + sigma)
+
+    def step(pi_c, _):
+        x = xbar32 - d * (g + pi_c)  # eq. (12)
+        pi_n = pi_c + sigma * (x - xbar32)  # eq. (13)
+        return pi_n, x
+
+    pi_k, xs = jax.lax.scan(step, pi0, None, length=k0)
+    x_k = xs[-1]
+    z_k = x_k + pi_k / sigma  # eq. (14)
+
+    x_gd = xbar32  # eq. (15)
+    pi_gd = -g  # eq. (16)
+    z_gd = xbar32 - g / sigma  # eq. (17)
+
+    pick = lambda a, b: jnp.where(sel, a, b)
+    return (
+        pick(x_k, x_gd).astype(xbar.dtype),
+        pick(pi_k, pi_gd).astype(xbar.dtype),
+        pick(z_k, z_gd).astype(xbar.dtype),
+    )

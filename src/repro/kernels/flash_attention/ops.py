@@ -1,0 +1,17 @@
+"""Public wrapper for the flash attention kernel."""
+from __future__ import annotations
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    use_kernel: bool = True, interpret: bool = False,
+                    block_q: int = 256, block_k: int = 256):
+    """q: (B,H,S,hd); k,v: (B,Kv,T,hd). Blocked streaming softmax."""
+    if not use_kernel:
+        return flash_attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention_kernel(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )

@@ -1,0 +1,29 @@
+"""Full-softmax oracle for the flash kernel (materialises S x T scores)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window=None):
+    """q: (B,H,S,hd); k,v: (B,Kv,T,hd). Returns (B,H,S,hd)."""
+    B, H, S, hd = q.shape
+    Kv, T = k.shape[1], k.shape[2]
+    G = H // Kv
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum(
+        "bhsd,bhtd->bhst", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / (hd**0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,13 @@
+"""Public wrapper for the chunked RWKV-6 recurrence kernel."""
+from __future__ import annotations
+
+from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_kernel
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+
+
+def rwkv6_scan(r, k, v, w, u, *, use_kernel: bool = True,
+               interpret: bool = False, block_t: int = 64):
+    """r,k,v,w: (B,H,T,hd); u: (H,hd) -> (y (B,H,T,hd), S (B,H,hd,hd))."""
+    if not use_kernel:
+        return rwkv6_scan_ref(r, k, v, w, u)
+    return rwkv6_scan_kernel(r, k, v, w, u, block_t=block_t, interpret=interpret)

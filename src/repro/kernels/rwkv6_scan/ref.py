@@ -1,0 +1,22 @@
+"""Oracle: the models/rwkv.py lax.scan recurrence, reshaped to kernel layout."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.rwkv import wkv6_scan
+
+
+def rwkv6_scan_ref(r, k, v, w, u):
+    """r,k,v,w: (B,H,T,hd); u: (H,hd). Returns (y, final_state)."""
+    tr = lambda a: a.swapaxes(1, 2)  # -> (B,T,H,hd)
+    B, H, T, hd = r.shape
+    state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    y, s = wkv6_scan(
+        tr(r).astype(jnp.float32),
+        tr(k).astype(jnp.float32),
+        tr(v).astype(jnp.float32),
+        tr(w).astype(jnp.float32),
+        u.astype(jnp.float32),
+        state0,
+    )
+    return tr(y).astype(r.dtype), s

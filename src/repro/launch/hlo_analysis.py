@@ -1,0 +1,106 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+`compiled.cost_analysis()` gives PER-DEVICE HLO flops / bytes accessed.
+Collective traffic is NOT in cost_analysis: we parse the (post-SPMD,
+per-device) HLO text and sum the result sizes of every collective op,
+weighting all-reduce by 2x (ring reduce-scatter + all-gather wire cost).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# wire-cost multiplier per result byte (ring algorithms)
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result sizes of collective ops in a per-device HLO module.
+
+    Async pairs (-start/-done) are counted once (the -start op).
+    Returns {op_kind: bytes, "total": bytes, "wire_bytes": weighted}."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.search(r"=\s*(.+?)\s+(%?)([\w-]+)\(", line)
+        if not m:
+            continue
+        op = m.group(3)
+        if op.endswith("-done"):
+            continue
+        base = op[:-6] if op.endswith("-start") else op
+        if base not in _COLLECTIVES:
+            continue
+        lhs = line.split(f" {op}(")[0]
+        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(lhs))
+        out[base] += nbytes
+        wire += nbytes * _WIRE_FACTOR[base]
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["wire_bytes"] = wire
+    return out
+
+
+def roofline_terms(cost: dict, coll: Dict[str, float]) -> Dict[str, float]:
+    """Three roofline terms (seconds, per chip) + dominance."""
+    flops = float(cost.get("flops", 0.0))
+    bytes_hbm = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_hbm / HBM_BW
+    t_coll = coll["wire_bytes"] / ICI_BW
+    terms = {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+    }
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = {
+        "t_compute_s": "compute",
+        "t_memory_s": "memory",
+        "t_collective_s": "collective",
+    }[dom]
+    terms["hlo_flops"] = flops
+    terms["hlo_bytes"] = bytes_hbm
+    terms["collective_bytes"] = coll["total"]
+    terms["wire_bytes"] = coll["wire_bytes"]
+    return terms
+
+
+def count_hlo_ops(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}(?:\.\d+)?\(", hlo_text))

@@ -1,0 +1,2 @@
+from repro.models.transformer import Transformer
+from repro.models.linear_models import LeastSquares, LogisticRegression, NonConvexLogistic

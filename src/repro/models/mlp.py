@@ -1,0 +1,23 @@
+"""SwiGLU MLP (llama-style gated feed-forward)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import he_init, silu
+
+
+def mlp_init(rng, d: int, f: int, dtype):
+    ks = jax.random.split(rng, 3)
+    return {
+        "w1": he_init(ks[0], (d, f), d, dtype),  # gate
+        "w3": he_init(ks[1], (d, f), d, dtype),  # up
+        "w2": he_init(ks[2], (f, d), f, dtype),  # down
+    }
+
+
+def mlp_apply(params, x):
+    h = silu(jnp.einsum("bsd,df->bsf", x, params["w1"])) * jnp.einsum(
+        "bsd,df->bsf", x, params["w3"]
+    )
+    return jnp.einsum("bsf,fd->bsd", h, params["w2"])

@@ -1,0 +1,124 @@
+"""RWKV-6 ("Finch") block: time-mix with data-dependent decay + channel-mix.
+
+Attention-free: the sequence mixer is a linear recurrence over a per-head
+(head_dim x head_dim) state — O(1) decode state, sub-quadratic everywhere,
+so rwkv6 runs long_500k natively.  The lax.scan here is the oracle for the
+chunked Pallas kernel in repro/kernels/rwkv6_scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import he_init, rmsnorm_nohead, silu
+
+DECAY_LORA = 64
+
+
+def time_mix_init(rng, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    H, hd = cfg.num_heads, cfg.rwkv_head_size
+    ks = jax.random.split(rng, 8)
+    return {
+        "mu": 0.5 * jnp.ones((5, d), dtype),  # r,k,v,w,g token-shift lerps
+        "wr": he_init(ks[0], (d, H * hd), d, dtype),
+        "wk": he_init(ks[1], (d, H * hd), d, dtype),
+        "wv": he_init(ks[2], (d, H * hd), d, dtype),
+        "wg": he_init(ks[3], (d, H * hd), d, dtype),
+        "wo": he_init(ks[4], (H * hd, d), H * hd, dtype),
+        "decay_w1": he_init(ks[5], (d, DECAY_LORA), d, dtype),
+        "decay_w2": he_init(ks[6], (DECAY_LORA, d), DECAY_LORA, dtype),
+        "decay_bias": jnp.full((d,), -4.0, dtype),
+        "bonus_u": he_init(ks[7], (H, hd), hd, dtype),
+    }
+
+
+def channel_mix_init(rng, cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    return {
+        "mu_k": 0.5 * jnp.ones((d,), dtype),
+        "mu_r": 0.5 * jnp.ones((d,), dtype),
+        "wk": he_init(ks[0], (d, f), d, dtype),
+        "wv": he_init(ks[1], (f, d), f, dtype),
+        "wr": he_init(ks[2], (d, d), d, dtype),
+    }
+
+
+def _token_shift(x, shift_state):
+    """x: (B,T,d); shift_state: (B,d) = last token of the previous chunk."""
+    prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1, :]], axis=1)
+    return prev
+
+
+def wkv6_scan(r, k, v, w, u, state0):
+    """RWKV6 recurrence (oracle).
+
+    r,k,v,w: (B,T,H,hd); u: (H,hd); state0: (B,H,hd,hd) [key_dim, value_dim].
+      y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+      S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Returns y: (B,T,H,hd), final state.
+    """
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs  # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,hdk,hdv)
+        y = jnp.einsum("bhj,bhji->bhi", rt, S + u[..., None] * kv)
+        S_new = wt[..., None] * S + kv
+        return S_new, y
+
+    xs = jax.tree.map(lambda a: a.swapaxes(0, 1), (r, k, v, w))  # (T,B,H,hd)
+    state, ys = jax.lax.scan(step, state0, xs)
+    return ys.swapaxes(0, 1), state  # (B,T,H,hd)
+
+
+def time_mix_apply(params, cfg: ModelConfig, x, tm_state):
+    """tm_state: {"shift": (B,d), "wkv": (B,H,hdk,hdv)} or zeros for train."""
+    B, T, d = x.shape
+    H, hd = cfg.num_heads, cfg.rwkv_head_size
+    prev = _token_shift(x, tm_state["shift"])
+    mu = params["mu"]
+    xr, xk, xv, xw, xg = [x + mu[i] * (prev - x) for i in range(5)]
+    r = jnp.einsum("btd,de->bte", xr, params["wr"]).reshape(B, T, H, hd)
+    k = jnp.einsum("btd,de->bte", xk, params["wk"]).reshape(B, T, H, hd)
+    v = jnp.einsum("btd,de->bte", xv, params["wv"]).reshape(B, T, H, hd)
+    g = silu(jnp.einsum("btd,de->bte", xg, params["wg"])).reshape(B, T, H, hd)
+    # data-dependent decay (the Finch signature)
+    decay = params["decay_bias"] + jnp.einsum(
+        "btd,dl,le->bte", jnp.tanh(xw), params["decay_w1"], params["decay_w2"]
+    )
+    w = jnp.exp(-jnp.exp(decay.astype(jnp.float32))).reshape(B, T, H, hd)
+
+    y, wkv_new = wkv6_scan(
+        r.astype(jnp.float32),
+        k.astype(jnp.float32),
+        v.astype(jnp.float32),
+        w,
+        params["bonus_u"].astype(jnp.float32),
+        tm_state["wkv"],
+    )
+    y = rmsnorm_nohead(y, eps=1e-5).astype(x.dtype)  # per-head group norm
+    y = (y * g).reshape(B, T, H * hd)
+    out = jnp.einsum("bte,ed->btd", y, params["wo"])
+    new_state = {"shift": x[:, -1, :], "wkv": wkv_new}
+    return out, new_state
+
+
+def channel_mix_apply(params, x, cm_shift):
+    prev = _token_shift(x, cm_shift)
+    xk = x + params["mu_k"] * (prev - x)
+    xr = x + params["mu_r"] * (prev - x)
+    k = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, params["wk"])))
+    kv = jnp.einsum("btf,fd->btd", k, params["wv"])
+    out = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, params["wr"])) * kv
+    return out, x[:, -1, :]
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype):
+    H, hd = cfg.num_heads, cfg.rwkv_head_size
+    return {
+        "shift": jnp.zeros((batch, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "cm_shift": jnp.zeros((batch, cfg.d_model), dtype),
+    }

@@ -1,0 +1,68 @@
+"""Selective SSM (Mamba-style) branch used by the Hymba hybrid block.
+
+Simplified faithful core: data-dependent (dt, B, C) selective scan with
+diagonal A, gated output. Inner dim = d_model (Hymba pairs each attention
+head with an SSM head of the same width). No depthwise conv (noted in
+DESIGN.md as a simplification).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import he_init, silu
+
+
+def ssm_init(rng, cfg: ModelConfig, dtype):
+    d, st = cfg.d_model, cfg.ssm_state
+    ks = jax.random.split(rng, 6)
+    return {
+        "in_x": he_init(ks[0], (d, d), d, dtype),
+        "in_z": he_init(ks[1], (d, d), d, dtype),
+        "w_dt": he_init(ks[2], (d, d), d, dtype),
+        "dt_bias": jnp.full((d,), -2.0, dtype),
+        "w_B": he_init(ks[3], (d, st), d, dtype),
+        "w_C": he_init(ks[4], (d, st), d, dtype),
+        "A_log": jnp.zeros((d, st), jnp.float32),
+        "D": jnp.ones((d,), dtype),
+        "out": he_init(ks[5], (d, d), d, dtype),
+    }
+
+
+def ssm_scan(u, dt, Bm, Cm, A, state0):
+    """u,dt: (B,T,di); Bm,Cm: (B,T,st); A: (di,st); state0: (B,di,st).
+
+    h_t = exp(dt_t * A) h_{t-1} + (dt_t * u_t) B_t ;  y_t = <h_t, C_t> + D u_t
+    """
+
+    def step(h, xs):
+        ut, dtt, bt, ct = xs  # (B,di) (B,di) (B,st) (B,st)
+        decay = jnp.exp(dtt[..., None] * A)  # (B,di,st)
+        h_new = decay * h + (dtt * ut)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h_new, ct)
+        return h_new, y
+
+    xs = jax.tree.map(lambda a: a.swapaxes(0, 1), (u, dt, Bm, Cm))
+    state, ys = jax.lax.scan(step, state0, xs)
+    return ys.swapaxes(0, 1), state
+
+
+def ssm_apply(params, cfg: ModelConfig, x, ssm_state):
+    """x: (B,T,d); ssm_state: (B,d,st). Returns (out, new_state)."""
+    u = jnp.einsum("btd,de->bte", x, params["in_x"])
+    z = jnp.einsum("btd,de->bte", x, params["in_z"])
+    dt = jax.nn.softplus(
+        jnp.einsum("btd,de->bte", x, params["w_dt"]) + params["dt_bias"]
+    ).astype(jnp.float32)
+    Bm = jnp.einsum("btd,ds->bts", x, params["w_B"]).astype(jnp.float32)
+    Cm = jnp.einsum("btd,ds->bts", x, params["w_C"]).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"])
+    y, new_state = ssm_scan(u.astype(jnp.float32), dt, Bm, Cm, A, ssm_state)
+    y = y.astype(x.dtype) + params["D"] * u
+    out = jnp.einsum("btd,de->bte", y * silu(z), params["out"])
+    return out, new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int):
+    return jnp.zeros((batch, cfg.d_model, cfg.ssm_state), jnp.float32)

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import sgd, adam, apply_updates
+from repro.optim.schedules import paper_lr, constant, cosine

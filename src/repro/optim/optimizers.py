@@ -1,0 +1,74 @@
+"""Minimal optimizer library (no external deps): SGD(+momentum) and Adam.
+
+Used by the local solvers of the baselines and by the example drivers.
+API mirrors optax: init(params) -> opt_state; update(grads, opt_state,
+params) -> (updates, opt_state); apply_updates(params, updates).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def sgd(lr, momentum: float = 0.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        mu = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return {"mu": mu, "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step_lr = lr_fn(state["count"])
+        if momentum:
+            mu = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(m.dtype), state["mu"], grads
+            )
+            upd = jax.tree.map(lambda m: -step_lr * m, mu)
+            new = {"mu": mu, "count": state["count"] + 1}
+        else:
+            upd = jax.tree.map(lambda g: -step_lr * g, grads)
+            new = {"mu": None, "count": state["count"] + 1}
+        return upd, new
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": z, "v": jax.tree.map(jnp.copy, z), "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        c = state["count"] + 1
+        m = jax.tree.map(
+            lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32), state["m"], grads
+        )
+        v = jax.tree.map(
+            lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"],
+            grads,
+        )
+        mhat = jax.tree.map(lambda mm: mm / (1 - b1**c.astype(jnp.float32)), m)
+        vhat = jax.tree.map(lambda vv: vv / (1 - b2**c.astype(jnp.float32)), v)
+        step_lr = lr_fn(c)
+        upd = jax.tree.map(
+            lambda mm, vv: -step_lr * mm / (jnp.sqrt(vv) + eps), mhat, vhat
+        )
+        return upd, {"m": m, "v": v, "count": c}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)

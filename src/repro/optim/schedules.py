@@ -1,0 +1,27 @@
+"""Learning-rate schedules. `paper_lr` is the paper's gamma_k(a) (§V.D)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paper_lr(a: float):
+    """gamma_k(a) = a / log2(k+2)."""
+
+    def fn(count):
+        return a / jnp.log2(count.astype(jnp.float32) + 2.0)
+
+    return fn
+
+
+def constant(a: float):
+    return lambda count: a
+
+
+def cosine(a: float, total: int, warmup: int = 0):
+    def fn(count):
+        c = count.astype(jnp.float32)
+        warm = jnp.minimum(c / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((c - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        return a * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+    return fn

@@ -1,0 +1,8 @@
+from repro.sharding.specs import (
+    param_specs,
+    fed_state_specs,
+    train_batch_specs,
+    cache_specs,
+    serve_token_specs,
+    sanitize_specs,
+)

@@ -1,0 +1,255 @@
+"""PartitionSpec factories for every pytree the launchers shard.
+
+Conventions (Megatron-style tensor parallelism over the `model` axis):
+  * projections INTO heads/ff/experts shard their OUTPUT dim over `model`;
+    projections back to d_model shard their INPUT dim over `model`;
+  * MoE expert stacks shard the EXPERT dim over `model` (expert parallelism);
+  * embedding / lm_head shard the vocab-adjacent dim over `model`;
+  * federated client states carry a leading client axis sharded over
+    `FedConfig.client_axes`; remaining dims follow the parameter rule;
+  * activations/batches shard batch over the data-ish axes.
+
+Specs are derived from leaf PATH NAMES via tree_map_with_path, so they stay
+correct for every architecture family without per-arch spec tables.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.config import FedConfig, ModelConfig
+
+# rules: leaf name -> (spec WITHOUT the scan-stack L dim)
+# "out_model": shard last dim over model; "in_model": shard first dim;
+# None: replicate.
+_RULES = {
+    # gqa attention
+    "wq": "out_model", "wk": "out_model", "wv": "out_model", "wo": "in_model",
+    "bq": "vec_model", "bk": "vec_model", "bv": "vec_model",
+    # mla
+    "wq_a": None, "wq_b": "out_model", "wkv_a": None,
+    "wk_b": "out_model", "wv_b": "out_model",
+    # mlp
+    "w1": "out_model", "w3": "out_model", "w2": "in_model",
+    # moe (leading expert dim)
+    "router": None,
+    # rwkv
+    "wr": "out_model", "wg": "out_model",
+    "decay_w1": None, "decay_w2": None, "decay_bias": None,
+    "mu": None, "mu_k": None, "mu_r": None, "bonus_u": "head_model",
+    # ssm
+    "in_x": "out_model", "in_z": "out_model", "w_dt": "out_model",
+    "dt_bias": "vec_model", "w_B": None, "w_C": None,
+    "A_log": "in_model", "D": "vec_model",
+    "mix_attn": None, "mix_ssm": None,
+    # norms / misc
+    "scale": None, "proj": None,
+}
+
+
+def _leaf_rule(path) -> Optional[str]:
+    keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+    name = keys[-1]
+    if name == "embed":
+        return "emb"
+    if name == "lm_head":
+        return "out_model"
+    if "experts" in keys:
+        return "expert"
+    return _RULES.get(name)
+
+
+def _spec_for(rule: Optional[str], ndim: int, model_axis: str) -> P:
+    if rule is None:
+        return P()
+    if rule == "emb":
+        return P(None, model_axis) if ndim == 2 else P()
+    if rule == "out_model":
+        return P(*([None] * (ndim - 1) + [model_axis]))
+    if rule == "in_model":
+        return P(*([model_axis] + [None] * (ndim - 1)))
+    if rule == "vec_model":
+        return P(*([None] * (ndim - 1) + [model_axis]))
+    if rule == "head_model":
+        return P(*([model_axis] + [None] * (ndim - 1)))
+    if rule == "expert":
+        return P(*([model_axis] + [None] * (ndim - 1)))
+    raise ValueError(rule)
+
+
+def param_specs(cfg: ModelConfig, params_shape, model_axis: str = "model"):
+    """Specs matching Transformer.init output (scan-stacked group leaves).
+
+    params_shape: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+
+    def assign(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        stacked = "groups" in keys or ("block" in keys)
+        rule = _leaf_rule(path)
+        ndim = len(leaf.shape)
+        if "groups" in keys:  # leading L scan dim
+            inner = _spec_for(rule, ndim - 1, model_axis)
+            return P(None, *inner)
+        return _spec_for(rule, ndim, model_axis)
+
+    return jax.tree_util.tree_map_with_path(assign, params_shape)
+
+
+def fed_state_specs(fed: FedConfig, cfg: Optional[ModelConfig], state_shape,
+                    model_axis: str = "model"):
+    """Specs for a federated algorithm state: client-stacked leaves get the
+    client axes on dim 0; server params follow param rules; scalars replicate.
+
+    fed.fsdp_axes: client-state inner dims additionally sharded over these
+    axes (first unassigned dim gets them) — FedGiA's per-client (z, pi)
+    copies are the memory floor for giant archs, FSDP is how they fit.
+    fed.replicate_params: drop the model-axis assignment entirely (pure DP
+    within the client; gradient all-reduce once per round)."""
+    client = fed.client_axes if len(fed.client_axes) > 1 else fed.client_axes[0]
+
+    def assign(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        top = keys[0]
+        ndim = len(leaf.shape)
+        if top in ("sigma", "r", "round", "step", "rng"):
+            return P()
+        if top in ("gram_chol",):
+            return P(client, *([None] * (ndim - 1)))
+        param_path = path[1:]
+        rule = _leaf_rule(param_path) if len(param_path) else None
+        if fed.replicate_params:
+            # replicate the trunk, but KEEP the lm_head vocab-sharded:
+            # unsharded logits (B*S x vocab per client) dominate HBM
+            # otherwise (measured +14 GiB/chip on tinyllama train, §Perf H1).
+            # The embed table IS replicated — a vocab-sharded gather lowers
+            # to a one-hot matmul (measured 5x FLOPs blow-up, §Perf H1b).
+            name = (
+                getattr(param_path[-1], "key", getattr(param_path[-1], "name", ""))
+                if param_path else ""
+            )
+            if name != "lm_head":
+                rule = None
+        stacked_client = top in ("z", "pi", "h", "lam", "ci", "xc")
+        scan_stacked = "groups" in keys
+        core_ndim = ndim - (1 if stacked_client else 0) - (1 if scan_stacked else 0)
+        inner = _spec_for(rule, core_ndim, model_axis)
+        dims = list(inner)
+        if stacked_client and fed.fsdp_axes and core_ndim >= 1:
+            # shard the first unassigned inner dim over whichever fsdp axes
+            # this leaf does not already use
+            used = set()
+            for e in dims:
+                for a in (e if isinstance(e, tuple) else (e,)):
+                    if a:
+                        used.add(a)
+            free = tuple(a for a in fed.fsdp_axes if a not in used)
+            if free:
+                for i, e in enumerate(dims):
+                    if e is None:
+                        dims[i] = free if len(free) > 1 else free[0]
+                        break
+        if scan_stacked:
+            dims = [None] + dims
+        if stacked_client:
+            dims = [client] + dims
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(assign, state_shape)
+
+
+def train_batch_specs(fed: FedConfig, batch_shape, mesh_axes: Tuple[str, ...]):
+    """Stacked client batches: client axis over client_axes, per-client batch
+    dim over any remaining data-ish axes."""
+    client = fed.client_axes if len(fed.client_axes) > 1 else fed.client_axes[0]
+    leftover = [
+        a for a in mesh_axes
+        if a not in fed.client_axes and (a != "model" or fed.replicate_params)
+    ]
+    bdim = tuple(leftover) if len(leftover) > 1 else (leftover[0] if leftover else None)
+
+    def assign(path, leaf):
+        ndim = len(leaf.shape)
+        dims = [client] + [None] * (ndim - 1)
+        if ndim >= 2 and bdim is not None:
+            dims[1] = bdim
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(assign, batch_shape)
+
+
+def serve_token_specs(batch: int, data_axes: Tuple[str, ...], shape_ndim: int = 2):
+    """Token batches for serving: batch over data axes (replicated if B=1)."""
+    import math
+
+    total = None
+    if batch > 1:
+        total = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+    return P(total, *([None] * (shape_ndim - 1)))
+
+
+def cache_specs(cfg: ModelConfig, cache_shape, batch: int,
+                data_axes: Tuple[str, ...], model_axis: str = "model",
+                model_size: int = 16):
+    """KV/recurrent caches: (L, B, ...) leaves — batch over data axes (if
+    B > 1), head-ish dims over model (falling back to the head_dim axis when
+    the head count does not divide the model-axis size)."""
+    baxis = None
+    if batch > 1:
+        baxis = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+
+    def head_or_dim(nheads: int, hdim: int):
+        """(head_spec, dim_spec) — shard whichever divides the model axis."""
+        if nheads % model_size == 0:
+            return model_axis, None
+        if hdim % model_size == 0:
+            return None, model_axis
+        return None, None
+
+    def assign(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        name = keys[-1]
+        ndim = len(leaf.shape)
+        if name in ("pos", "slot_pos"):
+            return P(*([None] * ndim))
+        if name in ("k", "v"):  # (L,B,W,Kv,hd)
+            hs, ds = head_or_dim(cfg.num_kv_heads, cfg.head_dim)
+            return P(None, baxis, None, hs, ds)
+        if name in ("ckv", "krope"):  # (L,B,W,r) — latent shared across heads
+            return P(None, baxis, None, None)
+        if name == "wkv":  # (L,B,H,hdk,hdv)
+            hs, ds = head_or_dim(cfg.num_heads, cfg.rwkv_head_size)
+            return P(None, baxis, hs, ds, None)
+        if name in ("shift", "cm_shift"):  # (L,B,d)
+            return P(None, baxis, "model" if cfg.d_model % model_size == 0 else None)
+        if name == "ssm_state":  # (L,B,di,st)
+            return P(
+                None, baxis,
+                model_axis if cfg.d_model % model_size == 0 else None, None,
+            )
+        return P(*([None] * ndim))
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shape)
+
+
+def sanitize_specs(specs, shapes, mesh):
+    """Drop any spec axis whose mesh extent does not divide the array dim —
+    GSPMD requires exact divisibility for explicit in/out shardings."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(spec, sds):
+        dims = list(spec) + [None] * (len(sds.shape) - len(spec))
+        out = []
+        for i, e in enumerate(dims):
+            if e is None:
+                out.append(None)
+                continue
+            axes = e if isinstance(e, tuple) else (e,)
+            prod = 1
+            for a in axes:
+                prod *= sizes[a]
+            out.append(e if sds.shape[i] % prod == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(fix, specs, shapes)

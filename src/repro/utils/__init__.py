@@ -1,0 +1,2 @@
+from repro.utils import pytree
+from repro.utils.logging import get_logger

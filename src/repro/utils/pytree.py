@@ -1,0 +1,96 @@
+"""Pytree arithmetic helpers used by all federated algorithms.
+
+Every federated algorithm in this repo manipulates whole model states
+(parameters, duals, control variates) as pytrees; these helpers keep that
+code readable and fusion-friendly (jnp ops only, no python loops over
+leaves at trace time beyond tree_map).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Pytree = object
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_mul(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.multiply, a, b)
+
+
+def tree_scale(a: Pytree, s) -> Pytree:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x: Pytree, y: Pytree) -> Pytree:
+    """alpha*x + y."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_zeros_like(a: Pytree) -> Pytree:
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_ones_like(a: Pytree) -> Pytree:
+    return jax.tree.map(jnp.ones_like, a)
+
+
+def tree_dot(a: Pytree, b: Pytree) -> jax.Array:
+    leaves = jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b)
+    return jax.tree.reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def tree_sq_norm(a: Pytree) -> jax.Array:
+    return tree_dot(a, a)
+
+
+def tree_norm(a: Pytree) -> jax.Array:
+    return jnp.sqrt(tree_sq_norm(a))
+
+
+def tree_size(a: Pytree) -> int:
+    return sum(x.size for x in jax.tree.leaves(a))
+
+
+def tree_bytes(a: Pytree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(a))
+
+
+def tree_cast(a: Pytree, dtype) -> Pytree:
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_where(pred, a: Pytree, b: Pytree) -> Pytree:
+    """Leaf-wise select; pred is a scalar (or broadcastable) bool array."""
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def tree_mean_over_axis(a: Pytree, axis: int = 0) -> Pytree:
+    return jax.tree.map(lambda x: jnp.mean(x, axis=axis), a)
+
+
+def tree_stack(trees, axis: int = 0) -> Pytree:
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=axis), *trees)
+
+
+def tree_unstack(tree, axis: int = 0):
+    leaves, treedef = jax.tree.flatten(tree)
+    n = leaves[0].shape[axis]
+    return [
+        jax.tree.unflatten(treedef, [jnp.take(l, i, axis=axis) for l in leaves])
+        for i in range(n)
+    ]
+
+
+def tree_allclose(a: Pytree, b: Pytree, rtol=1e-5, atol=1e-6) -> bool:
+    oks = jax.tree.map(
+        lambda x, y: bool(jnp.allclose(x, y, rtol=rtol, atol=atol)), a, b
+    )
+    return all(jax.tree.leaves(oks))

@@ -1,0 +1,15 @@
+# NOTE: no XLA_FLAGS here — tests run on the single real CPU device.
+# Multi-device integration tests spawn subprocesses that set
+# --xla_force_host_platform_device_count BEFORE importing jax.
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

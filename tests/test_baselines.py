@@ -1,0 +1,78 @@
+"""Comparison baselines: each must make progress on the paper's Example V.1
+and FedGiA must use fewer rounds than FedAvg (Table IV's headline)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FedConfig
+from repro.core import make_algorithm
+from repro.data import linreg_noniid
+from repro.models import LeastSquares
+
+M, N, D = 8, 20, 400
+
+
+@pytest.fixture(scope="module")
+def problem():
+    batch = {k: jnp.asarray(v) for k, v in linreg_noniid(0, D, N, M).items()}
+    return LeastSquares(N), batch
+
+
+def rounds_to_tol(problem, algo_name, tol=1e-6, max_rounds=1500, **kw):
+    model, batch = problem
+    fed = FedConfig(algorithm=algo_name, num_clients=M, k0=5, alpha=1.0, **kw)
+    algo = make_algorithm(fed, model.loss, model=model)
+    state = algo.init(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(1),
+                      init_batch=batch)
+    rnd = jax.jit(algo.round)
+    first = last = None
+    for r in range(max_rounds):
+        state, met = rnd(state, batch)
+        if first is None:
+            first = float(met["f_xbar"])
+        last = (float(met["f_xbar"]), float(met["grad_sq_norm"]))
+        if last[1] < tol:
+            return r + 1, first, last
+    return max_rounds, first, last
+
+
+@pytest.mark.parametrize(
+    "algo,kw",
+    [
+        ("fedavg", dict(lr=0.01)),
+        ("fedprox", dict(lr=0.002)),
+        ("fedpd", dict(lr=0.05, fedpd_eta=1.0)),
+        ("scaffold", dict(lr=0.01)),
+    ],
+)
+def test_baseline_decreases_objective(problem, algo, kw):
+    rounds, first, last = rounds_to_tol(problem, algo, tol=1e-6, max_rounds=400, **kw)
+    assert last[0] < first, f"{algo}: no objective decrease {first} -> {last[0]}"
+    assert last[1] < 1e-1, f"{algo}: gradient did not shrink: {last}"
+
+
+def test_fedgia_fewer_rounds_than_fedavg(problem):
+    """Paper Table IV: FedGiA's CR are an order of magnitude below FedAvg's."""
+    r_gia, _, l_gia = rounds_to_tol(
+        problem, "fedgia", tol=1e-8, sigma_t=0.2, h_policy="scalar"
+    )
+    r_avg, _, l_avg = rounds_to_tol(problem, "fedavg", tol=1e-8, lr=0.01)
+    assert l_gia[1] < 1e-8
+    assert r_gia * 5 < r_avg, f"FedGiA {r_gia} rounds vs FedAvg {r_avg}"
+
+
+def test_all_algorithms_agree_on_optimum(problem):
+    """Every algorithm drives f to the same value (paper: identical Obj.)."""
+    model, batch = problem
+    finals = {}
+    for algo_name, kw in [
+        ("fedgia", dict(sigma_t=0.2)),
+        ("fedavg", dict(lr=0.01)),
+        ("scaffold", dict(lr=0.01)),
+    ]:
+        _, _, last = rounds_to_tol(problem, algo_name, tol=1e-9,
+                                   max_rounds=1500, **kw)
+        finals[algo_name] = last[0]
+    vals = list(finals.values())
+    assert max(vals) - min(vals) < 1e-4, finals

@@ -1,0 +1,134 @@
+"""Convergence-theory tests: the paper's Lemma IV.1, Theorems IV.1-IV.4."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FedConfig
+from repro.core import make_algorithm
+from repro.data import linreg_noniid, logreg_data
+from repro.models import LeastSquares, LogisticRegression, NonConvexLogistic
+
+M, N, D = 8, 30, 640
+
+
+def centralized_optimum(batch, m):
+    A = np.asarray(batch["A"]); b = np.asarray(batch["b"]); msk = np.asarray(batch["mask"])
+    rows, w = [], []
+    for i in range(m):
+        di = msk[i].sum()
+        rows.append(A[i][msk[i] > 0])
+        w.append(np.full(int(di), 1.0 / (m * di)))
+    A_, w_ = np.concatenate(rows), np.concatenate(w)
+    b_ = np.concatenate([b[i][msk[i] > 0] for i in range(m)])
+    H = (A_ * w_[:, None]).T @ A_
+    g = (A_ * w_[:, None]).T @ b_
+    x = np.linalg.solve(H, g)
+    f = 0.5 * float(np.sum(w_ * (A_ @ x - b_) ** 2))
+    return x, f
+
+
+def run(model, batch, rounds=400, tol=1e-11, **kw):
+    defaults = dict(algorithm="fedgia", num_clients=M, k0=5, alpha=0.5,
+                    sigma_t=0.2, h_policy="scalar", collapsed=True)
+    defaults.update(kw)
+    fed = FedConfig(**defaults)
+    algo = make_algorithm(fed, model.loss, model=model)
+    state = algo.init(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(7),
+                      init_batch=batch)
+    rnd = jax.jit(algo.round)
+    hist = []
+    for _ in range(rounds):
+        state, met = rnd(state, batch)
+        hist.append((float(met["f_xbar"]), float(met["grad_sq_norm"])))
+        if hist[-1][1] < tol:
+            break
+    return algo, state, hist
+
+
+@pytest.fixture(scope="module")
+def linreg():
+    batch = {k: jnp.asarray(v) for k, v in linreg_noniid(3, D, N, M).items()}
+    return LeastSquares(N), batch
+
+
+def test_converges_to_centralized_optimum(linreg):
+    """Corollary IV.1: strongly-convex f -> x̄ -> unique optimum x*."""
+    model, batch = linreg
+    x_star, f_star = centralized_optimum(batch, M)
+    algo, state, hist = run(model, batch)
+    assert hist[-1][1] < 1e-10, f"no stationarity: {hist[-1]}"
+    np.testing.assert_allclose(np.asarray(state["x"]["x"]), x_star, rtol=1e-3, atol=1e-4)
+    assert abs(hist[-1][0] - f_star) < 1e-6
+
+
+def test_lagrangian_descent(linreg):
+    """Lemma IV.1: with sigma >= 6r/m and H=Theta, L(Z^k) is non-increasing."""
+    model, batch = linreg
+    fed = FedConfig(algorithm="fedgia", num_clients=M, k0=5, alpha=0.5,
+                    sigma_t=6.0, h_policy="scalar", collapsed=True)
+    algo = make_algorithm(fed, model.loss, model=model)
+    state = algo.init(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(7),
+                      init_batch=batch)
+    rnd = jax.jit(algo.round)
+    lag = jax.jit(algo.lagrangian)
+    prev = float(lag(state, batch))
+    for _ in range(30):
+        state, _ = rnd(state, batch)
+        cur = float(lag(state, batch))
+        assert cur <= prev + 1e-6, f"Lagrangian increased: {prev} -> {cur}"
+        prev = cur
+
+
+def test_theorem_iv3_rate_bound(linreg):
+    """min_j |grad f(x^tau_j)|^2 <= 100 m sigma k0 (L(Z^0) - f*) / k."""
+    model, batch = linreg
+    _, f_star = centralized_optimum(batch, M)
+    k0 = 5
+    fed = FedConfig(algorithm="fedgia", num_clients=M, k0=k0, alpha=0.5,
+                    sigma_t=6.0, h_policy="scalar", collapsed=True)
+    algo = make_algorithm(fed, model.loss, model=model)
+    state = algo.init(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(7),
+                      init_batch=batch)
+    L0 = float(algo.lagrangian(state, batch))
+    sigma = float(state["sigma"])
+    rnd = jax.jit(algo.round)
+    best = np.inf
+    for t in range(40):
+        state, met = rnd(state, batch)
+        best = min(best, float(met["grad_sq_norm"]))
+        k = (t + 1) * k0
+        bound = 100 * M * sigma * k0 * max(L0 - f_star, 0.0) / k
+        assert best <= bound + 1e-8, f"rate bound violated at k={k}"
+
+
+def test_linear_rate_strongly_convex(linreg):
+    """Theorem IV.4 (theta=1/2): geometric decay of f(x̄) - f*."""
+    model, batch = linreg
+    _, f_star = centralized_optimum(batch, M)
+    _, _, hist = run(model, batch, rounds=100, tol=0.0, alpha=1.0)
+    gaps = np.array([max(f - f_star, 1e-16) for f, _ in hist])
+    # fit log-gap slope over the first decades; must be clearly negative
+    idx = np.flatnonzero(gaps > 1e-12)[:40]
+    slope = np.polyfit(idx, np.log(gaps[idx]), 1)[0]
+    assert slope < -0.05, f"no linear decay, slope={slope}"
+
+
+def test_logreg_and_nonconvex_converge():
+    """Theorem IV.2: stationarity for the convex AND non-convex examples."""
+    batch = {k: jnp.asarray(v) for k, v in logreg_data(1, D, N, M).items()}
+    for model in (LogisticRegression(N), NonConvexLogistic(N)):
+        algo, state, hist = run(model, batch, rounds=600, tol=1e-9, sigma_t=0.3)
+        assert hist[-1][1] < 1e-8, f"{type(model).__name__}: {hist[-1]}"
+
+
+def test_effect_of_k0_monotone_iterations(linreg):
+    """Fig. 1: larger k0 needs >= as many ITERATIONS (k = rounds*k0) but
+    FEWER or equal communication rounds to a fixed tolerance."""
+    model, batch = linreg
+    rounds_used = {}
+    for k0 in (1, 5, 15):
+        _, _, hist = run(model, batch, rounds=600, tol=1e-9, k0=k0)
+        rounds_used[k0] = len(hist)
+    assert rounds_used[5] <= rounds_used[1]
+    assert rounds_used[15] <= rounds_used[1]

@@ -1,0 +1,134 @@
+"""Unit tests for the FedGiA algorithm core (paper Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FedConfig
+from repro.core import FedGiA, make_algorithm
+from repro.core.selection import num_selected, selection_mask
+from repro.data import linreg_noniid
+from repro.models import LeastSquares
+from repro.utils import pytree as pt
+
+M, N, D = 8, 20, 400
+
+
+@pytest.fixture(scope="module")
+def problem():
+    batch = {k: jnp.asarray(v) for k, v in linreg_noniid(0, D, N, M).items()}
+    model = LeastSquares(N)
+    return model, batch
+
+
+def make_algo(problem, **kw):
+    model, batch = problem
+    defaults = dict(
+        algorithm="fedgia", num_clients=M, k0=5, alpha=0.5, sigma_t=0.2,
+        h_policy="scalar", collapsed=True,
+    )
+    defaults.update(kw)
+    fed = FedConfig(**defaults)
+    algo = make_algorithm(fed, model.loss, model=model)
+    state = algo.init(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(1),
+                      init_batch=batch)
+    return algo, state
+
+
+def test_collapsed_equals_unrolled(problem):
+    """DESIGN §6 B1: the closed-form round is EXACTLY the k0-step iteration."""
+    model, batch = problem
+    for k0 in (1, 3, 10):
+        algo_c, s_c = make_algo(problem, collapsed=True, k0=k0)
+        algo_u, s_u = make_algo(problem, collapsed=False, k0=k0)
+        for _ in range(3):
+            s_c, _ = algo_c.round(s_c, batch)
+            s_u, _ = algo_u.round(s_u, batch)
+        np.testing.assert_allclose(s_c["z"]["x"], s_u["z"]["x"], rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(s_c["pi"]["x"], s_u["pi"]["x"], rtol=1e-5, atol=1e-6)
+
+
+def test_gd_branch_equations(problem):
+    """eqs (15)-(17): non-selected clients get x=x̄, pi=-ḡ, z=x̄-ḡ/σ."""
+    model, batch = problem
+    algo, state = make_algo(problem, alpha=1e-9)  # select 1, rest GD
+    xbar = pt.tree_mean_over_axis(state["z"], axis=0)
+    grads = jax.vmap(jax.grad(lambda p, b: model.loss(p, b)[0]), (None, 0))(
+        xbar, batch
+    )
+    gbar = pt.tree_scale(grads, 1.0 / M)
+    new_state, _ = algo.round(state, batch)
+    sigma = float(state["sigma"])
+    # at least M-1 clients took the GD branch
+    gd_pi = -gbar["x"]
+    matches = np.isclose(
+        np.asarray(new_state["pi"]["x"]), np.asarray(gd_pi), rtol=1e-5, atol=1e-7
+    ).all(axis=1)
+    assert matches.sum() >= M - 1
+    gd_z = np.asarray(xbar["x"])[None] - np.asarray(gbar["x"]) / sigma
+    z_match = np.isclose(
+        np.asarray(new_state["z"]["x"]), gd_z, rtol=1e-5, atol=1e-7
+    ).all(axis=1)
+    assert z_match.sum() >= M - 1
+
+
+def test_aggregation_is_mean_of_z(problem):
+    model, batch = problem
+    algo, state = make_algo(problem)
+    new_state, _ = algo.round(state, batch)
+    xbar = np.asarray(pt.tree_mean_over_axis(state["z"], axis=0)["x"])
+    np.testing.assert_allclose(np.asarray(new_state["x"]["x"]), xbar, rtol=1e-6)
+
+
+def test_client_params_derivation(problem):
+    """x_i = z_i - pi_i/sigma (eq. 14 inverted) — B3: x never stored."""
+    model, batch = problem
+    algo, state = make_algo(problem)
+    state, _ = algo.round(state, batch)
+    xc = algo.client_params(state)
+    recon = pt.tree_axpy(1.0 / state["sigma"], state["pi"], xc)
+    np.testing.assert_allclose(
+        np.asarray(recon["x"]), np.asarray(state["z"]["x"]), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_sigma_satisfies_theory(problem):
+    """init with sigma_t >= 6 gives the guaranteed regime sigma >= 6r/m."""
+    algo, state = make_algo(problem, sigma_t=6.0)
+    assert float(state["sigma"]) >= 6.0 * float(state["r"]) / M - 1e-6
+
+
+def test_selection_mask_counts():
+    for alpha in (0.1, 0.5, 1.0):
+        mask = selection_mask(jax.random.PRNGKey(0), 16, alpha)
+        assert int(mask.sum()) == num_selected(16, alpha)
+    # different rounds give different subsets
+    m1 = selection_mask(jax.random.PRNGKey(1), 64, 0.5)
+    m2 = selection_mask(jax.random.PRNGKey(2), 64, 0.5)
+    assert (np.asarray(m1) != np.asarray(m2)).any()
+
+
+def test_gram_policy_matches_scalar_limit(problem):
+    """With H = Gram and with H = rI the fixed point is the same (both are
+    valid inexact-ADMM preconditioners): both converge to the same optimum."""
+    model, batch = problem
+    results = {}
+    for hp in ("scalar", "gram"):
+        algo, state = make_algo(problem, h_policy=hp, alpha=1.0,
+                                collapsed=(hp == "scalar"))
+        rnd = jax.jit(algo.round)
+        for _ in range(300):
+            state, met = rnd(state, batch)
+        results[hp] = np.asarray(state["x"]["x"])
+        assert float(met["grad_sq_norm"]) < 1e-8
+    np.testing.assert_allclose(results["scalar"], results["gram"], rtol=1e-3, atol=1e-4)
+
+
+def test_metrics_cr_accounting(problem):
+    model, batch = problem
+    algo, state = make_algo(problem)
+    state, met = algo.round(state, batch)
+    assert float(met["cr"]) == 2.0  # 2 communications (up+down) per round
+    state, met = algo.round(state, batch)
+    assert float(met["cr"]) == 4.0
+    assert float(met["local_grad_evals"]) == 1.0  # C2: ONE grad per round

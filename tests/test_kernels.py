@@ -1,0 +1,120 @@
+"""Per-kernel validation: Pallas (interpret=True) vs the pure-jnp oracles,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fedgia_update import fedgia_update, fedgia_update_ref
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.rwkv6_scan import rwkv6_scan, rwkv6_scan_ref
+
+RNG = np.random.default_rng(42)
+
+
+# ------------------------------------------------------------- fedgia_update
+@pytest.mark.parametrize("n", [64, 128, 1000, 40000])
+@pytest.mark.parametrize("k0", [1, 4, 9])
+@pytest.mark.parametrize("sel", [True, False])
+def test_fedgia_update_matches_unrolled(n, k0, sel):
+    xbar = jnp.asarray(RNG.standard_normal(n), jnp.float32)
+    g = jnp.asarray(RNG.standard_normal(n), jnp.float32)
+    pi = jnp.asarray(RNG.standard_normal(n), jnp.float32)
+    h = jnp.asarray(RNG.uniform(0.05, 3.0, n), jnp.float32)
+    sigma = jnp.float32(0.7)
+    ref = fedgia_update_ref(xbar, g, pi, h, jnp.asarray(sel), sigma, 8, k0=k0)
+    out = fedgia_update(xbar, g, pi, h, sel, sigma, 8, k0=k0, interpret=True)
+    for a, b, name in zip(out, ref, ("x", "pi", "z")):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5,
+            err_msg=f"{name} mismatch n={n} k0={k0} sel={sel}",
+        )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedgia_update_dtypes(dtype):
+    n = 512
+    args = [jnp.asarray(RNG.standard_normal(n), dtype) for _ in range(3)]
+    h = jnp.asarray(RNG.uniform(0.1, 1.0, n), dtype)
+    sigma = jnp.float32(0.5)
+    ref = fedgia_update_ref(*args, h, jnp.asarray(True), sigma, 4, k0=5)
+    out = fedgia_update(*args, h, True, sigma, 4, k0=5, interpret=True)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    for a, b in zip(out, ref):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=tol, atol=tol
+        )
+
+
+# ------------------------------------------------------------ flash_attention
+@pytest.mark.parametrize(
+    "B,H,Kv,S,hd,window,bq,bk",
+    [
+        (2, 4, 4, 128, 64, None, 64, 64),
+        (1, 8, 2, 200, 64, None, 64, 64),   # GQA, unaligned seq
+        (2, 4, 1, 192, 128, None, 128, 64), # MQA
+        (1, 4, 4, 256, 64, 64, 64, 64),     # sliding window
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, Kv, S, hd, window, bq, bk, dtype):
+    q = jnp.asarray(RNG.standard_normal((B, H, S, hd)), dtype)
+    k = jnp.asarray(RNG.standard_normal((B, Kv, S, hd)), dtype)
+    v = jnp.asarray(RNG.standard_normal((B, Kv, S, hd)), dtype)
+    ref = flash_attention_ref(q, k, v, window=window)
+    out = flash_attention(q, k, v, window=window, interpret=True,
+                          block_q=bq, block_k=bk)
+    tol = 2e-5 if dtype == jnp.float32 else 2.5e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_flash_attention_matches_model_blocked_softmax():
+    """The kernel and models/attention.blocked_attention agree (same oracle)."""
+    from repro.models.attention import blocked_attention
+
+    B, H, Kv, S, hd = 1, 4, 2, 96, 32
+    q = jnp.asarray(RNG.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, Kv, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, Kv, hd)), jnp.float32)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    ref = blocked_attention(q, k, v, pos, pos, block_k=32)
+    out = flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        interpret=True, block_q=32, block_k=32,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------- rwkv6_scan
+@pytest.mark.parametrize(
+    "B,H,T,hd,bt",
+    [(2, 3, 64, 32, 32), (1, 4, 100, 64, 64), (2, 2, 128, 64, 16)],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_scan_sweep(B, H, T, hd, bt, dtype):
+    r = jnp.asarray(RNG.standard_normal((B, H, T, hd)) * 0.5, dtype)
+    k = jnp.asarray(RNG.standard_normal((B, H, T, hd)) * 0.5, dtype)
+    v = jnp.asarray(RNG.standard_normal((B, H, T, hd)) * 0.5, dtype)
+    w = jnp.asarray(RNG.uniform(0.85, 0.999, (B, H, T, hd)), jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((H, hd)) * 0.5, jnp.float32)
+    yr, sr = rwkv6_scan_ref(r, k, v, w, u)
+    yk, sk = rwkv6_scan(r, k, v, w, u, interpret=True, block_t=bt)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(yk, np.float32), np.asarray(yr, np.float32), rtol=tol, atol=tol
+    )
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-4, atol=1e-3)
+
+
+def test_rwkv6_state_carry_is_chunk_invariant():
+    """Final state must not depend on the chunk size."""
+    B, H, T, hd = 1, 2, 96, 32
+    r, k, v = (jnp.asarray(RNG.standard_normal((B, H, T, hd)) * 0.3, jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(RNG.uniform(0.9, 0.999, (B, H, T, hd)), jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((H, hd)) * 0.3, jnp.float32)
+    _, s16 = rwkv6_scan(r, k, v, w, u, interpret=True, block_t=16)
+    _, s48 = rwkv6_scan(r, k, v, w, u, interpret=True, block_t=48)
+    np.testing.assert_allclose(np.asarray(s16), np.asarray(s48), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,110 @@
+"""Serving-path correctness: prefill+decode must reproduce the train-mode
+forward (teacher forcing), incl. the sliding-window ring-buffer cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHITECTURES
+from repro.models import Transformer
+from repro.models.attention import AttnMode
+
+B = 2
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "qwen1.5-0.5b", "rwkv6-3b",
+                                  "hymba-1.5b", "deepseek-v3-671b"])
+def test_decode_matches_forward(arch):
+    """logits from [prefill(t<8) + decode steps 8..11] == full forward."""
+    cfg = ARCHITECTURES[arch].reduced()
+    model = Transformer(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    T = 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab_size)
+
+    full_logits, _, _ = model.forward(params, tokens=toks)
+
+    last, cache = model.prefill(params, tokens=toks[:, :8], cache_len=T)
+    np.testing.assert_allclose(
+        np.asarray(last, np.float32),
+        np.asarray(full_logits[:, 7], np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+    # bf16 params: the decode path re-associates reductions (MLA absorbed
+    # form, cache slot order), so logits differ by a few bf16 ulps.
+    for t in range(8, T):
+        last, cache = model.decode_step(
+            params, cache, toks[:, t : t + 1], jnp.asarray(t, jnp.int32)
+        )
+        np.testing.assert_allclose(
+            np.asarray(last, np.float32),
+            np.asarray(full_logits[:, t], np.float32),
+            rtol=4e-2, atol=8e-2,
+            err_msg=f"{arch}: decode step {t} diverges from forward",
+        )
+
+
+def test_sliding_window_ring_buffer():
+    """Ring-buffer decode (cache_len=W < T) == full-cache decode with the
+    same window mask — the long_500k mechanism."""
+    cfg = ARCHITECTURES["tinyllama-1.1b"].reduced()
+    W = cfg.sliding_window  # 64 in reduced config
+    model = Transformer(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    T = W + 24  # force wrap-around
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab_size)
+
+    # reference: full cache, window-masked attention
+    _, cache_full = model.prefill(params, tokens=toks[:, :W], cache_len=T, window=W)
+    # ring buffer: cache of exactly W slots
+    _, cache_ring = model.prefill(params, tokens=toks[:, :W], cache_len=W, window=W)
+
+    for t in range(W, T):
+        tok = toks[:, t : t + 1]
+        pos = jnp.asarray(t, jnp.int32)
+        lf, cache_full = model.decode_step(params, cache_full, tok, pos, window=W)
+        lr, cache_ring = model.decode_step(params, cache_ring, tok, pos, window=W)
+        # ring slot order permutes the bf16 reduction order: few-ulp noise
+        np.testing.assert_allclose(
+            np.asarray(lr, np.float32), np.asarray(lf, np.float32),
+            rtol=4e-2, atol=8e-2, err_msg=f"ring buffer diverges at t={t}",
+        )
+
+
+def test_prefill_wrap_ring_buffer():
+    """Prefilling more tokens than the ring size keeps only the last W —
+    equivalent to prefilling the suffix (for window-limited attention)."""
+    cfg = ARCHITECTURES["tinyllama-1.1b"].reduced()
+    W = cfg.sliding_window
+    model = Transformer(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    T = W + 16
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, T), 0, cfg.vocab_size)
+    last_wrap, cache = model.prefill(params, tokens=toks, cache_len=W, window=W)
+    full, _, _ = model.forward(
+        params, tokens=toks, mode=AttnMode("train", window=W)
+    )
+    np.testing.assert_allclose(
+        np.asarray(last_wrap, np.float32), np.asarray(full[:, -1], np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_fp8_cache_decode_close_to_bf16():
+    """Quantized (fp8_e4m3) KV cache: decode logits stay close to the
+    bf16-cache reference (§Perf H4)."""
+    cfg = ARCHITECTURES["tinyllama-1.1b"].reduced()
+    model = Transformer(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    T = 16
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, T), 0, cfg.vocab_size)
+    _, c16 = model.prefill(params, tokens=toks[:, :8], cache_len=T)
+    _, c8 = model.prefill(params, tokens=toks[:, :8], cache_len=T,
+                          cache_dtype=jnp.float8_e4m3fn)
+    for t in range(8, T):
+        tok, pos = toks[:, t : t + 1], jnp.asarray(t, jnp.int32)
+        l16, c16 = model.decode_step(params, c16, tok, pos)
+        l8, c8 = model.decode_step(params, c8, tok, pos)
+        err = jnp.abs(l8.astype(jnp.float32) - l16.astype(jnp.float32)).max()
+        scale = jnp.abs(l16.astype(jnp.float32)).max()
+        assert float(err) < 0.15 * float(scale) + 0.5, f"t={t}: fp8 err {err}"

@@ -1,0 +1,124 @@
+"""Distribution correctness: a sharded FedGiA round on a (fake) 8-device
+mesh must produce numerically identical results to the single-device run,
+and the spec factories must produce divisibility-valid shardings."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from jax.sharding import PartitionSpec as P
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_MULTIDEV_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.config import FedConfig
+    from repro.core import make_algorithm
+    from repro.data import linreg_noniid
+    from repro.models import LeastSquares
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding import fed_state_specs, train_batch_specs, sanitize_specs
+
+    m, n, d = 4, 24, 320
+    batch = {k: jnp.asarray(v) for k, v in linreg_noniid(0, d, n, m).items()}
+    model = LeastSquares(n)
+    fed = FedConfig(algorithm="fedgia", num_clients=m, k0=5, alpha=1.0,
+                    sigma_t=0.3, h_policy="scalar", client_axes=("data",))
+    algo = make_algorithm(fed, model.loss, model=model)
+    state0 = algo.init(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(1),
+                       init_batch=batch)
+
+    # single-device reference
+    ref_state = state0
+    for _ in range(5):
+        ref_state, ref_met = algo.round(ref_state, batch)
+
+    # sharded run on (data=4, model=2)
+    mesh = make_host_mesh(model=2, data=4)
+    sspec = sanitize_specs(fed_state_specs(fed, None, jax.eval_shape(lambda: state0)),
+                           jax.eval_shape(lambda: state0), mesh)
+    bspec = sanitize_specs(
+        train_batch_specs(fed, jax.eval_shape(lambda: batch), mesh.axis_names),
+        jax.eval_shape(lambda: batch), mesh)
+    shard = lambda sp: jax.tree.map(lambda s: NamedSharding(mesh, s), sp)
+    with jax.set_mesh(mesh):
+        state = jax.device_put(state0, shard(sspec))
+        b = jax.device_put(batch, shard(bspec))
+        step = jax.jit(algo.round, in_shardings=(shard(sspec), shard(bspec)),
+                       out_shardings=None)
+        for _ in range(5):
+            state, met = step(state, b)
+    np.testing.assert_allclose(np.asarray(state["x"]["x"]),
+                               np.asarray(ref_state["x"]["x"]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(met["f_xbar"]), float(ref_met["f_xbar"]),
+                               rtol=1e-5)
+    print("MULTIDEV_OK")
+    """
+)
+
+
+def test_sharded_round_matches_single_device():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _MULTIDEV_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=600,
+    )
+    assert "MULTIDEV_OK" in out.stdout, out.stdout + out.stderr
+
+
+def test_sanitize_drops_nondivisible_axes():
+    from repro.sharding import sanitize_specs
+
+    if jax.device_count() < 1:
+        pytest.skip("no devices")
+    mesh = jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    # fake a 16-wide model axis via explicit sizes by monkeypatching is
+    # overkill: directly test the divisibility logic
+    import jax.numpy as jnp
+
+    specs = {"a": P(None, "model"), "b": P("model")}
+    shapes = {
+        "a": jax.ShapeDtypeStruct((4, 40), jnp.float32),
+        "b": jax.ShapeDtypeStruct((7,), jnp.float32),
+    }
+
+    class FakeMesh:
+        axis_names = ("model",)
+
+        class devices:
+            shape = (16,)
+
+    fixed = sanitize_specs(specs, shapes, FakeMesh())
+    assert fixed["a"] == P(None, None)  # 40 % 16 != 0 -> dropped
+    assert fixed["b"] == P(None)
+
+
+def test_param_specs_shard_big_leaves():
+    """Spec factory: big matmul weights get a model-axis assignment."""
+    import jax.numpy as jnp
+
+    from repro.configs import ARCHITECTURES
+    from repro.models import Transformer
+    from repro.sharding import param_specs
+
+    cfg = ARCHITECTURES["tinyllama-1.1b"]
+    model = Transformer(cfg)
+    sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = param_specs(cfg, sds)
+    flat = jax.tree_util.tree_flatten_with_path((specs, sds))
+    wq_spec = specs["groups"]["dense"]["attn"]["wq"]
+    assert "model" in str(wq_spec)
+    w2_spec = specs["groups"]["dense"]["mlp"]["w2"]
+    assert w2_spec[1] == "model"  # input dim sharded (scan dim first)
+    assert specs["final_norm"]["scale"] == P()
