@@ -1,15 +1,17 @@
 """Shared benchmark harness: runs a federated algorithm to the paper's
-stopping rule (eq. 35) and reports Obj / CR / wall time like Table IV."""
-from __future__ import annotations
+stopping rule (eq. 35) and reports Obj / CR / wall time like Table IV.
 
-import time
+All runs go through the scan-compiled round engine (core/engine.py) with
+the stopping rule evaluated on device; wall times exclude compilation
+(the engine pre-compiles its chunks, matching the old warm-up convention).
+"""
+from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.config import FedConfig
-from repro.core import make_algorithm
+from repro.core import make_algorithm, run_rounds
 from repro.data import linreg_noniid, logreg_data
 from repro.models import LeastSquares, LogisticRegression, NonConvexLogistic
 
@@ -52,7 +54,8 @@ ALGO_HPARAMS = {
 
 
 def run_algorithm(algo_key: str, problem: str, k0: int, seed: int = 0,
-                  max_rounds: int = MAX_ROUNDS, collect_history: bool = False):
+                  max_rounds: int = MAX_ROUNDS, collect_history: bool = False,
+                  scan: bool = True):
     model, batch, tol = make_problem(problem, seed)
     hp = dict(ALGO_HPARAMS[algo_key])
     name = "fedgia" if algo_key.startswith("fedgia") else algo_key
@@ -62,31 +65,21 @@ def run_algorithm(algo_key: str, problem: str, k0: int, seed: int = 0,
     algo = make_algorithm(fed, model.loss, model=model)
     state = algo.init(model.init(jax.random.PRNGKey(seed)),
                       jax.random.PRNGKey(seed + 1), init_batch=batch)
-    rnd = jax.jit(algo.round)
-    # warm-up compile outside the timed region
-    s_w, m_w = rnd(state, batch)
-    jax.block_until_ready(m_w["f_xbar"])
-
-    hist = []
-    t0 = time.time()
-    state_c = state
-    for r in range(max_rounds):
-        state_c, met = rnd(state_c, batch)
-        err = float(met["grad_sq_norm"])
-        if collect_history:
-            hist.append((float(met["f_xbar"]), err))
-        if err < tol:
-            break
-    wall = time.time() - t0
+    res = run_rounds(algo, state, batch, max_rounds, tol=tol, scan=scan)
+    hist = (
+        list(zip(res.history["f_xbar"].tolist(),
+                 res.history["grad_sq_norm"].tolist()))
+        if collect_history else []
+    )
     return {
         "algo": algo_key,
         "problem": problem,
         "k0": k0,
-        "obj": float(met["f_xbar"]),
-        "err": err,
-        "rounds": r + 1,
-        "cr": 2 * (r + 1),
-        "time_s": wall,
-        "converged": err < tol,
+        "obj": float(res.history["f_xbar"][-1]),
+        "err": float(res.history["grad_sq_norm"][-1]),
+        "rounds": res.rounds_run,
+        "cr": 2 * res.rounds_run,
+        "time_s": res.wall_s,
+        "converged": res.stopped_early,
         "history": hist,
     }

@@ -2,23 +2,17 @@
 for k0 > 5; FedGiA_D time roughly flat in alpha."""
 from __future__ import annotations
 
-import dataclasses
-
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from benchmarks.common import ALGO_HPARAMS, M_CLIENTS, make_problem
+from benchmarks.common import M_CLIENTS, make_problem
 from repro.config import FedConfig
-from repro.core import make_algorithm
+from repro.core import make_algorithm, run_rounds
 
 ALPHAS = [0.1, 0.25, 0.5, 0.75, 1.0]
 K0 = 10
 
 
 def run():
-    import time
-
     rows = []
     model, batch, tol = make_problem("linreg", 0)
     for alpha in ALPHAS:
@@ -27,16 +21,10 @@ def run():
         algo = make_algorithm(fed, model.loss, model=model)
         state = algo.init(model.init(jax.random.PRNGKey(0)),
                           jax.random.PRNGKey(1), init_batch=batch)
-        rnd = jax.jit(algo.round)
-        s, m = rnd(state, batch); jax.block_until_ready(m["f_xbar"])
-        t0 = time.time()
-        for r in range(500):
-            state, met = rnd(state, batch)
-            if float(met["grad_sq_norm"]) < tol:
-                break
-        rows.append({"alpha": alpha, "cr": 2 * (r + 1),
-                     "time_s": time.time() - t0,
-                     "obj": float(met["f_xbar"])})
+        res = run_rounds(algo, state, batch, 500, tol=tol)
+        rows.append({"alpha": alpha, "cr": 2 * res.rounds_run,
+                     "time_s": res.wall_s,
+                     "obj": float(res.history["f_xbar"][-1])})
     return rows
 
 

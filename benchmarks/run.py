@@ -4,6 +4,7 @@
   fig1_convergence — paper Fig. 1 (k0 effect on iterations-to-converge)
   fig2_k0          — paper Fig. 2 (k0 effect on CR and wall time)
   fig3_alpha       — paper Fig. 3 (selection-fraction effect)
+  engine           — scan-compiled round engine vs per-round dispatch
   kernels_bench    — collapsed-vs-unrolled round + FedGiA-vs-FedAvg cost
   roofline         — §Roofline table from the dry-run artifacts
 
@@ -16,14 +17,15 @@ import argparse
 import sys
 import time
 
-from benchmarks import fig1_convergence, fig2_k0, fig3_alpha, kernels_bench
-from benchmarks import roofline, table4
+from benchmarks import engine_bench, fig1_convergence, fig2_k0, fig3_alpha
+from benchmarks import kernels_bench, roofline, table4
 
 SECTIONS = {
     "table4": table4.main,
     "fig1": fig1_convergence.main,
     "fig2": fig2_k0.main,
     "fig3": fig3_alpha.main,
+    "engine": engine_bench.main,
     "kernels": kernels_bench.main,
     "roofline": roofline.main,
 }

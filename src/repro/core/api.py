@@ -11,7 +11,8 @@ that axis, which makes the SAME implementation work
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Protocol, Tuple
+import contextlib
+from typing import Any, Callable, Dict, Optional, Protocol, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,10 +22,100 @@ LossFn = Callable[[Any, Any], Tuple[jax.Array, Dict[str, jax.Array]]]
 
 class FederatedAlgorithm(Protocol):
     name: str
+    # top-level state keys whose leaves carry the leading client axis —
+    # the engine shards exactly these (plus the batch) over the mesh.
+    client_state_keys: Tuple[str, ...]
 
     def init(self, params0, rng, init_batch=None) -> Dict[str, Any]: ...
 
     def round(self, state, batch) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]: ...
+
+
+# --------------------------------------------------------------------------
+# Client-axis context: when the engine runs a round inside `shard_map` with
+# the leading client axis split over a mesh axis, every cross-client
+# reduction needs a collective. Algorithms express those reductions through
+# the helpers below, which are plain single-device ops by default and turn
+# into `psum`/`pmax` over the mapped axis inside the engine's sharded round.
+# The context is a trace-time constant (set around tracing, not execution),
+# so a module-level slot is sufficient.
+# --------------------------------------------------------------------------
+_CLIENT_AXIS: Optional[Tuple[str, int]] = None  # (mesh axis name, num shards)
+
+
+@contextlib.contextmanager
+def client_sharding(axis_name: str, num_shards: int):
+    """Trace `round` bodies with cross-client reductions mapped to `axis_name`."""
+    global _CLIENT_AXIS
+    prev = _CLIENT_AXIS
+    _CLIENT_AXIS = (axis_name, num_shards)
+    try:
+        yield
+    finally:
+        _CLIENT_AXIS = prev
+
+
+def client_axis() -> Optional[str]:
+    return _CLIENT_AXIS[0] if _CLIENT_AXIS is not None else None
+
+
+def local_client_count(m: int) -> int:
+    """Clients held by THIS shard (== m unsharded)."""
+    if _CLIENT_AXIS is None:
+        return m
+    axis, shards = _CLIENT_AXIS
+    assert m % shards == 0, f"num_clients={m} not divisible by {shards} shards"
+    return m // shards
+
+
+def client_mean(tree, axis: int = 0):
+    """Mean over the (possibly sharded) leading client axis of a pytree.
+
+    This is eq. (11)'s aggregation: under sharding it lowers to the round's
+    ONE model-size all-reduce (`psum` of the local means).
+    """
+    local = jax.tree.map(lambda x: jnp.mean(x, axis=axis), tree)
+    if _CLIENT_AXIS is not None:
+        name = _CLIENT_AXIS[0]
+        local = jax.tree.map(lambda x: jax.lax.pmean(x, name), local)
+    return local
+
+
+def client_scalar_mean(x: jax.Array) -> jax.Array:
+    """Mean of a per-client (m_local,) scalar array over ALL clients."""
+    local = jnp.mean(x)
+    if _CLIENT_AXIS is not None:
+        local = jax.lax.pmean(local, _CLIENT_AXIS[0])
+    return local
+
+
+def client_scalar_sum(x: jax.Array) -> jax.Array:
+    """Sum of a per-client scalar array over ALL clients."""
+    local = jnp.sum(x)
+    if _CLIENT_AXIS is not None:
+        local = jax.lax.psum(local, _CLIENT_AXIS[0])
+    return local
+
+
+def client_scalar_max(x: jax.Array) -> jax.Array:
+    """Max of a scalar over all client shards (no-op unsharded)."""
+    if _CLIENT_AXIS is not None:
+        x = jax.lax.pmax(x, _CLIENT_AXIS[0])
+    return x
+
+
+def local_client_slice(arr: jax.Array) -> jax.Array:
+    """Slice this shard's rows out of a globally-computed (m, ...) array.
+
+    Used for the selection mask: every shard derives the full mask from the
+    (replicated) round rng, then keeps its own contiguous block of clients.
+    """
+    if _CLIENT_AXIS is None:
+        return arr
+    axis, shards = _CLIENT_AXIS
+    m_local = arr.shape[0] // shards
+    idx = jax.lax.axis_index(axis)
+    return jax.lax.dynamic_slice_in_dim(arr, idx * m_local, m_local, axis=0)
 
 
 def broadcast_clients(tree, m: int):

@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import api
 from repro.core.api import broadcast_clients, per_client_value_and_grad
 from repro.utils import pytree as pt
 
@@ -19,9 +20,11 @@ def lr_schedule(a, k):
 
 
 def round_metrics(losses, grads, round_idx):
-    gmean = pt.tree_mean_over_axis(grads, axis=0)
+    # cross-client reductions go through the api helpers so the same
+    # metrics are exact when the engine shards the client axis.
+    gmean = api.client_mean(grads)
     return {
-        "f_xbar": jnp.mean(losses),
+        "f_xbar": api.client_scalar_mean(losses),
         "grad_sq_norm": pt.tree_sq_norm(gmean),
         "cr": 2.0 * (round_idx + 1).astype(jnp.float32),
     }

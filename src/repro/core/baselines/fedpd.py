@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import FedConfig
+from repro.core import api
 from repro.core.api import LossFn, broadcast_clients
 from repro.core.baselines.common import lr_schedule, round_metrics
 from repro.utils import pytree as pt
@@ -21,6 +22,7 @@ from repro.utils import pytree as pt
 
 class FedPD:
     name = "fedpd"
+    client_state_keys = ("lam",)
 
     def __init__(self, fed: FedConfig, loss_fn: LossFn, model=None):
         self.fed = fed
@@ -41,7 +43,7 @@ class FedPD:
 
     def round(self, state, batch):
         fed = self.fed
-        m = fed.num_clients
+        m = api.local_client_count(fed.num_clients)
         eta = fed.fedpd_eta
         anchors = broadcast_clients(state["x"], m)
 
@@ -85,7 +87,7 @@ class FedPD:
         (anchors_new, lam_new, (losses0, grads0)), _ = jax.lax.scan(
             local_step, (anchors, state["lam"], first0), jnp.arange(fed.k0)
         )
-        x_new = pt.tree_mean_over_axis(anchors_new, axis=0)
+        x_new = api.client_mean(anchors_new)
 
         new_state = dict(state)
         new_state.update(

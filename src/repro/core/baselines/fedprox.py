@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import FedConfig
+from repro.core import api
 from repro.core.api import LossFn, broadcast_clients
 from repro.core.baselines.common import lr_schedule, round_metrics
 from repro.utils import pytree as pt
@@ -14,6 +15,7 @@ from repro.utils import pytree as pt
 
 class FedProx:
     name = "fedprox"
+    client_state_keys = ()
 
     def __init__(self, fed: FedConfig, loss_fn: LossFn, model=None):
         self.fed = fed
@@ -31,7 +33,7 @@ class FedProx:
 
     def round(self, state, batch):
         fed = self.fed
-        m = fed.num_clients
+        m = api.local_client_count(fed.num_clients)
         xbar = state["x"]
         xc = broadcast_clients(xbar, m)
 
@@ -69,7 +71,7 @@ class FedProx:
         (xc_new, (losses0, grads0)), _ = jax.lax.scan(
             local_step, (xc, first0), jnp.arange(fed.k0)
         )
-        x_new = pt.tree_mean_over_axis(xc_new, axis=0)
+        x_new = api.client_mean(xc_new)
 
         new_state = dict(state)
         new_state.update(

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import FedConfig
+from repro.core import api
 from repro.core.api import LossFn, broadcast_clients
 from repro.core.baselines.common import lr_schedule, round_metrics
 from repro.utils import pytree as pt
@@ -18,6 +19,7 @@ from repro.utils import pytree as pt
 
 class Scaffold:
     name = "scaffold"
+    client_state_keys = ("ci",)
 
     def __init__(self, fed: FedConfig, loss_fn: LossFn, model=None):
         self.fed = fed
@@ -40,7 +42,7 @@ class Scaffold:
 
     def round(self, state, batch):
         fed = self.fed
-        m = fed.num_clients
+        m = api.local_client_count(fed.num_clients)
         xbar = state["x"]
         xc = broadcast_clients(xbar, m)
         lr = lr_schedule(fed.lr, state["step"])
@@ -78,12 +80,10 @@ class Scaffold:
             xbar,
             y,
         )
-        x_new = pt.tree_mean_over_axis(y, axis=0)
-        c_new = jax.tree.map(
-            lambda cc, cin, ci: cc + jnp.mean(cin - ci, axis=0),
+        x_new = api.client_mean(y)
+        c_new = pt.tree_add(
             state["c"],
-            ci_new,
-            state["ci"],
+            api.client_mean(pt.tree_sub(ci_new, state["ci"])),
         )
 
         new_state = dict(state)

@@ -31,13 +31,15 @@ import jax.numpy as jnp
 import jax.scipy.linalg as jsl
 
 from repro.config import FedConfig
-from repro.core import hparams, selection
+from repro.core import api, hparams, selection
 from repro.core.api import LossFn, broadcast_clients, per_client_value_and_grad
 from repro.utils import pytree as pt
 
 
 class FedGiA:
     name = "fedgia"
+    # leaves with a leading client axis — what the engine shards over `data`
+    client_state_keys = ("z", "pi", "h", "gram_chol")
 
     def __init__(self, fed: FedConfig, loss_fn: LossFn, model=None):
         self.fed = fed
@@ -159,11 +161,13 @@ class FedGiA:
     def round(self, state, batch):
         fed = self.fed
         m = fed.num_clients
+        m_local = api.local_client_count(m)
         sdt = jnp.dtype(fed.state_dtype)
         sigma = state["sigma"]
 
         # (1) aggregation — the round's ONLY model-size communication
-        xbar = pt.tree_mean_over_axis(state["z"], axis=0)  # eq. (11)
+        # (under client sharding this is the single psum of the round)
+        xbar = api.client_mean(state["z"])  # eq. (11)
 
         # (2) per-client gradient at x̄, once per round
         xbar_model = (
@@ -174,21 +178,26 @@ class FedGiA:
         losses, grads = self._vg(xbar_model, batch)
         gbar = pt.tree_cast(pt.tree_scale(grads, 1.0 / m), sdt)  # ḡ_i
 
-        # (3) client selection
+        # (3) client selection — mask derived from the (replicated) round
+        # rng for ALL m clients; each shard keeps its own block.
         rng, sel_key = jax.random.split(state["rng"])
-        sel = selection.selection_mask(
-            jax.random.fold_in(sel_key, state["round"]), m, fed.alpha
+        sel = api.local_client_slice(
+            selection.selection_mask(
+                jax.random.fold_in(sel_key, state["round"]), m, fed.alpha
+            )
         )
 
         # (4) both branches, masked combine
-        xbar_c = broadcast_clients(xbar, m)
+        xbar_c = broadcast_clients(xbar, m_local)
         xa, pia, za = self._admm_branch(state, xbar_c, gbar)
         pig = pt.tree_scale(gbar, -1.0)  # eq. (16)
         zg = pt.tree_axpy(-1.0 / sigma, gbar, xbar_c)  # eq. (17)
 
         def sel_where(a, b):
             return jax.tree.map(
-                lambda u, v: jnp.where(sel.reshape((m,) + (1,) * (u.ndim - 1)), u, v),
+                lambda u, v: jnp.where(
+                    sel.reshape((m_local,) + (1,) * (u.ndim - 1)), u, v
+                ),
                 a,
                 b,
             )
@@ -203,11 +212,11 @@ class FedGiA:
         if fed.h_policy == "diag_ema":
             new_state["h"] = hparams.update_diag_h(state["h"], gbar, state["r"], m)
 
-        gmean = pt.tree_mean_over_axis(grads, axis=0)
+        gmean = api.client_mean(grads)
         metrics = {
-            "f_xbar": jnp.mean(losses),
+            "f_xbar": api.client_scalar_mean(losses),
             "grad_sq_norm": pt.tree_sq_norm(gmean),
-            "selected": sel.sum(),
+            "selected": api.client_scalar_sum(sel),
             "cr": 2.0 * (state["round"] + 1).astype(jnp.float32),
             "local_grad_evals": jnp.float32(1.0),  # per client per round (C2)
         }

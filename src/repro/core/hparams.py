@@ -57,11 +57,15 @@ def update_diag_h(h, gbar, r_hat, m: int):
     gbar is the scaled gradient (1/m) grad f_i; rescale to grad f_i before
     normalising so the proxy is invariant to m.
     """
+    from repro.core import api
+
     g2 = jax.tree.map(lambda g: jnp.square(g.astype(jnp.float32) * m), gbar)
-    gmax = jax.tree.reduce(
-        jnp.maximum,
-        jax.tree.map(lambda a: a.max(), g2),
-        jnp.float32(1e-30),
+    gmax = api.client_scalar_max(
+        jax.tree.reduce(
+            jnp.maximum,
+            jax.tree.map(lambda a: a.max(), g2),
+            jnp.float32(1e-30),
+        )
     )
     h_new = jax.tree.map(
         lambda hh, gg: jnp.clip(

@@ -1,7 +1,10 @@
 """Serving driver: prefill a batch of requests, then decode autoregressively.
 
 CPU-runnable with --reduced; the same jitted step functions are what the
-dry-run lowers for the production mesh.
+dry-run lowers for the production mesh. The decode loop is scan-compiled
+through the round engine's `scan_steps` (core/engine.py) — the whole
+generation is ONE dispatch instead of one per token; `--no-scan` keeps the
+legacy per-token loop.
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --reduced \
       --batch 4 --prompt-len 32 --gen 16
@@ -16,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, list_architectures
+from repro.core.engine import scan_steps
 from repro.models import Transformer
 from repro.utils import get_logger
 
@@ -41,9 +45,6 @@ def serve(args):
     prefill = jax.jit(
         lambda p, t: model.prefill(p, tokens=t, cache_len=cache_len, window=window)
     )
-    decode = jax.jit(
-        lambda p, c, t, pos: model.decode_step(p, c, t, pos, window=window)
-    )
 
     t0 = time.time()
     logits, cache = prefill(params, prompts)
@@ -51,17 +52,38 @@ def serve(args):
     t_prefill = time.time() - t0
 
     tokens = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-    out = [tokens]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        pos = jnp.asarray(args.prompt_len + i, jnp.int32)
-        logits, cache = decode(params, cache, tokens, pos)
-        tokens = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        out.append(tokens)
-    jax.block_until_ready(out[-1])
-    t_decode = time.time() - t0
+    if getattr(args, "no_scan", False):
+        decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, c, t, pos, window=window)
+        )
+        out = [tokens]
+        t0 = time.time()
+        for i in range(args.gen - 1):
+            pos = jnp.asarray(args.prompt_len + i, jnp.int32)
+            logits, cache = decode(params, cache, tokens, pos)
+            tokens = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            out.append(tokens)
+        jax.block_until_ready(out[-1])
+        t_decode = time.time() - t0
+        gen = np.asarray(jnp.concatenate(out, axis=1))
+    else:
+        # scan-compiled decode: the whole generation is one dispatch
+        def step(carry, p):
+            c, t, pos = carry
+            logits, c = model.decode_step(p, c, t, pos, window=window)
+            t = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            return (c, t, pos + 1), t
 
-    gen = np.asarray(jnp.concatenate(out, axis=1))
+        run = scan_steps(step, args.gen - 1)
+        carry0 = (cache, tokens, jnp.asarray(args.prompt_len, jnp.int32))
+        t0 = time.time()
+        (cache, _, _), rest = run(carry0, params)
+        jax.block_until_ready(rest)
+        t_decode = time.time() - t0
+        # rest: (gen-1, B, 1) -> (B, gen-1); prepend the prefill's argmax
+        gen = np.asarray(
+            jnp.concatenate([tokens, jnp.swapaxes(rest[..., 0], 0, 1)], axis=1)
+        )
     log.info("prefill %.3fs (%d tokens)  decode %.3fs (%.1f tok/s/req)",
              t_prefill, B * args.prompt_len, t_decode,
              (args.gen - 1) / max(t_decode, 1e-9))
@@ -77,6 +99,8 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--long-context", action="store_true")
+    ap.add_argument("--no-scan", action="store_true",
+                    help="legacy per-token decode dispatch (debugging)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     serve(args)

@@ -4,6 +4,12 @@ Runs REAL training (paper examples or transformer archs at reduced scale on
 CPU; the same code path drives the production mesh on TPU) with any of the
 five federated algorithms.
 
+Rounds are driven by the scan-compiled round engine (core/engine.py):
+chunks of rounds compile into one lax.scan with the tolerance check on
+device, so the host is not in the per-round loop. `--no-scan` restores the
+legacy per-round dispatch for debugging; `--shard-clients N` splits the
+client axis over an N-way `data` mesh axis (requires >= N devices).
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --problem linreg --algo fedgia \
       --clients 128 --k0 10 --rounds 200 --tol 1e-7
@@ -13,17 +19,14 @@ Examples:
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import save_checkpoint
-from repro.config import FedConfig, TrainConfig
+from repro.config import FedConfig
 from repro.configs import get_config, list_architectures
-from repro.core import make_algorithm
+from repro.core import make_algorithm, run_rounds
 from repro.data import linreg_noniid, logreg_data
 from repro.data.tokens import synthetic_batch_for
 from repro.models import (
@@ -79,37 +82,48 @@ def train(args) -> dict:
     )
     algo = make_algorithm(fed, loss_fn, model=model)
     state = algo.init(params0, jax.random.PRNGKey(args.seed + 1), init_batch=batch)
-    round_fn = jax.jit(algo.round)
 
-    t0 = time.time()
-    history = []
-    for r in range(args.rounds):
-        state, metrics = round_fn(state, batch)
-        f = float(metrics["f_xbar"])
-        err = float(metrics["grad_sq_norm"])
-        history.append({"round": r, "f": f, "err": err})
-        if r % args.log_every == 0 or r == args.rounds - 1:
-            log.info("round %4d  f=%.6f  |grad|^2=%.3e", r, f, err)
-        if args.tol and err < args.tol:
-            log.info("tolerance reached at round %d", r)
-            break
-    wall = time.time() - t0
+    # engine knobs default off so programmatic callers can pass a bare
+    # Namespace with only the legacy fields
+    shard_clients = getattr(args, "shard_clients", 0)
+    mesh = None
+    if shard_clients > 1:
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh(data=shard_clients)
+
+    res = run_rounds(
+        algo, state, batch, args.rounds,
+        tol=args.tol, scan=not getattr(args, "no_scan", False),
+        chunk_size=getattr(args, "chunk", 0), mesh=mesh,
+    )
+    history = [
+        {"round": r, "f": float(res.history["f_xbar"][r]),
+         "err": float(res.history["grad_sq_norm"][r])}
+        for r in range(res.rounds_run)
+    ]
+    for h in history:
+        if h["round"] % args.log_every == 0 or h["round"] == res.rounds_run - 1:
+            log.info("round %4d  f=%.6f  |grad|^2=%.3e",
+                     h["round"], h["f"], h["err"])
+    if res.stopped_early:
+        log.info("tolerance reached at round %d", res.rounds_run - 1)
     result = {
         "algo": args.algo,
-        "rounds": len(history),
-        "cr": 2 * len(history),
+        "rounds": res.rounds_run,
+        "cr": 2 * res.rounds_run,
         "final_f": history[-1]["f"],
         "final_err": history[-1]["err"],
-        "wall_s": wall,
+        "wall_s": res.wall_s,
         "history": history,
     }
     if args.checkpoint_dir:
-        save_checkpoint(args.checkpoint_dir, len(history), state,
+        save_checkpoint(args.checkpoint_dir, res.rounds_run, res.state,
                         extra={"algo": args.algo})
         log.info("checkpoint written to %s", args.checkpoint_dir)
     log.info(
         "done: %d rounds (CR=%d) in %.2fs  f=%.6f err=%.2e",
-        result["rounds"], result["cr"], wall, result["final_f"],
+        result["rounds"], result["cr"], res.wall_s, result["final_f"],
         result["final_err"],
     )
     return result
@@ -130,6 +144,12 @@ def main():
     ap.add_argument("--h-policy", default="scalar",
                     choices=["scalar", "diag_ema", "gram"])
     ap.add_argument("--unrolled", action="store_true")
+    ap.add_argument("--no-scan", action="store_true",
+                    help="legacy per-round dispatch loop (debugging)")
+    ap.add_argument("--chunk", type=int, default=0,
+                    help="rounds per compiled scan chunk (0 = auto)")
+    ap.add_argument("--shard-clients", type=int, default=0,
+                    help="shard the client axis over an N-way data mesh")
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--rounds", type=int, default=100)
     ap.add_argument("--tol", type=float, default=1e-7)

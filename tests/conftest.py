@@ -1,13 +1,24 @@
 # NOTE: no XLA_FLAGS here — tests run on the single real CPU device.
-# Multi-device integration tests spawn subprocesses that set
-# --xla_force_host_platform_device_count BEFORE importing jax.
+# Multi-device integration tests spawn subprocesses that use
+# `fake_device_env` below to set --xla_force_host_platform_device_count
+# BEFORE importing jax (the flag must be set pre-import, and mutating it
+# in-process would leak 8 fake devices into every other test).
 import os
 import sys
 
 import numpy as np
 import pytest
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+sys.path.insert(0, SRC)
+
+
+def fake_device_env(num_devices: int = 8) -> dict:
+    """Environment for a subprocess that should see `num_devices` fake CPU
+    devices: XLA_FLAGS set before jax import, PYTHONPATH pointing at src."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={num_devices}"
+    return env
 
 
 @pytest.fixture(scope="session")

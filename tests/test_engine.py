@@ -1,0 +1,115 @@
+"""Round-engine equivalence: the scan-compiled chunked driver must be
+numerically indistinguishable (fp32 allclose) from the legacy per-round
+Python loop — for ALL five algorithms, including the metrics history and
+the early-stop round count of the paper's stopping rule (eq. 35)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FedConfig
+from repro.core import make_algorithm, run_rounds
+from repro.core.engine import RoundResult
+from repro.data import linreg_noniid
+from repro.models import LeastSquares
+from repro.utils import pytree as pt
+
+M, N, D = 8, 20, 400
+ROUNDS = 24  # >= 20, and not a multiple of the chunk size below
+CHUNK = 7    # exercises full + partial chunks
+
+ALGO_SETUPS = {
+    "fedgia": dict(sigma_t=0.2, h_policy="scalar", alpha=0.5),
+    "fedgia_diag": dict(sigma_t=0.2, h_policy="diag_ema", alpha=0.5),
+    "fedavg": dict(lr=0.01, alpha=1.0),
+    "fedprox": dict(lr=0.002, prox_mu=1e-4, inner_steps=3, alpha=1.0),
+    "fedpd": dict(lr=0.05, fedpd_eta=1.0, inner_steps=3, alpha=1.0),
+    "scaffold": dict(lr=0.01, alpha=1.0),
+}
+
+
+@pytest.fixture(scope="module")
+def problem():
+    batch = {k: jnp.asarray(v) for k, v in linreg_noniid(0, D, N, M).items()}
+    model = LeastSquares(N)
+    return model, batch
+
+
+def _make(problem, key, **overrides):
+    model, batch = problem
+    name = "fedgia" if key.startswith("fedgia") else key
+    kwargs = dict(algorithm=name, num_clients=M, k0=3)
+    kwargs.update(ALGO_SETUPS[key])
+    kwargs.update(overrides)
+    fed = FedConfig(**kwargs)
+    algo = make_algorithm(fed, model.loss, model=model)
+    state = algo.init(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(1),
+                      init_batch=batch)
+    return algo, state
+
+
+def _assert_equivalent(res: RoundResult, ref: RoundResult):
+    assert res.rounds_run == ref.rounds_run
+    assert res.stopped_early == ref.stopped_early
+    assert set(res.history) == set(ref.history)
+    for k in ref.history:
+        np.testing.assert_allclose(res.history[k], ref.history[k],
+                                   rtol=1e-5, atol=1e-6, err_msg=k)
+    for key in ref.state:
+        ok = jax.tree.map(
+            lambda a, b: bool(jnp.allclose(a, b, rtol=1e-5, atol=1e-6)),
+            res.state[key], ref.state[key],
+        )
+        assert all(jax.tree.leaves(ok)), f"state[{key!r}] diverged"
+
+
+@pytest.mark.parametrize("algo_key", sorted(ALGO_SETUPS))
+def test_scan_matches_legacy_loop(problem, algo_key):
+    """Same seeds -> same metrics history and final state, >= 20 rounds."""
+    algo, state = _make(problem, algo_key)
+    _, batch = problem
+    ref = run_rounds(algo, state, batch, ROUNDS, scan=False)
+    res = run_rounds(algo, state, batch, ROUNDS, scan=True, chunk_size=CHUNK)
+    assert ref.rounds_run == ROUNDS
+    _assert_equivalent(res, ref)
+
+
+@pytest.mark.parametrize("chunk", [1, 5, 13])
+def test_early_stop_round_count_matches(problem, chunk):
+    """Device-side tolerance check stops on exactly the same round as the
+    host-side check, for chunk sizes that do / do not align with it."""
+    algo, state = _make(problem, "fedgia", k0=5)
+    _, batch = problem
+    ref = run_rounds(algo, state, batch, 300, tol=1e-7, scan=False)
+    res = run_rounds(algo, state, batch, 300, tol=1e-7, scan=True,
+                     chunk_size=chunk)
+    assert ref.stopped_early, "tolerance should be reachable in 300 rounds"
+    assert 0 < ref.rounds_run < 300
+    _assert_equivalent(res, ref)
+    # history is trimmed at the stop round: nothing after it is reported
+    assert len(res.history["grad_sq_norm"]) == res.rounds_run
+    assert float(res.history["grad_sq_norm"][-1]) < 1e-7
+
+
+def test_no_early_stop_when_tol_unreachable(problem):
+    algo, state = _make(problem, "fedgia")
+    _, batch = problem
+    res = run_rounds(algo, state, batch, 10, tol=1e-30, scan=True, chunk_size=4)
+    assert res.rounds_run == 10 and not res.stopped_early
+
+
+def test_zero_rounds(problem):
+    algo, state = _make(problem, "fedgia")
+    _, batch = problem
+    res = run_rounds(algo, state, batch, 0)
+    assert res.rounds_run == 0 and res.history == {}
+
+
+def test_metrics_are_stacked_per_round(problem):
+    algo, state = _make(problem, "fedavg")
+    _, batch = problem
+    res = run_rounds(algo, state, batch, 6, scan=True, chunk_size=4)
+    for k, v in res.history.items():
+        assert v.shape[0] == 6, k
+    # cr counts 2 communications per round, in order
+    np.testing.assert_allclose(res.history["cr"], 2.0 * np.arange(1, 7))

@@ -48,6 +48,31 @@ def test_collapsed_equals_unrolled(problem):
         np.testing.assert_allclose(s_c["pi"]["x"], s_u["pi"]["x"], rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.parametrize("h_policy", ["scalar", "diag_ema"])
+@pytest.mark.parametrize("sigma_t", [0.15, 0.6, 6.0])
+@pytest.mark.parametrize("k0", [1, 2, 7])
+def test_collapsed_equals_unrolled_grid(problem, k0, sigma_t, h_policy):
+    """Deterministic (hypothesis-free) coverage of the collapse invariant
+    across the (k0, sigma_t, h_policy) grid — the guarantee holds for any
+    elementwise H, not just the scalar policy the legacy test exercised."""
+    model, batch = problem
+    algo_c, s_c = make_algo(problem, collapsed=True, k0=k0, sigma_t=sigma_t,
+                            h_policy=h_policy)
+    algo_u, s_u = make_algo(problem, collapsed=False, k0=k0, sigma_t=sigma_t,
+                            h_policy=h_policy)
+    for _ in range(3):
+        s_c, met_c = algo_c.round(s_c, batch)
+        s_u, met_u = algo_u.round(s_u, batch)
+    np.testing.assert_allclose(s_c["z"]["x"], s_u["z"]["x"], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(s_c["pi"]["x"], s_u["pi"]["x"], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(s_c["x"]["x"], s_u["x"]["x"], rtol=1e-5, atol=1e-6)
+    if h_policy == "diag_ema":
+        np.testing.assert_allclose(s_c["h"]["x"], s_u["h"]["x"],
+                                   rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(met_c["f_xbar"]), float(met_u["f_xbar"]),
+                               rtol=1e-6)
+
+
 def test_gd_branch_equations(problem):
     """eqs (15)-(17): non-selected clients get x=x̄, pi=-ḡ, z=x̄-ḡ/σ."""
     model, batch = problem

@@ -1,7 +1,16 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants.
+
+`hypothesis` is an optional dev dependency (requirements-dev.txt); the
+suite degrades gracefully to the non-property tests when it is absent —
+the collapsed-vs-unrolled invariant keeps deterministic coverage in
+tests/test_fedgia_math.py.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.config import FedConfig

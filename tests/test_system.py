@@ -47,6 +47,25 @@ def test_train_driver_transformer_loss_improves(tmp_path):
     assert latest_step(str(tmp_path / "ck")) == len(hist)
 
 
+def test_train_driver_no_scan_matches_engine():
+    """--no-scan (legacy loop) and the scan engine agree end to end."""
+    from repro.launch.train import train
+
+    common = dict(
+        problem="linreg", arch=None, reduced=False, algo="fedgia",
+        clients=8, k0=3, alpha=0.5, sigma_t=0.2, h_policy="scalar",
+        unrolled=False, lr=0.01, rounds=12, tol=0.0, dim=24, samples=480,
+        batch=2, seq_len=32, seed=0, log_every=100, checkpoint_dir="",
+    )
+    res_scan = train(argparse.Namespace(**common))
+    res_loop = train(argparse.Namespace(**common, no_scan=True))
+    assert res_scan["rounds"] == res_loop["rounds"] == 12
+    np.testing.assert_allclose(res_scan["final_f"], res_loop["final_f"],
+                               rtol=1e-6)
+    np.testing.assert_allclose(res_scan["final_err"], res_loop["final_err"],
+                               rtol=1e-5)
+
+
 def test_serve_driver_end_to_end():
     from repro.launch.serve import serve
 
@@ -57,6 +76,10 @@ def test_serve_driver_end_to_end():
     gen = serve(args)
     assert gen.shape == (3, 6)
     assert (gen >= 0).all()
+    # the scan-compiled decode loop generates the same tokens as the
+    # legacy per-token dispatch
+    gen_loop = serve(argparse.Namespace(**vars(args), no_scan=True))
+    np.testing.assert_array_equal(gen, gen_loop)
 
 
 def test_hlo_collective_parser():
