@@ -1,12 +1,17 @@
 """Paper Fig. 3: effect of the selection fraction alpha — little CR impact
-for k0 > 5; FedGiA_D time roughly flat in alpha."""
+for k0 > 5; FedGiA_D time roughly flat in alpha.
+
+alpha is applied through the ENGINE's uniform participation policy (the
+on-device per-round mask of core/selection.py), i.e. the same mechanism
+every algorithm — not just FedGiA — shares; benchmarks/participation_bench
+extends this sweep to the baselines and the client-sharded path."""
 from __future__ import annotations
 
 import jax
 
 from benchmarks.common import M_CLIENTS, make_problem
 from repro.config import FedConfig
-from repro.core import make_algorithm, run_rounds
+from repro.core import UniformParticipation, make_algorithm, run_rounds
 
 ALPHAS = [0.1, 0.25, 0.5, 0.75, 1.0]
 K0 = 10
@@ -15,13 +20,16 @@ K0 = 10
 def run():
     rows = []
     model, batch, tol = make_problem("linreg", 0)
+    # alpha=1.0: the engine mask IS the ADMM/GD split, so the in-algorithm
+    # draw is bypassed and fed.alpha is inert
+    fed = FedConfig(algorithm="fedgia", num_clients=M_CLIENTS, k0=K0,
+                    alpha=1.0, sigma_t=0.15, h_policy="diag_ema")
+    algo = make_algorithm(fed, model.loss, model=model)
+    state = algo.init(model.init(jax.random.PRNGKey(0)),
+                      jax.random.PRNGKey(1), init_batch=batch)
     for alpha in ALPHAS:
-        fed = FedConfig(algorithm="fedgia", num_clients=M_CLIENTS, k0=K0,
-                        alpha=alpha, sigma_t=0.15, h_policy="diag_ema")
-        algo = make_algorithm(fed, model.loss, model=model)
-        state = algo.init(model.init(jax.random.PRNGKey(0)),
-                          jax.random.PRNGKey(1), init_batch=batch)
-        res = run_rounds(algo, state, batch, 500, tol=tol)
+        res = run_rounds(algo, state, batch, 500, tol=tol,
+                         participation=UniformParticipation(M_CLIENTS, alpha))
         rows.append({"alpha": alpha, "cr": 2 * res.rounds_run,
                      "time_s": res.wall_s,
                      "obj": float(res.history["f_xbar"][-1])})

@@ -5,6 +5,7 @@
   fig2_k0          — paper Fig. 2 (k0 effect on CR and wall time)
   fig3_alpha       — paper Fig. 3 (selection-fraction effect)
   engine           — scan-compiled round engine vs per-round dispatch
+  participation    — in-engine alpha sweep (scan + sharded; one-psum check)
   kernels_bench    — collapsed-vs-unrolled round + FedGiA-vs-FedAvg cost
   roofline         — §Roofline table from the dry-run artifacts
 
@@ -18,7 +19,7 @@ import sys
 import time
 
 from benchmarks import engine_bench, fig1_convergence, fig2_k0, fig3_alpha
-from benchmarks import kernels_bench, roofline, table4
+from benchmarks import kernels_bench, participation_bench, roofline, table4
 
 SECTIONS = {
     "table4": table4.main,
@@ -26,6 +27,7 @@ SECTIONS = {
     "fig2": fig2_k0.main,
     "fig3": fig3_alpha.main,
     "engine": engine_bench.main,
+    "participation": participation_bench.main,
     "kernels": kernels_bench.main,
     "roofline": roofline.main,
 }

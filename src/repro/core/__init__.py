@@ -1,5 +1,13 @@
 from repro.core.api import FederatedAlgorithm, make_algorithm
 from repro.core.engine import RoundResult, run_rounds, scan_steps
+from repro.core.selection import (
+    AvailabilityParticipation,
+    CyclicParticipation,
+    ParticipationPolicy,
+    UniformParticipation,
+    WeightedParticipation,
+    make_policy,
+)
 from repro.core.fedgia import FedGiA
 from repro.core.baselines.fedavg import FedAvg
 from repro.core.baselines.fedprox import FedProx

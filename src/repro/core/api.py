@@ -28,7 +28,13 @@ class FederatedAlgorithm(Protocol):
 
     def init(self, params0, rng, init_batch=None) -> Dict[str, Any]: ...
 
-    def round(self, state, batch) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]: ...
+    # `mask` is the engine-drawn participation mask (core/selection.py),
+    # already sliced to this shard's local clients; None = the legacy
+    # in-algorithm behaviour (FedGiA draws §V.B selection itself, the
+    # baselines run full participation).
+    def round(
+        self, state, batch, mask: Optional[jax.Array] = None
+    ) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]: ...
 
 
 # --------------------------------------------------------------------------
@@ -68,17 +74,43 @@ def local_client_count(m: int) -> int:
     return m // shards
 
 
-def client_mean(tree, axis: int = 0):
+def _mask_bcast(mask: jax.Array, leaf: jax.Array) -> jax.Array:
+    """Reshape a (m_local,) mask so it broadcasts against a stacked leaf."""
+    return mask.reshape((mask.shape[0],) + (1,) * (leaf.ndim - 1))
+
+
+def client_mean(tree, axis: int = 0, mask: Optional[jax.Array] = None):
     """Mean over the (possibly sharded) leading client axis of a pytree.
 
     This is eq. (11)'s aggregation: under sharding it lowers to the round's
-    ONE model-size all-reduce (`psum` of the local means).
+    ONE model-size all-reduce (`psum` of the local reductions).
+
+    With `mask` (the engine's per-round participation mask, (m_local,)
+    bool) it becomes the masked mean over PARTICIPATING clients only:
+    sum of masked leaves divided by the participant count. The count rides
+    in the same `psum` call as the numerators, so the MODEL-SIZE all-reduce
+    count of the round is unchanged — masking adds only a scalar f32[]
+    rider (mergeable by XLA's collective combiner; asserted by
+    benchmarks/participation_bench.py). On a single device an all-True
+    mask is bitwise identical to the unmasked mean (jnp.mean is sum/count
+    with the same reduction order); under sharding the two paths reduce
+    in different orders (pmean of local means vs psum of local sums) and
+    agree only to fp tolerance. Policies guarantee >= 1 participant.
     """
-    local = jax.tree.map(lambda x: jnp.mean(x, axis=axis), tree)
+    if mask is None:
+        local = jax.tree.map(lambda x: jnp.mean(x, axis=axis), tree)
+        if _CLIENT_AXIS is not None:
+            name = _CLIENT_AXIS[0]
+            local = jax.tree.map(lambda x: jax.lax.pmean(x, name), local)
+        return local
+    assert axis == 0, "masked client_mean supports leading-axis stacking only"
+    num = jax.tree.map(
+        lambda x: jnp.sum(jnp.where(_mask_bcast(mask, x), x, 0), axis=0), tree
+    )
+    cnt = jnp.sum(mask.astype(jnp.float32))
     if _CLIENT_AXIS is not None:
-        name = _CLIENT_AXIS[0]
-        local = jax.tree.map(lambda x: jax.lax.pmean(x, name), local)
-    return local
+        num, cnt = jax.lax.psum((num, cnt), _CLIENT_AXIS[0])
+    return jax.tree.map(lambda s: s / cnt.astype(s.dtype), num)
 
 
 def client_scalar_mean(x: jax.Array) -> jax.Array:
@@ -89,9 +121,10 @@ def client_scalar_mean(x: jax.Array) -> jax.Array:
     return local
 
 
-def client_scalar_sum(x: jax.Array) -> jax.Array:
-    """Sum of a per-client scalar array over ALL clients."""
-    local = jnp.sum(x)
+def client_scalar_sum(x: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
+    """Sum of a per-client scalar array over ALL clients (masked: over
+    participating clients only)."""
+    local = jnp.sum(x if mask is None else jnp.where(mask, x, 0))
     if _CLIENT_AXIS is not None:
         local = jax.lax.psum(local, _CLIENT_AXIS[0])
     return local
@@ -123,10 +156,13 @@ def broadcast_clients(tree, m: int):
     return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (m,) + a.shape), tree)
 
 
-def client_mask(tree_like, mask):
-    """Reshape a (m,) mask so it broadcasts against stacked leaves."""
+def masked_update(mask, new_tree, old_tree):
+    """Leaf-wise select over the leading client axis: participating clients
+    (mask True) take `new`, frozen clients keep `old`. With an all-True
+    mask this is exactly `new_tree` (bitwise), so full participation runs
+    are unchanged by the masking plumbing."""
     return jax.tree.map(
-        lambda a: mask.reshape((mask.shape[0],) + (1,) * (a.ndim - 1)), tree_like
+        lambda n, o: jnp.where(_mask_bcast(mask, n), n, o), new_tree, old_tree
     )
 
 

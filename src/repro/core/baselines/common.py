@@ -2,8 +2,11 @@
 
 All baselines use the paper's learning-rate schedule
     gamma_k(a) = a / log2(k + 2)
-with k the GLOBAL inner-iteration counter, and the paper's full-device-
-participation comparison protocol (all m clients update every step).
+with k the GLOBAL inner-iteration counter. The paper's comparison protocol
+is full participation (all m clients update every step); the engine can
+instead pass a per-round participation mask (core/selection.py), in which
+case only masked-in clients contribute to the aggregation and per-client
+state of masked-out clients is frozen.
 """
 from __future__ import annotations
 
@@ -19,12 +22,16 @@ def lr_schedule(a, k):
     return a / (jnp.log2(k.astype(jnp.float32) + 2.0))
 
 
-def round_metrics(losses, grads, round_idx):
+def round_metrics(losses, grads, round_idx, mask=None):
     # cross-client reductions go through the api helpers so the same
-    # metrics are exact when the engine shards the client axis.
+    # metrics are exact when the engine shards the client axis. Loss and
+    # grad-norm stay ALL-client means (global objective diagnostics, same
+    # quantity whatever the participation); `selected` reports the round's
+    # participant count.
     gmean = api.client_mean(grads)
     return {
         "f_xbar": api.client_scalar_mean(losses),
         "grad_sq_norm": pt.tree_sq_norm(gmean),
+        "selected": api.client_scalar_sum(jnp.ones_like(losses), mask=mask),
         "cr": 2.0 * (round_idx + 1).astype(jnp.float32),
     }

@@ -41,7 +41,7 @@ class FedPD:
             "rng": rng,
         }
 
-    def round(self, state, batch):
+    def round(self, state, batch, mask=None):
         fed = self.fed
         m = api.local_client_count(fed.num_clients)
         eta = fed.fedpd_eta
@@ -87,7 +87,11 @@ class FedPD:
         (anchors_new, lam_new, (losses0, grads0)), _ = jax.lax.scan(
             local_step, (anchors, state["lam"], first0), jnp.arange(fed.k0)
         )
-        x_new = api.client_mean(anchors_new)
+        # partial participation: frozen clients keep their duals and do not
+        # contribute their (stale) anchors to the aggregation
+        if mask is not None:
+            lam_new = api.masked_update(mask, lam_new, state["lam"])
+        x_new = api.client_mean(anchors_new, mask=mask)
 
         new_state = dict(state)
         new_state.update(
@@ -96,6 +100,6 @@ class FedPD:
             round=state["round"] + 1,
             step=state["step"] + fed.k0,
         )
-        metrics = round_metrics(losses0, grads0, state["round"])
+        metrics = round_metrics(losses0, grads0, state["round"], mask=mask)
         metrics["local_grad_evals"] = jnp.float32(fed.k0 * fed.inner_steps)
         return new_state, metrics

@@ -31,7 +31,7 @@ class FedProx:
             "rng": rng,
         }
 
-    def round(self, state, batch):
+    def round(self, state, batch, mask=None):
         fed = self.fed
         m = api.local_client_count(fed.num_clients)
         xbar = state["x"]
@@ -71,12 +71,13 @@ class FedProx:
         (xc_new, (losses0, grads0)), _ = jax.lax.scan(
             local_step, (xc, first0), jnp.arange(fed.k0)
         )
-        x_new = api.client_mean(xc_new)
+        # partial participation: aggregate over masked-in clients only
+        x_new = api.client_mean(xc_new, mask=mask)
 
         new_state = dict(state)
         new_state.update(
             x=x_new, round=state["round"] + 1, step=state["step"] + fed.k0
         )
-        metrics = round_metrics(losses0, grads0, state["round"])
+        metrics = round_metrics(losses0, grads0, state["round"], mask=mask)
         metrics["local_grad_evals"] = jnp.float32(fed.k0 * fed.inner_steps)
         return new_state, metrics

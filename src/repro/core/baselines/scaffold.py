@@ -40,7 +40,7 @@ class Scaffold:
             "rng": rng,
         }
 
-    def round(self, state, batch):
+    def round(self, state, batch, mask=None):
         fed = self.fed
         m = api.local_client_count(fed.num_clients)
         xbar = state["x"]
@@ -80,7 +80,13 @@ class Scaffold:
             xbar,
             y,
         )
-        x_new = api.client_mean(y)
+        # partial participation (SCAFFOLD §4): frozen clients keep their
+        # control variates; the server model averages participants only,
+        # while c's update keeps the all-client 1/N denominator — frozen
+        # clients contribute a zero delta, giving the paper's |S|/N scaling.
+        if mask is not None:
+            ci_new = api.masked_update(mask, ci_new, state["ci"])
+        x_new = api.client_mean(y, mask=mask)
         c_new = pt.tree_add(
             state["c"],
             api.client_mean(pt.tree_sub(ci_new, state["ci"])),
@@ -94,6 +100,6 @@ class Scaffold:
             round=state["round"] + 1,
             step=state["step"] + fed.k0,
         )
-        metrics = round_metrics(losses0, grads0, state["round"])
+        metrics = round_metrics(losses0, grads0, state["round"], mask=mask)
         metrics["local_grad_evals"] = jnp.float32(fed.k0)
         return new_state, metrics

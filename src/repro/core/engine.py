@@ -21,6 +21,12 @@ not math. This engine removes both costs without changing a single number
     round's ONE `psum` — exactly the paper's single all-reduce per round.
   * **legacy path** — `scan=False` keeps the per-round Python loop
     (`--no-scan` in the launchers) for debugging.
+  * **partial participation** — `participation=` takes a
+    `core.selection.ParticipationPolicy`; its state rides in the scan
+    carry, a fresh (m,) mask is drawn on device every round and handed to
+    `round(state, batch, mask)` (auto-sliced per shard on the sharded
+    path, where the masked aggregation still lowers to ONE psum). See
+    docs/engine.md.
 """
 from __future__ import annotations
 
@@ -70,9 +76,18 @@ def _batch_specs(batch_like, axis: str):
     return jax.tree.map(lambda l: _full_spec(axis, l.ndim), batch_like)
 
 
-def make_round_fn(algo, mesh=None, client_axis: str = "data"):
-    """`algo.round`, optionally wrapped in `shard_map` over the client axis."""
+def make_round_fn(algo, mesh=None, client_axis: str = "data",
+                  masked: bool = False):
+    """`algo.round`, optionally wrapped in `shard_map` over the client axis.
+
+    `masked=True` returns a `(state, batch, mask) -> (state, metrics)`
+    callable: the engine-drawn (m,) participation mask enters `shard_map`
+    with spec `P(client_axis)`, so each shard's round body receives its
+    own contiguous (m_local,) block — algorithms never re-slice it.
+    """
     if mesh is None:
+        if masked:
+            return lambda state, batch, mask: algo.round(state, batch, mask)
         return algo.round
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     if client_axis not in axis_sizes:
@@ -82,21 +97,23 @@ def make_round_fn(algo, mesh=None, client_axis: str = "data"):
     if m % shards != 0:
         raise ValueError(f"num_clients={m} not divisible by {shards} shards")
 
-    def body(state, batch):
+    def body(state, batch, *mask):
         # context makes api.client_mean/... collective over `client_axis`
         with api.client_sharding(client_axis, shards):
-            return algo.round(state, batch)
+            return algo.round(state, batch, *mask)
 
-    def sharded_round(state, batch):
-        abs_state, abs_met = jax.eval_shape(algo.round, state, batch)
+    def sharded_round(state, batch, *mask):
+        abs_state, abs_met = jax.eval_shape(algo.round, state, batch, *mask)
         in_specs = (_state_specs(algo, state, client_axis),
                     _batch_specs(batch, client_axis))
+        if mask:
+            in_specs = in_specs + (P(client_axis),)
         out_specs = (_state_specs(algo, abs_state, client_axis),
                      jax.tree.map(lambda l: _full_spec(None, l.ndim), abs_met))
         return shard_map(
             body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             check_rep=False,
-        )(state, batch)
+        )(state, batch, *mask)
 
     return sharded_round
 
@@ -128,6 +145,7 @@ def run_rounds(
     donate: Optional[bool] = None,
     mesh=None,
     client_axis: str = "data",
+    participation=None,
 ) -> RoundResult:
     """Run up to `num_rounds` communication rounds of `algo`.
 
@@ -135,43 +153,65 @@ def run_rounds(
     first round with metrics[tol_metric] < tol (that round counts as run).
     chunk_size=0 picks a default: the whole run when tol is off, else 32
     rounds between (single-boolean) host checks.
+
+    participation: a `core.selection.ParticipationPolicy`. Its state rides
+    in the scan carry and a fresh (m,) mask is drawn ON DEVICE each round
+    and passed to `round(state, batch, mask)` (sliced per shard on the
+    client-sharded path). None keeps the legacy in-algorithm behaviour.
     """
     if num_rounds <= 0:
         return RoundResult(state, {}, 0, False, 0.0)
-    round_fn = make_round_fn(algo, mesh, client_axis)
+    masked = participation is not None
+    round_fn = make_round_fn(algo, mesh, client_axis, masked=masked)
     if mesh is not None:
         state, batch = shard_inputs(algo, state, batch, mesh, client_axis)
     if donate is None:
         # CPU XLA cannot alias buffers; donating would only emit warnings
         donate = jax.default_backend() != "cpu"
     if not scan:
-        return _run_legacy_loop(round_fn, state, batch, num_rounds, tol, tol_metric)
+        return _run_legacy_loop(round_fn, state, batch, num_rounds, tol,
+                                tol_metric, participation)
     if chunk_size <= 0:
         chunk_size = num_rounds if tol <= 0 else min(num_rounds, 32)
 
-    _, abs_met = jax.eval_shape(round_fn, state, batch)
+    pstate = participation.init() if masked else ()
+
+    def call_round(st, b, ps, n):
+        """One round + advanced policy state (mask drawn from the carry)."""
+        if not masked:
+            s2, met = round_fn(st, b)
+            return s2, ps, met
+        mask, ps2 = participation.mask(ps, n)
+        s2, met = round_fn(st, b, mask)
+        return s2, ps2, met
+
+    _, _, abs_met = jax.eval_shape(
+        call_round, state, batch, pstate, jnp.zeros((), jnp.int32)
+    )
 
     def chunk_fn(carry, batch, *, length):
         def step(carry, _):
-            st, done, n = carry
+            st, ps, done, n = carry
             if tol > 0:
                 def live(op):
-                    st_, b_, n_ = op
-                    s2, met = round_fn(st_, b_)
-                    return s2, met, met[tol_metric] < tol, n_ + 1
+                    st_, ps_, b_, n_ = op
+                    s2, ps2, met = call_round(st_, b_, ps_, n_)
+                    return s2, ps2, met, met[tol_metric] < tol, n_ + 1
 
                 def frozen(op):
-                    st_, _, n_ = op
+                    st_, ps_, _, n_ = op
                     zeros = jax.tree.map(
                         lambda l: jnp.zeros(l.shape, l.dtype), abs_met
                     )
-                    return st_, zeros, jnp.ones((), bool), n_
+                    return st_, ps_, zeros, jnp.ones((), bool), n_
 
-                s2, met, d2, n2 = jax.lax.cond(done, frozen, live, (st, batch, n))
+                s2, ps2, met, d2, n2 = jax.lax.cond(
+                    done, frozen, live, (st, ps, batch, n)
+                )
             else:
-                s2, met = round_fn(st, batch)
+                s2, ps2, met = call_round(st, batch, ps, n)
                 d2, n2 = done, n + 1
-            return (s2, d2, n2), met
+            return (s2, ps2, d2, n2), met
 
         return jax.lax.scan(step, carry, None, length=length)
 
@@ -192,7 +232,7 @@ def run_rounds(
             )
         return chunks[length]
 
-    carry = (state, jnp.zeros((), bool), jnp.zeros((), jnp.int32))
+    carry = (state, pstate, jnp.zeros((), bool), jnp.zeros((), jnp.int32))
 
     if mesh is None:
         # Pre-compile (AOT) every chunk length this run can need — at most
@@ -221,9 +261,9 @@ def run_rounds(
         carry, mets = get_chunk(c)(carry, batch)
         chunk_metrics.append(mets)
         remaining -= c
-        if tol > 0 and bool(carry[1]):  # the chunk's ONE host sync
+        if tol > 0 and bool(carry[2]):  # the chunk's ONE host sync
             break
-    state, done, n = carry
+    state, _, done, n = carry
     jax.block_until_ready(n)
     wall = time.time() - t0
 
@@ -237,18 +277,35 @@ def run_rounds(
     return RoundResult(state, history, rounds_run, stopped, wall)
 
 
-def _run_legacy_loop(round_fn, state, batch, num_rounds, tol, tol_metric):
-    """Per-round jit dispatch + per-round host sync (the --no-scan path)."""
-    rfn = jax.jit(round_fn)
+def _run_legacy_loop(round_fn, state, batch, num_rounds, tol, tol_metric,
+                     participation=None):
+    """Per-round jit dispatch + per-round host sync (the --no-scan path).
+
+    With a participation policy the per-round jitted step also advances the
+    policy state and draws the round's mask — the same pure `policy.mask`
+    sequence as the scan path, so masks (and results) agree between paths.
+    """
+    if participation is None:
+        def step(st, ps, b, n):
+            s2, met = round_fn(st, b)
+            return s2, ps, met
+        pstate = ()
+    else:
+        def step(st, ps, b, n):
+            mask, ps2 = participation.mask(ps, n)
+            s2, met = round_fn(st, b, mask)
+            return s2, ps2, met
+        pstate = participation.init()
+    rfn = jax.jit(step)
     # warm-up compile outside the timed region (same convention as the
     # scan path's AOT pre-compile); round is pure, the result is discarded
-    _s, _m = rfn(state, batch)
+    _s, _ps, _m = rfn(state, pstate, batch, jnp.zeros((), jnp.int32))
     jax.block_until_ready(_m)
     hist = []
     stopped = False
     t0 = time.time()
-    for _ in range(num_rounds):
-        state, met = rfn(state, batch)
+    for i in range(num_rounds):
+        state, pstate, met = rfn(state, pstate, batch, jnp.int32(i))
         met_h = jax.device_get(met)
         hist.append(met_h)
         if tol > 0 and float(met_h[tol_metric]) < tol:

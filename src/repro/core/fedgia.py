@@ -4,7 +4,8 @@ One communication round = one jitted call:
 
   1. aggregate   x̄ = (1/m) Σ z_i              (eq. 11 — ONE all-reduce)
   2. grads       ḡ_i = (1/m) ∇f_i(x̄)          (computed ONCE per round)
-  3. split       C ~ alpha·m clients            (selection.py)
+  3. split       C ~ alpha·m clients            (selection.py; an
+     engine-provided participation mask, when present, IS this split)
   4. ADMM branch (i ∈ C):  k0 iterations of eqs (12)-(14)
      GD branch   (i ∉ C):  eqs (15)-(17), once
   5. state carries (z_i, π_i) per client; x_i = z_i − π_i/σ is derived.
@@ -158,7 +159,7 @@ class FedGiA:
         return x_new, pi_new, z_new
 
     # ----------------------------------------------------------------- round
-    def round(self, state, batch):
+    def round(self, state, batch, mask=None):
         fed = self.fed
         m = fed.num_clients
         m_local = api.local_client_count(m)
@@ -178,14 +179,21 @@ class FedGiA:
         losses, grads = self._vg(xbar_model, batch)
         gbar = pt.tree_cast(pt.tree_scale(grads, 1.0 / m), sdt)  # ḡ_i
 
-        # (3) client selection — mask derived from the (replicated) round
-        # rng for ALL m clients; each shard keeps its own block.
+        # (3) client selection. The engine-drawn participation mask (when
+        # given) decides the branch split and arrives pre-sliced to this
+        # shard's clients; otherwise the in-algorithm §V.B draw derives the
+        # full mask from the (replicated) round rng and each shard keeps
+        # its own block. The rng splits either way, so the state's rng
+        # stream is identical with and without an engine policy.
         rng, sel_key = jax.random.split(state["rng"])
-        sel = api.local_client_slice(
-            selection.selection_mask(
-                jax.random.fold_in(sel_key, state["round"]), m, fed.alpha
+        if mask is None:
+            sel = api.local_client_slice(
+                selection.selection_mask(
+                    jax.random.fold_in(sel_key, state["round"]), m, fed.alpha
+                )
             )
-        )
+        else:
+            sel = mask
 
         # (4) both branches, masked combine
         xbar_c = broadcast_clients(xbar, m_local)
@@ -193,17 +201,8 @@ class FedGiA:
         pig = pt.tree_scale(gbar, -1.0)  # eq. (16)
         zg = pt.tree_axpy(-1.0 / sigma, gbar, xbar_c)  # eq. (17)
 
-        def sel_where(a, b):
-            return jax.tree.map(
-                lambda u, v: jnp.where(
-                    sel.reshape((m_local,) + (1,) * (u.ndim - 1)), u, v
-                ),
-                a,
-                b,
-            )
-
-        pi_new = sel_where(pia, pig)
-        z_new = sel_where(za, zg)
+        pi_new = api.masked_update(sel, pia, pig)
+        z_new = api.masked_update(sel, za, zg)
 
         new_state = dict(state)
         new_state.update(

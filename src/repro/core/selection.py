@@ -1,12 +1,32 @@
-"""Client selection: the paper draws |C| = alpha*m clients uniformly without
-replacement each communication round (§V.B)."""
+"""Client participation: who runs which branch each communication round.
+
+The paper draws |C| = alpha*m clients uniformly without replacement each
+round (§V.B); selected clients run the inexact-ADMM branch (eqs. 12-14),
+the rest the gradient-descent branch (eqs. 15-17). Its companion works
+(arXiv 2204.10607, arXiv 2110.15318) reuse the same pattern, so the
+mechanism lives at the ENGINE layer: `core/engine.py::run_rounds` folds a
+`ParticipationPolicy`'s state into the `lax.scan` carry and draws a fresh
+(m,) mask on device every round, which reaches `round(state, batch, mask)`
+already sliced to the shard's local clients on the client-sharded path.
+
+Masks are dense (every client's update is computed, non-participants are
+masked out at the aggregation / state-combine step): on SPMD hardware this
+is the only shape-stable formulation, and it is exactly how the paper's
+own branch split works — see docs/engine.md.
+"""
 from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+MaskAndState = Tuple[jax.Array, Any]
 
 
 def num_selected(m: int, alpha: float) -> int:
+    """|C| = alpha*m, clamped to [1, m] (at least one client every round)."""
     return max(1, min(m, int(round(alpha * m))))
 
 
@@ -17,3 +37,173 @@ def selection_mask(key, m: int, alpha: float) -> jax.Array:
         return jnp.ones((m,), bool)
     ranks = jax.random.permutation(key, m)
     return ranks < n_sel
+
+
+# --------------------------------------------------------------------------
+# ParticipationPolicy: a device-side per-round mask source. `init()` returns
+# the policy's carry state (a pytree of arrays — it rides inside the
+# engine's scan carry); `mask(pstate, round_idx)` is pure and traceable and
+# returns the round's (m,) bool mask plus the advanced state. Policies must
+# never return an all-False mask (num_selected clamps to >= 1; the
+# availability policy falls back to full participation on dead rounds).
+# --------------------------------------------------------------------------
+class ParticipationPolicy:
+    """Base: full participation (mask of ones), stateless."""
+
+    name = "full"
+
+    def __init__(self, m: int, alpha: float = 1.0):
+        assert m >= 1, "need at least one client"
+        self.m = m
+        self.alpha = alpha
+
+    @property
+    def n_selected(self) -> int:
+        return num_selected(self.m, self.alpha)
+
+    def init(self) -> Any:
+        return ()
+
+    def mask(self, pstate, round_idx) -> MaskAndState:
+        return jnp.ones((self.m,), bool), pstate
+
+
+class UniformParticipation(ParticipationPolicy):
+    """Paper §V.B: alpha*m clients uniformly without replacement per round.
+
+    The PRNG key is the policy state: each round splits it, so the mask
+    sequence is a pure function of `seed` — identical across the scan and
+    legacy engine paths, and across re-runs.
+    """
+
+    name = "uniform"
+
+    def __init__(self, m: int, alpha: float, seed: int = 0):
+        super().__init__(m, alpha)
+        self.seed = seed
+
+    def init(self):
+        return {"key": jax.random.PRNGKey(self.seed)}
+
+    def mask(self, pstate, round_idx):
+        key, sub = jax.random.split(pstate["key"])
+        return selection_mask(sub, self.m, self.alpha), {"key": key}
+
+
+class WeightedParticipation(ParticipationPolicy):
+    """Data-size-weighted sampling without replacement (Gumbel top-k).
+
+    `weights` are per-client sampling weights (e.g. local sample counts);
+    adding Gumbel noise to log-weights and keeping the top |C| draws an
+    exact weighted sample without replacement. Cardinality is always
+    exactly |C| = num_selected(m, alpha).
+    """
+
+    name = "weighted"
+
+    def __init__(self, m: int, alpha: float, weights, seed: int = 0):
+        super().__init__(m, alpha)
+        w = jnp.asarray(weights, jnp.float32)
+        assert w.shape == (m,), f"weights must be (m,)={m}, got {w.shape}"
+        self.log_w = jnp.log(jnp.maximum(w, 1e-30))
+        self.seed = seed
+
+    def init(self):
+        return {"key": jax.random.PRNGKey(self.seed)}
+
+    def mask(self, pstate, round_idx):
+        key, sub = jax.random.split(pstate["key"])
+        n_sel = self.n_selected
+        if n_sel == self.m:
+            return jnp.ones((self.m,), bool), {"key": key}
+        z = self.log_w + jax.random.gumbel(sub, (self.m,))
+        kth = jax.lax.top_k(z, n_sel)[0][-1]
+        return z >= kth, {"key": key}
+
+
+class CyclicParticipation(ParticipationPolicy):
+    """Deterministic round-robin blocks of |C| clients: round t selects
+    clients [t*|C|, t*|C| + |C|) mod m — every client participates exactly
+    once per ceil(m/|C|)-round cycle (up to wrap-around overlap). Useful as
+    a variance-free scenario and for reproducible stragglers."""
+
+    name = "cyclic"
+
+    def init(self):
+        return ()
+
+    def mask(self, pstate, round_idx):
+        n_sel = self.n_selected
+        start = (jnp.asarray(round_idx, jnp.int32) * n_sel) % self.m
+        offset = (jnp.arange(self.m, dtype=jnp.int32) - start) % self.m
+        return offset < n_sel, pstate
+
+
+class AvailabilityParticipation(ParticipationPolicy):
+    """Replay a (T, m) bool availability trace (heterogeneous-client /
+    straggler scenario): round t uses row t mod T. A row with no available
+    client falls back to full participation so aggregation never divides
+    by zero. `alpha` is not used (cardinality varies per round)."""
+
+    name = "availability"
+
+    def __init__(self, m: int, trace):
+        super().__init__(m, alpha=1.0)
+        tr = jnp.asarray(trace, bool)
+        assert tr.ndim == 2 and tr.shape[1] == m, (
+            f"trace must be (T, m={m}), got {tr.shape}"
+        )
+        self.trace = tr
+
+    @classmethod
+    def from_dropout(cls, m: int, drop_prob: float, horizon: int,
+                     seed: int = 0) -> "AvailabilityParticipation":
+        """iid straggler dropout: each client independently unavailable
+        with probability `drop_prob` each round, frozen into a trace so
+        runs are reproducible and the mask draw costs one gather."""
+        rng = np.random.default_rng(seed)
+        trace = rng.random((horizon, m)) >= drop_prob
+        return cls(m, trace)
+
+    def init(self):
+        return ()
+
+    def mask(self, pstate, round_idx):
+        t = jnp.asarray(round_idx, jnp.int32) % self.trace.shape[0]
+        row = jnp.take(self.trace, t, axis=0)
+        return jnp.where(row.any(), row, jnp.ones_like(row)), pstate
+
+
+POLICIES = ("full", "uniform", "weighted", "cyclic", "straggler")
+
+
+def make_policy(
+    kind: str,
+    m: int,
+    alpha: float = 1.0,
+    *,
+    seed: int = 0,
+    weights=None,
+    drop_prob: float = 0.2,
+    horizon: int = 256,
+) -> Optional[ParticipationPolicy]:
+    """CLI-level factory. `kind="full"` returns None: the engine then runs
+    the legacy in-algorithm path (FedGiA keeps its internal §V.B draw,
+    baselines run full participation) — byte-compatible with pre-mask runs."""
+    if kind == "full":
+        return None
+    if kind == "uniform":
+        return UniformParticipation(m, alpha, seed=seed)
+    if kind == "weighted":
+        if weights is None:
+            # equal weights = uniform sampling; pass real per-client data
+            # sizes (launch: --client-weights) for the weighted scenario
+            weights = jnp.ones((m,), jnp.float32)
+        return WeightedParticipation(m, alpha, weights, seed=seed)
+    if kind == "cyclic":
+        return CyclicParticipation(m, alpha)
+    if kind == "straggler":
+        return AvailabilityParticipation.from_dropout(
+            m, drop_prob, horizon, seed=seed
+        )
+    raise KeyError(f"unknown participation policy {kind!r}: {POLICIES}")

@@ -10,9 +10,16 @@ device, so the host is not in the per-round loop. `--no-scan` restores the
 legacy per-round dispatch for debugging; `--shard-clients N` splits the
 client axis over an N-way `data` mesh axis (requires >= N devices).
 
+`--participation` moves client selection into the engine: a fresh
+per-round mask is drawn on device (inside the compiled scan) and fed to
+every algorithm — FedGiA uses it as its ADMM/GD branch split, the
+baselines freeze masked-out clients (see docs/engine.md).
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --problem linreg --algo fedgia \
       --clients 128 --k0 10 --rounds 200 --tol 1e-7
+  PYTHONPATH=src python -m repro.launch.train --problem linreg --algo scaffold \
+      --clients 64 --rounds 100 --participation uniform --alpha 0.25
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b --reduced \
       --algo fedgia --clients 4 --rounds 20 --seq-len 64 --batch 2
 """
@@ -26,7 +33,8 @@ import jax.numpy as jnp
 from repro.checkpoint import save_checkpoint
 from repro.config import FedConfig
 from repro.configs import get_config, list_architectures
-from repro.core import make_algorithm, run_rounds
+from repro.core import make_algorithm, make_policy, run_rounds
+from repro.core.selection import POLICIES
 from repro.data import linreg_noniid, logreg_data
 from repro.data.tokens import synthetic_batch_for
 from repro.models import (
@@ -92,10 +100,42 @@ def train(args) -> dict:
 
         mesh = make_host_mesh(data=shard_clients)
 
+    # engine-level participation (core/selection.py): "full" -> None keeps
+    # the legacy in-algorithm behaviour (FedGiA's internal §V.B draw)
+    kind = getattr(args, "participation", "full")
+    weights = None
+    weights_arg = getattr(args, "client_weights", "")
+    if weights_arg:
+        if kind != "weighted":
+            raise SystemExit("--client-weights requires --participation weighted")
+        weights = [float(w) for w in weights_arg.split(",")]
+        if len(weights) != args.clients:
+            raise SystemExit(
+                f"--client-weights needs {args.clients} values, got {len(weights)}"
+            )
+    policy = make_policy(
+        kind,
+        args.clients,
+        args.alpha,
+        seed=args.seed,
+        weights=weights,
+        drop_prob=getattr(args, "drop_prob", 0.2),
+        horizon=max(args.rounds, 1),
+    )
+    if policy is not None:
+        if kind == "straggler":
+            log.info("participation: %s policy (per-round varying |C|, "
+                     "drop_prob=%.2f), m=%d",
+                     kind, getattr(args, "drop_prob", 0.2), args.clients)
+        else:
+            log.info("participation: %s policy, alpha=%.2f (|C|=%d of m=%d)",
+                     kind, args.alpha, policy.n_selected, args.clients)
+
     res = run_rounds(
         algo, state, batch, args.rounds,
         tol=args.tol, scan=not getattr(args, "no_scan", False),
         chunk_size=getattr(args, "chunk", 0), mesh=mesh,
+        participation=policy,
     )
     history = [
         {"round": r, "f": float(res.history["f_xbar"][r]),
@@ -110,6 +150,7 @@ def train(args) -> dict:
         log.info("tolerance reached at round %d", res.rounds_run - 1)
     result = {
         "algo": args.algo,
+        "participation": kind,  # the CLI kind, reusable as --participation
         "rounds": res.rounds_run,
         "cr": 2 * res.rounds_run,
         "final_f": history[-1]["f"],
@@ -150,6 +191,19 @@ def main():
                     help="rounds per compiled scan chunk (0 = auto)")
     ap.add_argument("--shard-clients", type=int, default=0,
                     help="shard the client axis over an N-way data mesh")
+    ap.add_argument("--participation", default="full", choices=POLICIES,
+                    help="engine-level per-round client participation: "
+                         "full (legacy in-algorithm behaviour), uniform "
+                         "(paper §V.B alpha-sampling), weighted "
+                         "(sampling weighted by --client-weights), cyclic "
+                         "(round-robin blocks), straggler (iid "
+                         "availability dropout)")
+    ap.add_argument("--client-weights", default="",
+                    help="comma-separated per-client sampling weights "
+                         "(e.g. local data sizes) for --participation "
+                         "weighted; default: equal weights")
+    ap.add_argument("--drop-prob", type=float, default=0.2,
+                    help="per-round client dropout prob (straggler policy)")
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--rounds", type=int, default=100)
     ap.add_argument("--tol", type=float, default=1e-7)

@@ -1,0 +1,201 @@
+"""In-engine partial participation: equivalence and state-freezing.
+
+Acceptance contract of the participation subsystem:
+  * alpha=1.0 / uniform policy: the masked engine is BITWISE identical to
+    the full-participation path for all five algorithms, on both the scan
+    and legacy engine paths (the mask plumbing must cost nothing when
+    everyone participates).
+  * alpha<1: the masked scan path matches the masked legacy loop (same
+    on-device mask sequence from the policy state in the scan carry).
+  * frozen clients really freeze: SCAFFOLD control variates and FedPD
+    duals of masked-out clients are untouched.
+  * client-sharded path: the masked `shard_map` round (mask entering with
+    spec P('data'), masked psum aggregation) matches the single-device
+    run (subprocess with 8 fake CPU devices).
+"""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import fake_device_env
+from repro.config import FedConfig
+from repro.core import UniformParticipation, make_algorithm, run_rounds
+from repro.core.selection import CyclicParticipation
+
+M, N, D, ROUNDS, CHUNK = 8, 20, 400, 12, 5
+
+# fedgia uses alpha=1.0 so the unmasked reference IS full participation
+# (the engine mask replaces the in-algorithm draw, which would otherwise
+# select a different subset from a different RNG stream)
+ALGO_SETUPS = {
+    "fedgia": dict(algorithm="fedgia", sigma_t=0.2, h_policy="scalar", alpha=1.0),
+    "fedgia_diag": dict(algorithm="fedgia", sigma_t=0.2, h_policy="diag_ema",
+                        alpha=1.0),
+    "fedavg": dict(algorithm="fedavg", lr=0.01),
+    "fedprox": dict(algorithm="fedprox", lr=0.002, prox_mu=1e-4, inner_steps=3),
+    "fedpd": dict(algorithm="fedpd", lr=0.05, fedpd_eta=1.0, inner_steps=3),
+    "scaffold": dict(algorithm="scaffold", lr=0.01),
+}
+
+
+@pytest.fixture(scope="module")
+def problem():
+    from repro.data import linreg_noniid
+    from repro.models import LeastSquares
+
+    batch = {k: jnp.asarray(v) for k, v in linreg_noniid(0, D, N, M).items()}
+    return LeastSquares(N), batch
+
+
+def _make(problem, key):
+    model, batch = problem
+    fed = FedConfig(num_clients=M, k0=3, **ALGO_SETUPS[key])
+    algo = make_algorithm(fed, model.loss, model=model)
+    state = algo.init(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(1),
+                      init_batch=batch)
+    return algo, state, batch
+
+
+def _state_leaves(state):
+    for k, v in state.items():
+        for leaf in jax.tree.leaves(v):
+            yield k, np.asarray(leaf)
+
+
+@pytest.mark.parametrize("algo_key", sorted(ALGO_SETUPS))
+@pytest.mark.parametrize("scan", [True, False], ids=["scan", "legacy"])
+def test_alpha1_mask_is_bitwise_identical(problem, algo_key, scan):
+    """Dense all-True mask == no mask, bit for bit (history AND state)."""
+    algo, state, batch = _make(problem, algo_key)
+    ref = run_rounds(algo, state, batch, ROUNDS, scan=scan, chunk_size=CHUNK)
+    res = run_rounds(algo, state, batch, ROUNDS, scan=scan, chunk_size=CHUNK,
+                     participation=UniformParticipation(M, 1.0, seed=9))
+    assert res.rounds_run == ref.rounds_run
+    for k in ref.history:
+        np.testing.assert_array_equal(res.history[k], ref.history[k],
+                                      err_msg=f"{algo_key}/{k}")
+    np.testing.assert_array_equal(res.history["selected"], float(M))
+    for (k, a), (_, b) in zip(_state_leaves(ref.state), _state_leaves(res.state)):
+        np.testing.assert_array_equal(a, b, err_msg=f"{algo_key}/state[{k}]")
+
+
+@pytest.mark.parametrize("algo_key", sorted(ALGO_SETUPS))
+def test_masked_scan_matches_legacy_loop(problem, algo_key):
+    """alpha=0.5: identical mask sequence -> matching runs on both paths."""
+    algo, state, batch = _make(problem, algo_key)
+    pol = UniformParticipation(M, 0.5, seed=3)
+    res = run_rounds(algo, state, batch, ROUNDS, scan=True, chunk_size=CHUNK,
+                     participation=pol)
+    ref = run_rounds(algo, state, batch, ROUNDS, scan=False, participation=pol)
+    assert res.rounds_run == ref.rounds_run == ROUNDS
+    assert set(res.history) == set(ref.history)
+    for k in ref.history:
+        np.testing.assert_allclose(res.history[k], ref.history[k],
+                                   rtol=1e-5, atol=1e-6, err_msg=k)
+    for (k, a), (_, b) in zip(_state_leaves(ref.state), _state_leaves(res.state)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6,
+                                   err_msg=f"state[{k}]")
+    # |C| = 4 of 8, every round
+    np.testing.assert_array_equal(res.history["selected"], 4.0)
+
+
+@pytest.mark.parametrize("algo_key,state_key",
+                         [("scaffold", "ci"), ("fedpd", "lam")])
+def test_frozen_clients_keep_local_state(problem, algo_key, state_key):
+    """Masked-out clients must not move their per-client carry state."""
+    algo, state, batch = _make(problem, algo_key)
+    pol = UniformParticipation(M, 0.25, seed=1)
+    mask0 = np.asarray(pol.mask(pol.init(), jnp.int32(0))[0])
+    assert mask0.sum() == 2
+    res = run_rounds(algo, state, batch, 1, scan=False, participation=pol)
+    before = jax.tree.leaves(state[state_key])
+    after = jax.tree.leaves(res.state[state_key])
+    for b, a in zip(before, after):
+        b, a = np.asarray(b), np.asarray(a)
+        np.testing.assert_array_equal(a[~mask0], b[~mask0])
+        # participants did move (update is nonzero on this problem)
+        assert not np.allclose(a[mask0], b[mask0])
+
+
+def test_server_state_ignores_frozen_clients(problem):
+    """FedAvg aggregation over participants only: a round where client i is
+    frozen must not read client i's local trajectory — replacing the frozen
+    clients' batch data must not change the aggregate."""
+    algo, state, batch = _make(problem, "fedavg")
+    pol = CyclicParticipation(M, 0.5)  # round 0 freezes clients 4..7
+    res = run_rounds(algo, state, batch, 1, scan=False, participation=pol)
+    poisoned = {k: v.at[M // 2:].mul(100.0) for k, v in batch.items()}
+    res2 = run_rounds(algo, state, poisoned, 1, scan=False, participation=pol)
+    np.testing.assert_array_equal(np.asarray(res.state["x"]["x"]),
+                                  np.asarray(res2.state["x"]["x"]))
+
+
+def test_masked_early_stop_agrees(problem):
+    """The eq.-35 device-side stopping rule composes with participation."""
+    algo, state, batch = _make(problem, "fedgia")
+    pol = UniformParticipation(M, 0.5, seed=0)
+    ref = run_rounds(algo, state, batch, 300, tol=1e-7, scan=False,
+                     participation=pol)
+    res = run_rounds(algo, state, batch, 300, tol=1e-7, scan=True,
+                     chunk_size=13, participation=pol)
+    assert ref.stopped_early and res.stopped_early
+    assert res.rounds_run == ref.rounds_run
+    assert len(res.history["grad_sq_norm"]) == res.rounds_run
+
+
+_SHARDED_MASKED_SCRIPT = textwrap.dedent(
+    """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.config import FedConfig
+    from repro.core import UniformParticipation, make_algorithm, run_rounds
+    from repro.data import linreg_noniid
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import LeastSquares
+
+    m, n, d = 8, 24, 320
+    batch = {k: jnp.asarray(v) for k, v in linreg_noniid(0, d, n, m).items()}
+    model = LeastSquares(n)
+    for algo_name, kw, mesh in (
+        ("fedgia", dict(sigma_t=0.3, h_policy="diag_ema", alpha=1.0),
+         make_host_mesh(data=8)),
+        ("scaffold", dict(lr=0.01), make_host_mesh(model=2, data=4)),
+    ):
+        fed = FedConfig(algorithm=algo_name, num_clients=m, k0=5, **kw)
+        algo = make_algorithm(fed, model.loss, model=model)
+        s0 = algo.init(model.init(jax.random.PRNGKey(0)),
+                       jax.random.PRNGKey(1), init_batch=batch)
+        pol = UniformParticipation(m, 0.5, seed=2)
+        ref = run_rounds(algo, s0, batch, 10, scan=True, chunk_size=5,
+                         participation=pol)
+        res = run_rounds(algo, s0, batch, 10, scan=True, chunk_size=5,
+                         participation=pol, mesh=mesh)
+        # rtol 1e-4: the masked psum reduces per-shard partial sums in a
+        # different order than the single-device sum, so fp32 drift over
+        # 10 rounds is slightly larger than the unmasked engine's
+        for k in ref.history:
+            np.testing.assert_allclose(res.history[k], ref.history[k],
+                                       rtol=1e-4, atol=1e-6,
+                                       err_msg=f"{algo_name}/{k}")
+        for key in ref.state:
+            for a, b in zip(jax.tree.leaves(ref.state[key]),
+                            jax.tree.leaves(res.state[key])):
+                np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                           rtol=1e-4, atol=1e-6,
+                                           err_msg=f"{algo_name}/{key}")
+        assert list(res.history["selected"]) == [4.0] * 10
+    print("MASKED_SHARDED_OK")
+    """
+)
+
+
+def test_masked_sharded_matches_single_device():
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARDED_MASKED_SCRIPT], env=fake_device_env(8),
+        capture_output=True, text=True, timeout=600,
+    )
+    assert "MASKED_SHARDED_OK" in out.stdout, out.stdout + out.stderr

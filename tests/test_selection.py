@@ -1,0 +1,182 @@
+"""Unit tests for core/selection.py: num_selected edge cases, mask
+cardinality/determinism under fixed keys, and the policy-specific
+properties of each ParticipationPolicy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import selection
+from repro.core.selection import (
+    AvailabilityParticipation,
+    CyclicParticipation,
+    ParticipationPolicy,
+    UniformParticipation,
+    WeightedParticipation,
+    make_policy,
+    num_selected,
+    selection_mask,
+)
+
+
+# ------------------------------------------------------------ num_selected
+@pytest.mark.parametrize(
+    "m,alpha,expect",
+    [
+        (8, 0.0, 1),      # alpha -> 0 clamps to one client
+        (8, 1e-9, 1),
+        (8, 1.0, 8),      # alpha -> 1 selects everyone
+        (8, 2.0, 8),      # clamped above
+        (1, 0.0, 1),      # m = 1: the single client always runs
+        (1, 1.0, 1),
+        (8, 0.5, 4),
+        (128, 0.1, 13),   # round(12.8)
+        (10, 0.25, 2),    # banker's rounding of 2.5
+    ],
+)
+def test_num_selected(m, alpha, expect):
+    assert num_selected(m, alpha) == expect
+
+
+# ---------------------------------------------------------- selection_mask
+@pytest.mark.parametrize("m,alpha", [(8, 0.5), (8, 0.25), (7, 0.4), (1, 0.5)])
+def test_mask_cardinality(m, alpha):
+    mask = selection_mask(jax.random.PRNGKey(0), m, alpha)
+    assert mask.shape == (m,) and mask.dtype == jnp.bool_
+    assert int(mask.sum()) == num_selected(m, alpha)
+
+
+def test_mask_deterministic_under_fixed_key():
+    key = jax.random.PRNGKey(42)
+    a = np.asarray(selection_mask(key, 16, 0.5))
+    b = np.asarray(selection_mask(key, 16, 0.5))
+    np.testing.assert_array_equal(a, b)
+    c = np.asarray(selection_mask(jax.random.PRNGKey(43), 16, 0.5))
+    assert not np.array_equal(a, c)  # different key -> different draw (whp)
+
+
+def test_mask_alpha_one_is_static_ones():
+    mask = selection_mask(jax.random.PRNGKey(0), 8, 1.0)
+    np.testing.assert_array_equal(np.asarray(mask), np.ones(8, bool))
+
+
+# --------------------------------------------------------------- policies
+def _roll(policy, rounds):
+    """Materialise `rounds` masks the way the engine does."""
+    ps = policy.init()
+    masks = []
+    for r in range(rounds):
+        mask, ps = policy.mask(ps, jnp.int32(r))
+        masks.append(np.asarray(mask))
+    return np.stack(masks)
+
+
+def test_base_policy_is_full_participation():
+    masks = _roll(ParticipationPolicy(6), 3)
+    np.testing.assert_array_equal(masks, np.ones((3, 6), bool))
+
+
+def test_uniform_cardinality_and_determinism():
+    pol = UniformParticipation(8, 0.5, seed=3)
+    masks = _roll(pol, 12)
+    assert masks.shape == (12, 8)
+    np.testing.assert_array_equal(masks.sum(axis=1), 4)
+    # same seed -> identical sequence; the policy state is the only RNG
+    np.testing.assert_array_equal(masks, _roll(UniformParticipation(8, 0.5, seed=3), 12))
+    # draws vary across rounds (12 identical rounds is ~impossible)
+    assert any(not np.array_equal(masks[0], mk) for mk in masks[1:])
+    # different seed -> different sequence
+    assert not np.array_equal(masks, _roll(UniformParticipation(8, 0.5, seed=4), 12))
+
+
+def test_uniform_is_uniform_over_clients():
+    masks = _roll(UniformParticipation(8, 0.25, seed=0), 400)
+    freq = masks.mean(axis=0)
+    np.testing.assert_allclose(freq, 0.25, atol=0.08)
+
+
+def test_weighted_cardinality_and_bias():
+    m = 8
+    weights = np.array([1, 1, 1, 1, 1, 1, 1, 20.0])
+    pol = WeightedParticipation(m, 0.25, weights, seed=0)
+    masks = _roll(pol, 300)
+    np.testing.assert_array_equal(masks.sum(axis=1), 2)
+    freq = masks.mean(axis=0)
+    # the heavy client participates in (nearly) every round, the light
+    # ones share the remaining slot
+    assert freq[-1] > 0.9
+    assert freq[:-1].max() < 0.5
+    np.testing.assert_array_equal(
+        masks, _roll(WeightedParticipation(m, 0.25, weights, seed=0), 300)
+    )
+
+
+def test_weighted_alpha_one_selects_all():
+    masks = _roll(WeightedParticipation(4, 1.0, np.arange(1.0, 5.0)), 3)
+    np.testing.assert_array_equal(masks, np.ones((3, 4), bool))
+
+
+def test_cyclic_blocks_and_coverage():
+    m, alpha = 8, 0.25  # |C| = 2 -> 4-round cycle
+    pol = CyclicParticipation(m, alpha)
+    masks = _roll(pol, 8)
+    np.testing.assert_array_equal(masks.sum(axis=1), 2)
+    # round 0 selects clients {0,1}, round 1 {2,3}, ...
+    np.testing.assert_array_equal(np.nonzero(masks[0])[0], [0, 1])
+    np.testing.assert_array_equal(np.nonzero(masks[1])[0], [2, 3])
+    # every client participates exactly once per 4-round cycle
+    np.testing.assert_array_equal(masks[:4].sum(axis=0), np.ones(m))
+    np.testing.assert_array_equal(masks[4:].sum(axis=0), np.ones(m))
+    # stateless: the mask is a pure function of the round index
+    np.testing.assert_array_equal(
+        np.asarray(pol.mask((), jnp.int32(1))[0]), masks[1]
+    )
+
+
+def test_cyclic_wraparound_block():
+    # m=6, |C|=4: round 1 starts at client 4 and wraps to {4,5,0,1}
+    masks = _roll(CyclicParticipation(6, 4 / 6), 2)
+    np.testing.assert_array_equal(np.nonzero(masks[1])[0], [0, 1, 4, 5])
+
+
+def test_availability_replays_trace_and_wraps():
+    trace = np.array([[1, 0, 1], [0, 1, 0]], bool)
+    pol = AvailabilityParticipation(3, trace)
+    masks = _roll(pol, 4)
+    np.testing.assert_array_equal(masks[0], trace[0])
+    np.testing.assert_array_equal(masks[1], trace[1])
+    np.testing.assert_array_equal(masks[2], trace[0])  # t mod T
+    np.testing.assert_array_equal(masks[3], trace[1])
+
+
+def test_availability_dead_round_falls_back_to_full():
+    trace = np.array([[0, 0, 0], [1, 0, 0]], bool)
+    masks = _roll(AvailabilityParticipation(3, trace), 2)
+    np.testing.assert_array_equal(masks[0], np.ones(3, bool))
+    np.testing.assert_array_equal(masks[1], trace[1])
+
+
+def test_availability_from_dropout_reproducible():
+    a = AvailabilityParticipation.from_dropout(8, 0.3, 32, seed=5)
+    b = AvailabilityParticipation.from_dropout(8, 0.3, 32, seed=5)
+    np.testing.assert_array_equal(np.asarray(a.trace), np.asarray(b.trace))
+    # drop rate lands near drop_prob
+    rate = 1.0 - np.asarray(a.trace).mean()
+    assert 0.15 < rate < 0.45
+
+
+# ---------------------------------------------------------------- factory
+def test_make_policy_kinds():
+    assert make_policy("full", 8) is None
+    assert isinstance(make_policy("uniform", 8, 0.5), UniformParticipation)
+    assert isinstance(make_policy("weighted", 8, 0.5), WeightedParticipation)
+    assert isinstance(make_policy("cyclic", 8, 0.5), CyclicParticipation)
+    assert isinstance(
+        make_policy("straggler", 8, drop_prob=0.1, horizon=16),
+        AvailabilityParticipation,
+    )
+    with pytest.raises(KeyError):
+        make_policy("nope", 8)
+    assert set(selection.POLICIES) == {
+        "full", "uniform", "weighted", "cyclic", "straggler"
+    }

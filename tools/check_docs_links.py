@@ -1,0 +1,41 @@
+#!/usr/bin/env python
+"""Fail if any relative markdown link in docs/ or README.md points at a
+file that does not exist (external http(s)/mailto links are skipped;
+anchors are stripped before the existence check). Run from the repo root:
+
+    python tools/check_docs_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def check(md: Path) -> list[str]:
+    errors = []
+    for target in LINK_RE.findall(md.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            errors.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    files = sorted((ROOT / "docs").glob("*.md")) + [ROOT / "README.md"]
+    errors = [e for f in files if f.exists() for e in check(f)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'FAIL' if errors else 'all links OK'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
