@@ -4,22 +4,31 @@
   fig1_convergence — paper Fig. 1 (k0 effect on iterations-to-converge)
   fig2_k0          — paper Fig. 2 (k0 effect on CR and wall time)
   fig3_alpha       — paper Fig. 3 (selection-fraction effect)
-  engine           — scan-compiled round engine vs per-round dispatch
+  engine           — scan vs legacy vs sharded vs async round engine
   participation    — in-engine alpha sweep (scan + sharded; one-psum check)
+  async            — CR/objective vs max_staleness (stale-x̄ engine)
   kernels_bench    — collapsed-vs-unrolled round + FedGiA-vs-FedAvg cost
   roofline         — §Roofline table from the dry-run artifacts
 
 Run everything:  PYTHONPATH=src python -m benchmarks.run
-One section:     PYTHONPATH=src python -m benchmarks.run --only table4
+One section:     PYTHONPATH=src python -m benchmarks.run --only engine
+
+Sections whose main() returns data are dumped, machine-readable, to
+BENCH_engine.json (path: --json) under their section name — for the
+engine section that is round/s for the scan, legacy, sharded and async
+paths — so the benchmark trajectory is diffable/plottable instead of
+scraped from stdout; CI uploads the file as an artifact.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
-from benchmarks import engine_bench, fig1_convergence, fig2_k0, fig3_alpha
-from benchmarks import kernels_bench, participation_bench, roofline, table4
+from benchmarks import async_bench, engine_bench, fig1_convergence, fig2_k0
+from benchmarks import fig3_alpha, kernels_bench, participation_bench
+from benchmarks import roofline, table4
 
 SECTIONS = {
     "table4": table4.main,
@@ -28,6 +37,7 @@ SECTIONS = {
     "fig3": fig3_alpha.main,
     "engine": engine_bench.main,
     "participation": participation_bench.main,
+    "async": async_bench.main,
     "kernels": kernels_bench.main,
     "roofline": roofline.main,
 }
@@ -36,13 +46,28 @@ SECTIONS = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=sorted(SECTIONS), default=None)
+    ap.add_argument("--json", default="BENCH_engine.json",
+                    help="where to write the machine-readable engine "
+                         "results (written when the engine section runs)")
     args = ap.parse_args()
     names = [args.only] if args.only else list(SECTIONS)
+    results = {}
     for name in names:
         print(f"\n===== {name} =====")
         t0 = time.time()
-        SECTIONS[name]()
+        out = SECTIONS[name]()
+        if out is not None:
+            results[name] = out
         print(f"----- {name} done in {time.time()-t0:.1f}s -----")
+    if results and args.json:
+        with open(args.json, "w") as f:
+            # sections return plain dict/list rows, but values may be
+            # numpy scalars — coerce anything non-JSON to float/str
+            json.dump(results, f, indent=2, sort_keys=True,
+                      default=lambda o: float(o)
+                      if hasattr(o, "__float__") else str(o))
+        print(f"\nwrote {args.json} "
+              f"({', '.join(sorted(results))})")
 
 
 if __name__ == "__main__":

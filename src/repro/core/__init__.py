@@ -1,4 +1,10 @@
-from repro.core.api import FederatedAlgorithm, make_algorithm
+from repro.core.api import (
+    FederatedAlgorithm,
+    StaleXbar,
+    init_stale_xbar,
+    make_algorithm,
+    stale_xbar_view,
+)
 from repro.core.engine import RoundResult, run_rounds, scan_steps
 from repro.core.selection import (
     AvailabilityParticipation,

@@ -12,6 +12,7 @@ that axis, which makes the SAME implementation work
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 from typing import Any, Callable, Dict, Optional, Protocol, Tuple
 
 import jax
@@ -21,6 +22,34 @@ LossFn = Callable[[Any, Any], Tuple[jax.Array, Dict[str, jax.Array]]]
 
 
 class FederatedAlgorithm(Protocol):
+    """Protocol every federated algorithm in this repo implements.
+
+    State contract: ``init`` returns a dict whose key ``"x"`` holds the
+    GLOBAL anchor (the server model / aggregated x̄) and whose
+    ``client_state_keys`` entries hold pytrees with a leading client axis
+    of size m — the engine shards exactly those (plus the batch) over the
+    mesh's client axis.
+
+    Round contract: ``round(state, batch, mask=None, stale=None)`` is pure.
+
+    * ``mask`` — the engine-drawn (m_local,) bool participation mask
+      (core/selection.py), already sliced to this shard's clients. True
+      means the client participates this round (for FedGiA: runs the
+      inexact-ADMM branch). ``None`` = the legacy in-algorithm behaviour
+      (FedGiA draws §V.B selection itself, baselines run full
+      participation).
+    * ``stale`` — a :class:`StaleXbar` carrying each client's possibly
+      stale view of the global anchor (async engine,
+      ``run_rounds(async_rounds=True)``). When given, ``mask`` must also
+      be given (it is the ARRIVAL process) and the round must (a) anchor
+      every client's local computation on the per-client view returned by
+      :func:`stale_xbar_view` instead of the fresh broadcast, and (b)
+      return a 3-tuple ``(state, stale', metrics)`` with the advanced
+      staleness state. With ``max_staleness=0`` the view is statically
+      the fresh anchor, so the round is bitwise identical to the
+      synchronous masked round.
+    """
+
     name: str
     # top-level state keys whose leaves carry the leading client axis —
     # the engine shards exactly these (plus the batch) over the mesh.
@@ -28,12 +57,8 @@ class FederatedAlgorithm(Protocol):
 
     def init(self, params0, rng, init_batch=None) -> Dict[str, Any]: ...
 
-    # `mask` is the engine-drawn participation mask (core/selection.py),
-    # already sliced to this shard's local clients; None = the legacy
-    # in-algorithm behaviour (FedGiA draws §V.B selection itself, the
-    # baselines run full participation).
     def round(
-        self, state, batch, mask: Optional[jax.Array] = None
+        self, state, batch, mask: Optional[jax.Array] = None, stale=None
     ) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]: ...
 
 
@@ -170,6 +195,137 @@ def per_client_value_and_grad(loss_fn: LossFn):
     """vmap(value_and_grad) over the stacked client batch, shared params."""
     vg = jax.value_and_grad(lambda p, b: loss_fn(p, b)[0])
     return jax.vmap(vg, in_axes=(None, 0))
+
+
+def per_client_value_and_grad_stacked(loss_fn: LossFn):
+    """vmap(value_and_grad) with PER-CLIENT params: in_axes=(0, 0).
+
+    The async engine's stale-x̄ rounds evaluate each client's gradient at
+    its own (possibly stale) anchor, so params carry the client axis too.
+    On identical (broadcast) anchors this is bitwise equal to the shared
+    variant above on every model in this repo (same contraction order).
+    """
+    vg = jax.value_and_grad(lambda p, b: loss_fn(p, b)[0])
+    return jax.vmap(vg, in_axes=(0, 0))
+
+
+# --------------------------------------------------------------------------
+# Stale-x̄ state (async / overlapped rounds). The server still aggregates
+# every round — eq. (11) stays the round's ONE model-size psum — but each
+# client anchors its local branch on the x̄ it last DOWNLOADED, which may
+# be up to `max_staleness` rounds old. The participation mask is the
+# arrival process: mask=True means the client uploads this round (its
+# contribution was computed against its stale view) and then downloads
+# the current x̄. See docs/async.md for the semantics and the
+# inexactness argument (arXiv:2204.10607) that licenses the staleness.
+# --------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class StaleXbar:
+    """Per-client stale view of the global anchor x̄ (rides in the scan carry).
+
+    Fields (all leading-axis (m,) — sharded over the client axis like any
+    `client_state_keys` entry):
+
+    * ``anchor`` — pytree, client i's last-downloaded x̄ (its local view).
+    * ``age`` — (m,) int32, rounds since client i's last download, as seen
+      ENTERING a round. ``init`` sets ``max_staleness + 1`` so every
+      client force-syncs at round 0 (nobody has downloaded anything yet).
+    * ``last_used`` — (m,) int32, the staleness s of the anchor client i
+      actually used in the round just run: its branch ran against x̄^(t-s).
+      The engine reports it as the per-round ``staleness`` metric; the
+      bounded-staleness invariant is ``last_used <= max_staleness``,
+      always (tests/test_async.py).
+    * ``max_staleness`` — static int bound. A client whose view would
+      exceed it is force-refreshed BEFORE computing (the server blocks on
+      over-stale clients), which is exactly why ``max_staleness=0``
+      degenerates to the synchronous masked engine, bitwise.
+    """
+
+    anchor: Any
+    age: jax.Array
+    last_used: jax.Array
+    max_staleness: int = 0
+
+    def tree_flatten(self):
+        return (self.anchor, self.age, self.last_used), self.max_staleness
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        anchor, age, last_used = children
+        return cls(anchor, age, last_used, aux)
+
+    @property
+    def always_fresh(self) -> bool:
+        """Statically true when max_staleness == 0: every client refreshes
+        every round, so algorithms can keep their synchronous (shared-
+        anchor) gradient path — bitwise identity by construction."""
+        return self.max_staleness == 0
+
+
+def init_stale_xbar(anchor, m: int, max_staleness: int) -> StaleXbar:
+    """Engine-side initial staleness state: the buffered view is a broadcast
+    of the initial global anchor (state["x"]), and `age` starts past the
+    bound so round 0 force-syncs every client to x̄⁰."""
+    return StaleXbar(
+        anchor=broadcast_clients(anchor, m),
+        age=jnp.full((m,), max_staleness + 1, jnp.int32),
+        last_used=jnp.zeros((m,), jnp.int32),
+        max_staleness=int(max_staleness),
+    )
+
+
+def stale_xbar_view(stale: StaleXbar, xbar, mask):
+    """The stale-buffer update: per-client anchor view + advanced state.
+
+    Called once per round by every algorithm, AFTER the round's fresh x̄
+    exists (for FedGiA that is eq. (11)'s aggregation — this helper is
+    pure elementwise selects, so eq. (11) stays the round's one psum).
+
+    Semantics, per client i at round t:
+
+    1. force-sync: if ``age_i > max_staleness`` the server blocks on the
+       client — it downloads x̄ᵗ before computing (bounded staleness).
+    2. the round's branch runs against ``anchor_i`` (staleness
+       ``s_used_i = 0`` if forced, else ``age_i`` — always
+       ``<= max_staleness``).
+    3. arrivals (``mask_i`` True, the arrival process) upload their
+       contribution and then download x̄ᵗ: their view re-anchors, age
+       resets to 1 for the next round. Non-arrivals keep their view and
+       age by one more round.
+
+    With ``max_staleness == 0`` the fresh broadcast is returned statically
+    (no selects), so the lowered round is the synchronous masked round.
+
+    Returns ``(anchor_c, stale')`` where ``anchor_c`` is the (m_local, ...)
+    stacked per-client anchor and ``stale'.last_used`` records s_used.
+    """
+    m_local = stale.age.shape[0]
+    if stale.always_fresh:
+        anchor_c = jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (m_local,) + l.shape), xbar
+        )
+        return anchor_c, StaleXbar(
+            anchor_c,
+            jnp.ones_like(stale.age),
+            jnp.zeros_like(stale.last_used),
+            0,
+        )
+    force = stale.age > stale.max_staleness
+    anchor_c = jax.tree.map(
+        lambda buf, fresh: jnp.where(_mask_bcast(force, buf), fresh, buf),
+        stale.anchor,
+        xbar,
+    )
+    s_used = jnp.where(force, 0, stale.age).astype(jnp.int32)
+    refresh = jnp.logical_or(mask, force)
+    buf = jax.tree.map(
+        lambda a, fresh: jnp.where(_mask_bcast(refresh, a), fresh, a),
+        anchor_c,
+        xbar,
+    )
+    age = jnp.where(refresh, 1, s_used + 1).astype(jnp.int32)
+    return anchor_c, StaleXbar(buf, age, s_used, stale.max_staleness)
 
 
 def make_algorithm(fed, loss_fn: LossFn, model=None):

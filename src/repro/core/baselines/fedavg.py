@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from repro.config import FedConfig
 from repro.core import api
-from repro.core.api import LossFn, broadcast_clients, per_client_value_and_grad
+from repro.core.api import LossFn, broadcast_clients
 from repro.core.baselines.common import lr_schedule, round_metrics
 from repro.utils import pytree as pt
 
@@ -25,7 +25,7 @@ class FedAvg:
         self.fed = fed
         self.loss_fn = loss_fn
         self.model = model
-        self._vg = per_client_value_and_grad(loss_fn)
+        self._vg_stacked = api.per_client_value_and_grad_stacked(loss_fn)
 
     def init(self, params0, rng, init_batch=None):
         sdt = jnp.dtype(self.fed.state_dtype)
@@ -36,10 +36,18 @@ class FedAvg:
             "rng": rng,
         }
 
-    def round(self, state, batch, mask=None):
+    def round(self, state, batch, mask=None, stale=None):
         fed = self.fed
         m = api.local_client_count(fed.num_clients)
-        xc = broadcast_clients(state["x"], m)
+        # stale-x̄ rounds (async engine): each client starts its k0 local
+        # steps from the x̄ it last downloaded instead of the fresh
+        # broadcast; the local math below is already per-client (stacked),
+        # so nothing else changes — and with max_staleness=0 the view IS
+        # the fresh broadcast, bitwise.
+        if stale is None:
+            xc = broadcast_clients(state["x"], m)
+        else:
+            xc, stale = api.stale_xbar_view(stale, state["x"], mask)
 
         def local_step(carry, j):
             x, first = carry
@@ -68,10 +76,6 @@ class FedAvg:
         )
         metrics = round_metrics(losses0, grads0, state["round"], mask=mask)
         metrics["local_grad_evals"] = jnp.float32(fed.k0)
+        if stale is not None:
+            return new_state, stale, metrics
         return new_state, metrics
-
-    def _vg_stacked(self, xc, batch):
-        vg = jax.vmap(
-            jax.value_and_grad(lambda p, b: self.loss_fn(p, b)[0]), in_axes=(0, 0)
-        )
-        return vg(xc, batch)

@@ -28,6 +28,7 @@ class FedPD:
         self.fed = fed
         self.loss_fn = loss_fn
         self.model = model
+        self._vg_stacked = api.per_client_value_and_grad_stacked(loss_fn)
 
     def init(self, params0, rng, init_batch=None):
         sdt = jnp.dtype(self.fed.state_dtype)
@@ -41,15 +42,20 @@ class FedPD:
             "rng": rng,
         }
 
-    def round(self, state, batch, mask=None):
+    def round(self, state, batch, mask=None, stale=None):
         fed = self.fed
         m = api.local_client_count(fed.num_clients)
         eta = fed.fedpd_eta
-        anchors = broadcast_clients(state["x"], m)
+        # stale-x̄ rounds: the per-client primal-dual anchor x̄_i resets to
+        # the client's last-downloaded global model, not the fresh one —
+        # the primal-dual updates tolerate the bounded perturbation
+        # (arXiv:2210.08106); bitwise-fresh when max_staleness=0.
+        if stale is None:
+            anchors = broadcast_clients(state["x"], m)
+        else:
+            anchors, stale = api.stale_xbar_view(stale, state["x"], mask)
 
-        vg = jax.vmap(
-            jax.value_and_grad(lambda p, b: self.loss_fn(p, b)[0]), in_axes=(0, 0)
-        )
+        vg = self._vg_stacked
 
         def local_step(carry, j):
             anchor, lam, first = carry
@@ -102,4 +108,6 @@ class FedPD:
         )
         metrics = round_metrics(losses0, grads0, state["round"], mask=mask)
         metrics["local_grad_evals"] = jnp.float32(fed.k0 * fed.inner_steps)
+        if stale is not None:
+            return new_state, stale, metrics
         return new_state, metrics

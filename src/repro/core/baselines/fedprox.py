@@ -21,6 +21,7 @@ class FedProx:
         self.fed = fed
         self.loss_fn = loss_fn
         self.model = model
+        self._vg_stacked = api.per_client_value_and_grad_stacked(loss_fn)
 
     def init(self, params0, rng, init_batch=None):
         sdt = jnp.dtype(self.fed.state_dtype)
@@ -31,15 +32,18 @@ class FedProx:
             "rng": rng,
         }
 
-    def round(self, state, batch, mask=None):
+    def round(self, state, batch, mask=None, stale=None):
         fed = self.fed
         m = api.local_client_count(fed.num_clients)
-        xbar = state["x"]
-        xc = broadcast_clients(xbar, m)
+        # stale-x̄ rounds: a straggler both starts from AND proxes toward
+        # its last-downloaded anchor (the prox center is the model it
+        # actually holds); bitwise-fresh when max_staleness=0.
+        if stale is None:
+            xc = broadcast_clients(state["x"], m)
+        else:
+            xc, stale = api.stale_xbar_view(stale, state["x"], mask)
 
-        vg = jax.vmap(
-            jax.value_and_grad(lambda p, b: self.loss_fn(p, b)[0]), in_axes=(0, 0)
-        )
+        vg = self._vg_stacked
 
         def prox_grad(x, plain_grads, anchor):
             return jax.tree.map(
@@ -80,4 +84,6 @@ class FedProx:
         )
         metrics = round_metrics(losses0, grads0, state["round"], mask=mask)
         metrics["local_grad_evals"] = jnp.float32(fed.k0 * fed.inner_steps)
+        if stale is not None:
+            return new_state, stale, metrics
         return new_state, metrics

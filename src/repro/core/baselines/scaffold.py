@@ -25,6 +25,7 @@ class Scaffold:
         self.fed = fed
         self.loss_fn = loss_fn
         self.model = model
+        self._vg_stacked = api.per_client_value_and_grad_stacked(loss_fn)
 
     def init(self, params0, rng, init_batch=None):
         sdt = jnp.dtype(self.fed.state_dtype)
@@ -40,16 +41,19 @@ class Scaffold:
             "rng": rng,
         }
 
-    def round(self, state, batch, mask=None):
+    def round(self, state, batch, mask=None, stale=None):
         fed = self.fed
         m = api.local_client_count(fed.num_clients)
-        xbar = state["x"]
-        xc = broadcast_clients(xbar, m)
+        # stale-x̄ rounds: local steps start from (and the option-II control
+        # update measures drift against) the client's last-downloaded
+        # anchor; bitwise-fresh when max_staleness=0.
+        if stale is None:
+            xc = broadcast_clients(state["x"], m)
+        else:
+            xc, stale = api.stale_xbar_view(stale, state["x"], mask)
         lr = lr_schedule(fed.lr, state["step"])
 
-        vg = jax.vmap(
-            jax.value_and_grad(lambda p, b: self.loss_fn(p, b)[0]), in_axes=(0, 0)
-        )
+        vg = self._vg_stacked
 
         def local_step(carry, j):
             y, first = carry
@@ -73,11 +77,13 @@ class Scaffold:
         )
 
         denom = fed.k0 * lr
+        # drift is measured against the anchor the client actually started
+        # from (xc == broadcast of the fresh x̄ in synchronous rounds)
         ci_new = jax.tree.map(
-            lambda ci, cc, xx, yy: ci - cc[None] + (xx[None] - yy) / denom,
+            lambda ci, cc, a, yy: ci - cc[None] + (a - yy) / denom,
             state["ci"],
             state["c"],
-            xbar,
+            xc,
             y,
         )
         # partial participation (SCAFFOLD §4): frozen clients keep their
@@ -102,4 +108,6 @@ class Scaffold:
         )
         metrics = round_metrics(losses0, grads0, state["round"], mask=mask)
         metrics["local_grad_evals"] = jnp.float32(fed.k0)
+        if stale is not None:
+            return new_state, stale, metrics
         return new_state, metrics

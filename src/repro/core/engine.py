@@ -27,6 +27,24 @@ not math. This engine removes both costs without changing a single number
     `round(state, batch, mask)` (auto-sliced per shard on the sharded
     path, where the masked aggregation still lowers to ONE psum). See
     docs/engine.md.
+  * **async / overlapped rounds** — `async_rounds=True` reinterprets the
+    participation mask as an ARRIVAL process: a `StaleXbar` buffer
+    (core/api.py) rides in the scan carry next to the policy state, and a
+    client that has not arrived for s rounds runs its branch against the
+    stale anchor x̄^(t-s), s <= `max_staleness` (bounded by a forced
+    server sync). `max_staleness=0` is bitwise identical to the masked
+    synchronous engine on every path. See docs/async.md.
+
+Scan-carry layout (donated between chunks):
+
+    (state, policy_state, stale, done, rounds_run)
+
+where `state` is the algorithm state dict, `policy_state` the
+participation policy's pytree (() when participation is None), `stale`
+the async `StaleXbar` (() when async_rounds is False), `done` the eq.-35
+stop flag and `rounds_run` an int32 round counter. The legacy loop
+threads the same tuple through its per-round jitted step, which is why
+scan == legacy holds exactly for every feature combination.
 """
 from __future__ import annotations
 
@@ -77,15 +95,25 @@ def _batch_specs(batch_like, axis: str):
 
 
 def make_round_fn(algo, mesh=None, client_axis: str = "data",
-                  masked: bool = False):
+                  masked: bool = False, stale: bool = False):
     """`algo.round`, optionally wrapped in `shard_map` over the client axis.
 
     `masked=True` returns a `(state, batch, mask) -> (state, metrics)`
     callable: the engine-drawn (m,) participation mask enters `shard_map`
     with spec `P(client_axis)`, so each shard's round body receives its
     own contiguous (m_local,) block — algorithms never re-slice it.
+
+    `stale=True` (implies masked) additionally threads the async
+    `StaleXbar` state: the callable is `(state, batch, mask, stale) ->
+    (state, stale, metrics)`. Every StaleXbar leaf carries the leading
+    client axis, so it enters and leaves `shard_map` with per-client
+    specs — the stale-anchor selects are shard-local and the round keeps
+    eq. (11) as its ONE model-size psum.
     """
     if mesh is None:
+        if stale:
+            return lambda state, batch, mask, sl: algo.round(
+                state, batch, mask, sl)
         if masked:
             return lambda state, batch, mask: algo.round(state, batch, mask)
         return algo.round
@@ -97,23 +125,37 @@ def make_round_fn(algo, mesh=None, client_axis: str = "data",
     if m % shards != 0:
         raise ValueError(f"num_clients={m} not divisible by {shards} shards")
 
-    def body(state, batch, *mask):
+    client_spec = lambda tree: jax.tree.map(
+        lambda l: _full_spec(client_axis, l.ndim), tree
+    )
+
+    def body(state, batch, *extra):
         # context makes api.client_mean/... collective over `client_axis`
         with api.client_sharding(client_axis, shards):
-            return algo.round(state, batch, *mask)
+            return algo.round(state, batch, *extra)
 
-    def sharded_round(state, batch, *mask):
-        abs_state, abs_met = jax.eval_shape(algo.round, state, batch, *mask)
+    def sharded_round(state, batch, *extra):
+        abs_out = jax.eval_shape(algo.round, state, batch, *extra)
         in_specs = (_state_specs(algo, state, client_axis),
                     _batch_specs(batch, client_axis))
-        if mask:
-            in_specs = in_specs + (P(client_axis),)
-        out_specs = (_state_specs(algo, abs_state, client_axis),
-                     jax.tree.map(lambda l: _full_spec(None, l.ndim), abs_met))
+        if masked or stale:
+            in_specs = in_specs + (P(client_axis),)  # the (m,) mask
+        if stale:
+            in_specs = in_specs + (client_spec(extra[1]),)
+            abs_state, abs_stale, abs_met = abs_out
+            out_specs = (_state_specs(algo, abs_state, client_axis),
+                         client_spec(abs_stale),
+                         jax.tree.map(lambda l: _full_spec(None, l.ndim),
+                                      abs_met))
+        else:
+            abs_state, abs_met = abs_out
+            out_specs = (_state_specs(algo, abs_state, client_axis),
+                         jax.tree.map(lambda l: _full_spec(None, l.ndim),
+                                      abs_met))
         return shard_map(
             body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             check_rep=False,
-        )(state, batch, *mask)
+        )(state, batch, *extra)
 
     return sharded_round
 
@@ -146,6 +188,8 @@ def run_rounds(
     mesh=None,
     client_axis: str = "data",
     participation=None,
+    async_rounds: bool = False,
+    max_staleness: int = 0,
 ) -> RoundResult:
     """Run up to `num_rounds` communication rounds of `algo`.
 
@@ -158,60 +202,92 @@ def run_rounds(
     in the scan carry and a fresh (m,) mask is drawn ON DEVICE each round
     and passed to `round(state, batch, mask)` (sliced per shard on the
     client-sharded path). None keeps the legacy in-algorithm behaviour.
+
+    async_rounds: overlapped (stale-x̄) rounds. Requires a participation
+    policy — its mask becomes the ARRIVAL process (who uploads/downloads
+    this round); an availability-trace policy is the natural choice. An
+    `api.StaleXbar` buffer rides in the scan carry: each client anchors
+    its branch on the x̄ it last downloaded, at most `max_staleness`
+    rounds old (over-stale clients are force-synced first). The history
+    gains a per-round `staleness` (m,) vector and `staleness_max` scalar.
+    `max_staleness=0` is bitwise identical to the synchronous masked
+    engine (tests/test_async.py pins this for all five algorithms).
     """
     if num_rounds <= 0:
         return RoundResult(state, {}, 0, False, 0.0)
     masked = participation is not None
-    round_fn = make_round_fn(algo, mesh, client_axis, masked=masked)
+    if async_rounds:
+        if not masked:
+            raise ValueError(
+                "async_rounds requires a participation policy — its mask is "
+                "the arrival process (e.g. selection.AvailabilityParticipation)"
+            )
+        if max_staleness < 0:
+            raise ValueError(f"max_staleness must be >= 0, got {max_staleness}")
+        if "x" not in state:
+            raise ValueError(
+                "async_rounds needs the global anchor under state['x'] "
+                "(FederatedAlgorithm state contract)"
+            )
+    round_fn = make_round_fn(algo, mesh, client_axis, masked=masked,
+                             stale=async_rounds)
     if mesh is not None:
         state, batch = shard_inputs(algo, state, batch, mesh, client_axis)
     if donate is None:
         # CPU XLA cannot alias buffers; donating would only emit warnings
         donate = jax.default_backend() != "cpu"
+    stale0 = (
+        api.init_stale_xbar(state["x"], algo.fed.num_clients, max_staleness)
+        if async_rounds else ()
+    )
     if not scan:
         return _run_legacy_loop(round_fn, state, batch, num_rounds, tol,
-                                tol_metric, participation)
+                                tol_metric, participation, stale0,
+                                async_rounds)
     if chunk_size <= 0:
         chunk_size = num_rounds if tol <= 0 else min(num_rounds, 32)
 
     pstate = participation.init() if masked else ()
 
-    def call_round(st, b, ps, n):
-        """One round + advanced policy state (mask drawn from the carry)."""
+    def call_round(st, b, ps, sl, n):
+        """One round + advanced policy/staleness state (drawn from the carry)."""
         if not masked:
             s2, met = round_fn(st, b)
-            return s2, ps, met
+            return s2, ps, sl, met
         mask, ps2 = participation.mask(ps, n)
+        if async_rounds:
+            s2, sl2, met = round_fn(st, b, mask, sl)
+            return s2, ps2, sl2, _with_staleness_metrics(met, sl2)
         s2, met = round_fn(st, b, mask)
-        return s2, ps2, met
+        return s2, ps2, sl, met
 
-    _, _, abs_met = jax.eval_shape(
-        call_round, state, batch, pstate, jnp.zeros((), jnp.int32)
+    _, _, _, abs_met = jax.eval_shape(
+        call_round, state, batch, pstate, stale0, jnp.zeros((), jnp.int32)
     )
 
     def chunk_fn(carry, batch, *, length):
         def step(carry, _):
-            st, ps, done, n = carry
+            st, ps, sl, done, n = carry
             if tol > 0:
                 def live(op):
-                    st_, ps_, b_, n_ = op
-                    s2, ps2, met = call_round(st_, b_, ps_, n_)
-                    return s2, ps2, met, met[tol_metric] < tol, n_ + 1
+                    st_, ps_, sl_, b_, n_ = op
+                    s2, ps2, sl2, met = call_round(st_, b_, ps_, sl_, n_)
+                    return s2, ps2, sl2, met, met[tol_metric] < tol, n_ + 1
 
                 def frozen(op):
-                    st_, ps_, _, n_ = op
+                    st_, ps_, sl_, _, n_ = op
                     zeros = jax.tree.map(
                         lambda l: jnp.zeros(l.shape, l.dtype), abs_met
                     )
-                    return st_, ps_, zeros, jnp.ones((), bool), n_
+                    return st_, ps_, sl_, zeros, jnp.ones((), bool), n_
 
-                s2, ps2, met, d2, n2 = jax.lax.cond(
-                    done, frozen, live, (st, ps, batch, n)
+                s2, ps2, sl2, met, d2, n2 = jax.lax.cond(
+                    done, frozen, live, (st, ps, sl, batch, n)
                 )
             else:
-                s2, ps2, met = call_round(st, batch, ps, n)
+                s2, ps2, sl2, met = call_round(st, batch, ps, sl, n)
                 d2, n2 = done, n + 1
-            return (s2, ps2, d2, n2), met
+            return (s2, ps2, sl2, d2, n2), met
 
         return jax.lax.scan(step, carry, None, length=length)
 
@@ -232,7 +308,8 @@ def run_rounds(
             )
         return chunks[length]
 
-    carry = (state, pstate, jnp.zeros((), bool), jnp.zeros((), jnp.int32))
+    carry = (state, pstate, stale0, jnp.zeros((), bool),
+             jnp.zeros((), jnp.int32))
 
     if mesh is None:
         # Pre-compile (AOT) every chunk length this run can need — at most
@@ -261,9 +338,9 @@ def run_rounds(
         carry, mets = get_chunk(c)(carry, batch)
         chunk_metrics.append(mets)
         remaining -= c
-        if tol > 0 and bool(carry[2]):  # the chunk's ONE host sync
+        if tol > 0 and bool(carry[3]):  # the chunk's ONE host sync
             break
-    state, _, done, n = carry
+    state, _, _, done, n = carry
     jax.block_until_ready(n)
     wall = time.time() - t0
 
@@ -277,35 +354,56 @@ def run_rounds(
     return RoundResult(state, history, rounds_run, stopped, wall)
 
 
+def _with_staleness_metrics(met, stale):
+    """Append the async staleness diagnostics to a round's metric dict:
+    `staleness` — the (m,) per-client staleness of the anchor each client
+    used this round (stacks to a (rounds, m) history) — and its max."""
+    met = dict(met)
+    met["staleness"] = stale.last_used
+    met["staleness_max"] = jnp.max(stale.last_used)
+    return met
+
+
 def _run_legacy_loop(round_fn, state, batch, num_rounds, tol, tol_metric,
-                     participation=None):
+                     participation=None, stale0=(), async_rounds=False):
     """Per-round jit dispatch + per-round host sync (the --no-scan path).
 
     With a participation policy the per-round jitted step also advances the
     policy state and draws the round's mask — the same pure `policy.mask`
     sequence as the scan path, so masks (and results) agree between paths.
+    The async `StaleXbar` state threads through the step the same way, so
+    async scan == async legacy holds exactly as well.
     """
     if participation is None:
-        def step(st, ps, b, n):
+        def step(st, ps, sl, b, n):
             s2, met = round_fn(st, b)
-            return s2, ps, met
+            return s2, ps, sl, met
         pstate = ()
+    elif async_rounds:
+        def step(st, ps, sl, b, n):
+            mask, ps2 = participation.mask(ps, n)
+            s2, sl2, met = round_fn(st, b, mask, sl)
+            return s2, ps2, sl2, _with_staleness_metrics(met, sl2)
+        pstate = participation.init()
     else:
-        def step(st, ps, b, n):
+        def step(st, ps, sl, b, n):
             mask, ps2 = participation.mask(ps, n)
             s2, met = round_fn(st, b, mask)
-            return s2, ps2, met
+            return s2, ps2, sl, met
         pstate = participation.init()
+    sstate = stale0
     rfn = jax.jit(step)
     # warm-up compile outside the timed region (same convention as the
     # scan path's AOT pre-compile); round is pure, the result is discarded
-    _s, _ps, _m = rfn(state, pstate, batch, jnp.zeros((), jnp.int32))
+    _s, _ps, _sl, _m = rfn(state, pstate, sstate, batch,
+                           jnp.zeros((), jnp.int32))
     jax.block_until_ready(_m)
     hist = []
     stopped = False
     t0 = time.time()
     for i in range(num_rounds):
-        state, pstate, met = rfn(state, pstate, batch, jnp.int32(i))
+        state, pstate, sstate, met = rfn(state, pstate, sstate, batch,
+                                         jnp.int32(i))
         met_h = jax.device_get(met)
         hist.append(met_h)
         if tol > 0 and float(met_h[tol_metric]) < tol:

@@ -47,6 +47,8 @@ class FedGiA:
         self.loss_fn = loss_fn
         self.model = model
         self._vg = per_client_value_and_grad(loss_fn)
+        # stale-x̄ rounds: each client's gradient at its OWN anchor
+        self._vg_per_anchor = api.per_client_value_and_grad_stacked(loss_fn)
 
     # ------------------------------------------------------------------ init
     def init(self, params0, rng, init_batch=None) -> Dict[str, Any]:
@@ -159,25 +161,29 @@ class FedGiA:
         return x_new, pi_new, z_new
 
     # ----------------------------------------------------------------- round
-    def round(self, state, batch, mask=None):
+    def round(self, state, batch, mask=None, stale=None):
+        """One communication round (Algorithm 1, steps (1)-(5)).
+
+        `mask`: engine participation mask = the ADMM/GD branch split.
+        `stale`: async stale-x̄ state (`api.StaleXbar`). When given (mask
+        required), each client's gradient and branch anchor is its own
+        possibly stale view x̄^(t-s) instead of the fresh x̄ᵗ — the
+        inexact-ADMM analysis tolerates the bounded perturbation (see
+        docs/async.md). The server-side aggregation (eq. 11) and state
+        update are untouched: eq. (11) stays the round's one psum.
+        """
         fed = self.fed
         m = fed.num_clients
         m_local = api.local_client_count(m)
         sdt = jnp.dtype(fed.state_dtype)
         sigma = state["sigma"]
+        assert stale is None or mask is not None, (
+            "stale-x̄ rounds need the engine arrival mask"
+        )
 
         # (1) aggregation — the round's ONLY model-size communication
         # (under client sharding this is the single psum of the round)
         xbar = api.client_mean(state["z"])  # eq. (11)
-
-        # (2) per-client gradient at x̄, once per round
-        xbar_model = (
-            pt.tree_cast(xbar, self.model.dtype)
-            if self.model is not None and hasattr(self.model, "dtype")
-            else xbar
-        )
-        losses, grads = self._vg(xbar_model, batch)
-        gbar = pt.tree_cast(pt.tree_scale(grads, 1.0 / m), sdt)  # ḡ_i
 
         # (3) client selection. The engine-drawn participation mask (when
         # given) decides the branch split and arrives pre-sliced to this
@@ -195,8 +201,26 @@ class FedGiA:
         else:
             sel = mask
 
+        # (2) per-client gradient, once per round. Synchronous (and
+        # statically-fresh async) rounds evaluate at the shared x̄; stale
+        # rounds evaluate at each client's own anchor view.
+        cast = (
+            (lambda t: pt.tree_cast(t, self.model.dtype))
+            if self.model is not None and hasattr(self.model, "dtype")
+            else (lambda t: t)
+        )
+        if stale is None or stale.always_fresh:
+            if stale is not None:
+                xbar_c, stale = api.stale_xbar_view(stale, xbar, sel)
+            else:
+                xbar_c = broadcast_clients(xbar, m_local)
+            losses, grads = self._vg(cast(xbar), batch)
+        else:
+            xbar_c, stale = api.stale_xbar_view(stale, xbar, sel)
+            losses, grads = self._vg_per_anchor(cast(xbar_c), batch)
+        gbar = pt.tree_cast(pt.tree_scale(grads, 1.0 / m), sdt)  # ḡ_i
+
         # (4) both branches, masked combine
-        xbar_c = broadcast_clients(xbar, m_local)
         xa, pia, za = self._admm_branch(state, xbar_c, gbar)
         pig = pt.tree_scale(gbar, -1.0)  # eq. (16)
         zg = pt.tree_axpy(-1.0 / sigma, gbar, xbar_c)  # eq. (17)
@@ -219,6 +243,8 @@ class FedGiA:
             "cr": 2.0 * (state["round"] + 1).astype(jnp.float32),
             "local_grad_evals": jnp.float32(1.0),  # per client per round (C2)
         }
+        if stale is not None:
+            return new_state, stale, metrics
         return new_state, metrics
 
     # ------------------------------------------------------------ diagnostics

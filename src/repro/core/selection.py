@@ -13,6 +13,15 @@ Masks are dense (every client's update is computed, non-participants are
 masked out at the aggregation / state-combine step): on SPMD hardware this
 is the only shape-stable formulation, and it is exactly how the paper's
 own branch split works — see docs/engine.md.
+
+Arrival-process view (async engine): under `run_rounds(async_rounds=True)`
+the same mask is reinterpreted as WHO COMMUNICATES this round — mask=True
+means the client uploads its (stale-anchored) contribution and downloads
+the current x̄; mask=False means it is still offline and keeps working
+against its last-downloaded x̄ (see docs/async.md). Trace-driven policies
+are the natural arrival processes: `AvailabilityParticipation` replays a
+measured availability trace, and `from_periods` builds the deterministic
+heterogeneous-speed trace where client i arrives every p_i rounds.
 """
 from __future__ import annotations
 
@@ -143,7 +152,16 @@ class AvailabilityParticipation(ParticipationPolicy):
     """Replay a (T, m) bool availability trace (heterogeneous-client /
     straggler scenario): round t uses row t mod T. A row with no available
     client falls back to full participation so aggregation never divides
-    by zero. `alpha` is not used (cardinality varies per round)."""
+    by zero (in the async arrival reading: an idle server round syncs
+    everyone). `alpha` is not used (cardinality varies per round).
+
+    Under the async engine the trace IS the arrival process: trace[t, i]
+    is "client i communicates at round t". Between two True entries the
+    client's staleness grows one round per row (capped by the engine's
+    `max_staleness` forced sync) — so a measured availability trace
+    directly induces the staleness distribution the stale-x̄ variant is
+    exposed to.
+    """
 
     name = "availability"
 
@@ -165,6 +183,26 @@ class AvailabilityParticipation(ParticipationPolicy):
         trace = rng.random((horizon, m)) >= drop_prob
         return cls(m, trace)
 
+    @classmethod
+    def from_periods(cls, m: int, periods, horizon: int = 256
+                     ) -> "AvailabilityParticipation":
+        """Deterministic heterogeneous-speed arrivals: client i
+        communicates every `periods[i]` rounds (first arrival at round 0,
+        so every client starts synchronized). This is the variance-free
+        arrival process for the async engine — after the round-0 sync,
+        client i's staleness cycles 1, ..., p_i deterministically (capped
+        by the engine's max_staleness force-sync; even a period-1 client
+        carries the one-round pipeline delay of computing while the
+        server aggregates) — and the reference scenario of
+        benchmarks/async_bench.py. `horizon` must cover the run (the
+        trace replays modulo its length, which breaks periodicity for
+        p_i that do not divide it)."""
+        p = np.asarray(periods, np.int64)
+        assert p.shape == (m,), f"periods must be (m={m},), got {p.shape}"
+        assert (p >= 1).all(), f"periods must be >= 1, got {p}"
+        t = np.arange(horizon)[:, None]
+        return cls(m, (t % p[None, :]) == 0)
+
     def init(self):
         return ()
 
@@ -174,7 +212,7 @@ class AvailabilityParticipation(ParticipationPolicy):
         return jnp.where(row.any(), row, jnp.ones_like(row)), pstate
 
 
-POLICIES = ("full", "uniform", "weighted", "cyclic", "straggler")
+POLICIES = ("full", "uniform", "weighted", "cyclic", "straggler", "periodic")
 
 
 def make_policy(
@@ -186,10 +224,16 @@ def make_policy(
     weights=None,
     drop_prob: float = 0.2,
     horizon: int = 256,
+    periods=None,
 ) -> Optional[ParticipationPolicy]:
     """CLI-level factory. `kind="full"` returns None: the engine then runs
     the legacy in-algorithm path (FedGiA keeps its internal §V.B draw,
-    baselines run full participation) — byte-compatible with pre-mask runs."""
+    baselines run full participation) — byte-compatible with pre-mask runs.
+
+    `kind="periodic"` builds the deterministic heterogeneous-speed arrival
+    process (`from_periods`); `periods` defaults to speeds cycling 1..4
+    rounds across clients (launch: --arrival-periods for explicit ones).
+    """
     if kind == "full":
         return None
     if kind == "uniform":
@@ -206,4 +250,8 @@ def make_policy(
         return AvailabilityParticipation.from_dropout(
             m, drop_prob, horizon, seed=seed
         )
+    if kind == "periodic":
+        if periods is None:
+            periods = 1 + (np.arange(m) % 4)
+        return AvailabilityParticipation.from_periods(m, periods, horizon)
     raise KeyError(f"unknown participation policy {kind!r}: {POLICIES}")

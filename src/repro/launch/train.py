@@ -15,6 +15,11 @@ per-round mask is drawn on device (inside the compiled scan) and fed to
 every algorithm — FedGiA uses it as its ADMM/GD branch split, the
 baselines freeze masked-out clients (see docs/engine.md).
 
+`--async` turns the participation mask into an ARRIVAL process and runs
+staleness-aware overlapped rounds: a straggler works against the x̄ it
+last downloaded, at most `--max-staleness` rounds old (see docs/async.md).
+`--max-staleness 0` is bitwise identical to the synchronous masked run.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --problem linreg --algo fedgia \
       --clients 128 --k0 10 --rounds 200 --tol 1e-7
@@ -113,6 +118,16 @@ def train(args) -> dict:
             raise SystemExit(
                 f"--client-weights needs {args.clients} values, got {len(weights)}"
             )
+    periods = None
+    periods_arg = getattr(args, "arrival_periods", "")
+    if periods_arg:
+        if kind != "periodic":
+            raise SystemExit("--arrival-periods requires --participation periodic")
+        periods = [int(p) for p in periods_arg.split(",")]
+        if len(periods) != args.clients:
+            raise SystemExit(
+                f"--arrival-periods needs {args.clients} values, got {len(periods)}"
+            )
     policy = make_policy(
         kind,
         args.clients,
@@ -121,21 +136,35 @@ def train(args) -> dict:
         weights=weights,
         drop_prob=getattr(args, "drop_prob", 0.2),
         horizon=max(args.rounds, 1),
+        periods=periods,
     )
     if policy is not None:
-        if kind == "straggler":
-            log.info("participation: %s policy (per-round varying |C|, "
-                     "drop_prob=%.2f), m=%d",
-                     kind, getattr(args, "drop_prob", 0.2), args.clients)
+        if kind in ("straggler", "periodic"):
+            log.info("participation: %s policy (per-round varying |C|), m=%d",
+                     kind, args.clients)
         else:
             log.info("participation: %s policy, alpha=%.2f (|C|=%d of m=%d)",
                      kind, args.alpha, policy.n_selected, args.clients)
+
+    async_rounds = getattr(args, "async_rounds", False)
+    max_staleness = getattr(args, "max_staleness", 0)
+    if max_staleness and not async_rounds:
+        raise SystemExit("--max-staleness requires --async")
+    if async_rounds:
+        if policy is None:
+            raise SystemExit(
+                "--async needs an arrival process: pass --participation "
+                "straggler/periodic/... (the mask is who communicates)"
+            )
+        log.info("async rounds: stale-x̄ engine, max_staleness=%d",
+                 max_staleness)
 
     res = run_rounds(
         algo, state, batch, args.rounds,
         tol=args.tol, scan=not getattr(args, "no_scan", False),
         chunk_size=getattr(args, "chunk", 0), mesh=mesh,
         participation=policy,
+        async_rounds=async_rounds, max_staleness=max_staleness,
     )
     history = [
         {"round": r, "f": float(res.history["f_xbar"][r]),
@@ -158,6 +187,11 @@ def train(args) -> dict:
         "wall_s": res.wall_s,
         "history": history,
     }
+    if async_rounds:
+        result["max_staleness"] = max_staleness
+        result["staleness_max_seen"] = int(res.history["staleness_max"].max())
+        log.info("async: max staleness actually used = %d (bound %d)",
+                 result["staleness_max_seen"], max_staleness)
     if args.checkpoint_dir:
         save_checkpoint(args.checkpoint_dir, res.rounds_run, res.state,
                         extra={"algo": args.algo})
@@ -197,13 +231,26 @@ def main():
                          "(paper §V.B alpha-sampling), weighted "
                          "(sampling weighted by --client-weights), cyclic "
                          "(round-robin blocks), straggler (iid "
-                         "availability dropout)")
+                         "availability dropout), periodic (deterministic "
+                         "heterogeneous arrival speeds)")
     ap.add_argument("--client-weights", default="",
                     help="comma-separated per-client sampling weights "
                          "(e.g. local data sizes) for --participation "
                          "weighted; default: equal weights")
     ap.add_argument("--drop-prob", type=float, default=0.2,
                     help="per-round client dropout prob (straggler policy)")
+    ap.add_argument("--arrival-periods", default="",
+                    help="comma-separated per-client arrival periods for "
+                         "--participation periodic (client i communicates "
+                         "every p_i rounds); default: speeds cycling 1..4")
+    ap.add_argument("--async", dest="async_rounds", action="store_true",
+                    help="staleness-aware overlapped rounds: the "
+                         "participation mask becomes the arrival process "
+                         "and stragglers work against their last-"
+                         "downloaded x̄ (docs/async.md)")
+    ap.add_argument("--max-staleness", type=int, default=0,
+                    help="bound on the stale-x̄ age in rounds (--async); "
+                         "0 = bitwise-identical to the synchronous run")
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--rounds", type=int, default=100)
     ap.add_argument("--tol", type=float, default=1e-7)

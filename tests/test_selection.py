@@ -175,8 +175,13 @@ def test_make_policy_kinds():
         make_policy("straggler", 8, drop_prob=0.1, horizon=16),
         AvailabilityParticipation,
     )
+    assert isinstance(
+        make_policy("periodic", 8, periods=[1, 2, 3, 4, 1, 2, 3, 4],
+                    horizon=16),
+        AvailabilityParticipation,
+    )
     with pytest.raises(KeyError):
         make_policy("nope", 8)
     assert set(selection.POLICIES) == {
-        "full", "uniform", "weighted", "cyclic", "straggler"
+        "full", "uniform", "weighted", "cyclic", "straggler", "periodic"
     }

@@ -1,9 +1,19 @@
 #!/usr/bin/env python
-"""Fail if any relative markdown link in docs/ or README.md points at a
-file that does not exist (external http(s)/mailto links are skipped;
-anchors are stripped before the existence check). Run from the repo root:
+"""Docs hygiene check, run from the repo root (CI docs job):
 
     python tools/check_docs_links.py
+
+Fails if any relative markdown link in docs/ or README.md
+
+  * points at a file that does not exist, or
+  * carries a `#fragment` that matches no heading in the target markdown
+    file (STALE ANCHOR — e.g. a generated docs/api.md section that was
+    renamed or removed).
+
+External http(s)/mailto links are skipped. Heading slugs follow the
+GitHub rule (lowercase, punctuation stripped, spaces to hyphens);
+headings inside fenced code blocks are ignored. Duplicate-heading
+numbering (`#foo-1`) is accepted against the base slug.
 """
 from __future__ import annotations
 
@@ -12,28 +22,62 @@ import sys
 from pathlib import Path
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.+?)\s*$")
 ROOT = Path(__file__).resolve().parent.parent
 
 
-def check(md: Path) -> list[str]:
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, keep [a-z0-9 _-], spaces->'-'."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)  # drops backticks, punctuation, unicode marks
+    return s.replace(" ", "-")
+
+
+def heading_slugs(md: Path) -> set[str]:
+    slugs: set[str] = set()
+    in_fence = False
+    for line in md.read_text().splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if m:
+            slugs.add(slugify(m.group(1)))
+    return slugs
+
+
+def check(md: Path, slug_cache: dict) -> list[str]:
     errors = []
     for target in LINK_RE.findall(md.read_text()):
-        if target.startswith(("http://", "https://", "mailto:", "#")):
+        if target.startswith(("http://", "https://", "mailto:")):
             continue
-        path = target.split("#", 1)[0]
-        resolved = (md.parent / path).resolve()
+        path, _, frag = target.partition("#")
+        resolved = (md.parent / path).resolve() if path else md
         if not resolved.exists():
             errors.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+            continue
+        if frag and resolved.suffix == ".md":
+            if resolved not in slug_cache:
+                slug_cache[resolved] = heading_slugs(resolved)
+            base = re.sub(r"-\d+$", "", frag)
+            if frag not in slug_cache[resolved] and base not in slug_cache[resolved]:
+                errors.append(
+                    f"{md.relative_to(ROOT)}: stale anchor -> {target} "
+                    f"(no such heading in {resolved.name})"
+                )
     return errors
 
 
 def main() -> int:
     files = sorted((ROOT / "docs").glob("*.md")) + [ROOT / "README.md"]
-    errors = [e for f in files if f.exists() for e in check(f)]
+    slug_cache: dict = {}
+    errors = [e for f in files if f.exists() for e in check(f, slug_cache)]
     for e in errors:
         print(e, file=sys.stderr)
     print(f"checked {len(files)} files: "
-          f"{'FAIL' if errors else 'all links OK'}")
+          f"{'FAIL' if errors else 'all links and anchors OK'}")
     return 1 if errors else 0
 
 

@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Generate docs/api.md from the round-engine public surface's docstrings.
+
+The reference covers `repro.core.engine`, `repro.core.selection` and
+`repro.core.api` — the modules whose docstrings carry the engine
+contracts (scan-carry layout, mask contract, staleness fields). Symbols
+are emitted in source order; classes include their public methods.
+
+    PYTHONPATH=src python tools/gen_api_docs.py            # (re)write
+    PYTHONPATH=src python tools/gen_api_docs.py --check    # CI freshness
+
+`--check` exits 1 if docs/api.md does not match what the current
+docstrings generate, so a docstring edit that is not regenerated (or a
+hand edit to the generated file) fails CI alongside
+tools/check_docs_links.py's stale-anchor check.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import inspect
+import sys
+import textwrap
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+OUT = ROOT / "docs" / "api.md"
+MODULES = ("repro.core.engine", "repro.core.selection", "repro.core.api")
+
+HEADER = """\
+# API reference (generated)
+
+Engine-layer public surface, generated from docstrings by
+[`tools/gen_api_docs.py`](../tools/gen_api_docs.py) — do **not** edit by
+hand (CI regenerates and diffs it). Narrative docs:
+[engine.md](engine.md), [async.md](async.md), [paper_map.md](paper_map.md).
+"""
+
+
+def _doc(obj) -> str:
+    d = inspect.getdoc(obj)
+    return d.strip() if d else "*(no docstring)*"
+
+
+def _signature(obj) -> str:
+    try:
+        return str(inspect.signature(obj))
+    except (TypeError, ValueError):
+        return "(...)"
+
+
+def _source_line(obj) -> int:
+    try:
+        return inspect.getsourcelines(obj)[1]
+    except (OSError, TypeError):
+        return 1 << 30
+
+
+def _public_members(mod):
+    members = []
+    for name, obj in vars(mod).items():
+        if name.startswith("_"):
+            continue
+        if not (inspect.isclass(obj) or inspect.isfunction(obj)):
+            continue
+        if getattr(obj, "__module__", None) != mod.__name__:
+            continue
+        members.append((_source_line(obj), name, obj))
+    return [(n, o) for _, n, o in sorted(members, key=lambda t: (t[0], t[1]))]
+
+
+def _class_methods(cls):
+    methods = []
+    for name, obj in vars(cls).items():
+        if name.startswith("_") or name in ("tree_flatten", "tree_unflatten"):
+            continue
+        fn = None
+        if inspect.isfunction(obj):
+            fn = obj
+        elif isinstance(obj, (classmethod, staticmethod)):
+            fn = obj.__func__
+        elif isinstance(obj, property):
+            fn = obj.fget
+        if fn is None or not fn.__doc__:
+            continue
+        methods.append((_source_line(fn), name, fn, isinstance(obj, property)))
+    return sorted(methods, key=lambda t: (t[0], t[1]))
+
+
+def generate() -> str:
+    parts = [HEADER]
+    for modname in MODULES:
+        mod = importlib.import_module(modname)
+        parts.append(f"\n## `{modname}`\n")
+        parts.append(_doc(mod))
+        parts.append("")
+        for name, obj in _public_members(mod):
+            parts.append(f"\n### `{name}`\n")
+            if inspect.isclass(obj):
+                bases = [b.__name__ for b in obj.__bases__
+                         if b is not object and b.__name__ != "Protocol"]
+                base_s = f"({', '.join(bases)})" if bases else ""
+                parts.append(f"```python\nclass {name}{base_s}\n```\n")
+                parts.append(_doc(obj))
+                for _, mname, fn, is_prop in _class_methods(obj):
+                    sig = "" if is_prop else _signature(fn)
+                    kind = "property " if is_prop else ""
+                    parts.append(f"\n**`{kind}{name}.{mname}{sig}`**\n")
+                    parts.append(textwrap.indent(_doc(fn), ""))
+            else:
+                parts.append(f"```python\n{name}{_signature(obj)}\n```\n")
+                parts.append(_doc(obj))
+            parts.append("")
+    return "\n".join(parts).rstrip() + "\n"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="fail if docs/api.md is stale instead of writing")
+    args = ap.parse_args()
+    text = generate()
+    if args.check:
+        current = OUT.read_text() if OUT.exists() else ""
+        if current != text:
+            print("docs/api.md is stale — regenerate with "
+                  "`PYTHONPATH=src python tools/gen_api_docs.py`",
+                  file=sys.stderr)
+            return 1
+        print("docs/api.md is up to date")
+        return 0
+    OUT.write_text(text)
+    print(f"wrote {OUT.relative_to(ROOT)} ({len(text.splitlines())} lines)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
