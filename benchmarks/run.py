@@ -7,6 +7,8 @@
   engine           — scan vs legacy vs sharded vs async round engine
   participation    — in-engine alpha sweep (scan + sharded; one-psum check)
   async            — CR/objective vs max_staleness (stale-x̄ engine)
+  wallclock        — time-to-target vs straggler severity (clock engine;
+                     also writes BENCH_wallclock.json)
   kernels_bench    — collapsed-vs-unrolled round + FedGiA-vs-FedAvg cost
   roofline         — §Roofline table from the dry-run artifacts
 
@@ -28,7 +30,7 @@ import time
 
 from benchmarks import async_bench, engine_bench, fig1_convergence, fig2_k0
 from benchmarks import fig3_alpha, kernels_bench, participation_bench
-from benchmarks import roofline, table4
+from benchmarks import roofline, table4, wallclock_bench
 
 SECTIONS = {
     "table4": table4.main,
@@ -38,6 +40,7 @@ SECTIONS = {
     "engine": engine_bench.main,
     "participation": participation_bench.main,
     "async": async_bench.main,
+    "wallclock": wallclock_bench.main,
     "kernels": kernels_bench.main,
     "roofline": roofline.main,
 }

@@ -3,7 +3,14 @@ from repro.core.api import (
     StaleXbar,
     init_stale_xbar,
     make_algorithm,
+    stale_weights,
     stale_xbar_view,
+)
+from repro.core.clock import (
+    ComputeClock,
+    LognormalClock,
+    TraceClock,
+    make_clock,
 )
 from repro.core.engine import RoundResult, run_rounds, scan_steps
 from repro.core.selection import (

@@ -104,7 +104,8 @@ def _mask_bcast(mask: jax.Array, leaf: jax.Array) -> jax.Array:
     return mask.reshape((mask.shape[0],) + (1,) * (leaf.ndim - 1))
 
 
-def client_mean(tree, axis: int = 0, mask: Optional[jax.Array] = None):
+def client_mean(tree, axis: int = 0, mask: Optional[jax.Array] = None,
+                weights: Optional[jax.Array] = None):
     """Mean over the (possibly sharded) leading client axis of a pytree.
 
     This is eq. (11)'s aggregation: under sharding it lowers to the round's
@@ -121,21 +122,43 @@ def client_mean(tree, axis: int = 0, mask: Optional[jax.Array] = None):
     with the same reduction order); under sharding the two paths reduce
     in different orders (pmean of local means vs psum of local sums) and
     agree only to fp tolerance. Policies guarantee >= 1 participant.
+
+    With `weights` (a (m_local,) f32 vector, e.g. `stale_weights`'s decay
+    in anchor age) it becomes the normalised weighted mean
+    Σ w_i·x_i / Σ w_i — the staleness-aware reading of eq. (11) where old
+    z_i are downweighted instead of averaged uniformly. A mask folds into
+    the weights (masked-out clients get weight 0) and the weight sum rides
+    in the SAME psum as the numerators, so the round still issues exactly
+    one model-size all-reduce (HLO-asserted in tests/test_wallclock.py).
+    `weights=None` keeps the unweighted paths above BITWISE — uniform
+    staleness weighting passes None, which is why it is free.
     """
-    if mask is None:
-        local = jax.tree.map(lambda x: jnp.mean(x, axis=axis), tree)
+    if weights is None:
+        if mask is None:
+            local = jax.tree.map(lambda x: jnp.mean(x, axis=axis), tree)
+            if _CLIENT_AXIS is not None:
+                name = _CLIENT_AXIS[0]
+                local = jax.tree.map(lambda x: jax.lax.pmean(x, name), local)
+            return local
+        assert axis == 0, "masked client_mean supports leading-axis stacking only"
+        num = jax.tree.map(
+            lambda x: jnp.sum(jnp.where(_mask_bcast(mask, x), x, 0), axis=0), tree
+        )
+        cnt = jnp.sum(mask.astype(jnp.float32))
         if _CLIENT_AXIS is not None:
-            name = _CLIENT_AXIS[0]
-            local = jax.tree.map(lambda x: jax.lax.pmean(x, name), local)
-        return local
-    assert axis == 0, "masked client_mean supports leading-axis stacking only"
+            num, cnt = jax.lax.psum((num, cnt), _CLIENT_AXIS[0])
+        return jax.tree.map(lambda s: s / cnt.astype(s.dtype), num)
+    assert axis == 0, "weighted client_mean supports leading-axis stacking only"
+    w = weights.astype(jnp.float32)
+    if mask is not None:
+        w = jnp.where(mask, w, 0.0)
     num = jax.tree.map(
-        lambda x: jnp.sum(jnp.where(_mask_bcast(mask, x), x, 0), axis=0), tree
+        lambda x: jnp.sum(_mask_bcast(w, x).astype(x.dtype) * x, axis=0), tree
     )
-    cnt = jnp.sum(mask.astype(jnp.float32))
+    den = jnp.sum(w)
     if _CLIENT_AXIS is not None:
-        num, cnt = jax.lax.psum((num, cnt), _CLIENT_AXIS[0])
-    return jax.tree.map(lambda s: s / cnt.astype(s.dtype), num)
+        num, den = jax.lax.psum((num, den), _CLIENT_AXIS[0])
+    return jax.tree.map(lambda s: s / den.astype(s.dtype), num)
 
 
 def client_scalar_mean(x: jax.Array) -> jax.Array:
@@ -240,20 +263,29 @@ class StaleXbar:
       exceed it is force-refreshed BEFORE computing (the server blocks on
       over-stale clients), which is exactly why ``max_staleness=0``
       degenerates to the synchronous masked engine, bitwise.
+    * ``weighting`` / ``decay`` — static staleness-aware aggregation
+      schedule (see :func:`stale_weights`): how much eq. (11) downweights
+      a contribution computed against an s-rounds-old anchor.
+      ``"uniform"`` (default) is today's unweighted path, bitwise.
     """
 
     anchor: Any
     age: jax.Array
     last_used: jax.Array
     max_staleness: int = 0
+    weighting: str = "uniform"
+    decay: float = 1.0
 
     def tree_flatten(self):
-        return (self.anchor, self.age, self.last_used), self.max_staleness
+        return (
+            (self.anchor, self.age, self.last_used),
+            (self.max_staleness, self.weighting, self.decay),
+        )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         anchor, age, last_used = children
-        return cls(anchor, age, last_used, aux)
+        return cls(anchor, age, last_used, *aux)
 
     @property
     def always_fresh(self) -> bool:
@@ -263,15 +295,61 @@ class StaleXbar:
         return self.max_staleness == 0
 
 
-def init_stale_xbar(anchor, m: int, max_staleness: int) -> StaleXbar:
+STALE_WEIGHTINGS = ("uniform", "poly", "exp")
+
+
+def init_stale_xbar(anchor, m: int, max_staleness: int,
+                    weighting: str = "uniform",
+                    decay: float = 1.0) -> StaleXbar:
     """Engine-side initial staleness state: the buffered view is a broadcast
     of the initial global anchor (state["x"]), and `age` starts past the
-    bound so round 0 force-syncs every client to x̄⁰."""
+    bound so round 0 force-syncs every client to x̄⁰. `weighting`/`decay`
+    select the staleness-aware aggregation schedule (`stale_weights`)."""
+    if weighting not in STALE_WEIGHTINGS:
+        raise ValueError(
+            f"unknown stale weighting {weighting!r}: {STALE_WEIGHTINGS}"
+        )
+    if weighting != "uniform" and decay <= 0:
+        # a negative decay would silently UPweight the stalest anchors —
+        # the opposite of the documented schedule
+        raise ValueError(f"stale weighting decay must be > 0, got {decay}")
     return StaleXbar(
         anchor=broadcast_clients(anchor, m),
         age=jnp.full((m,), max_staleness + 1, jnp.int32),
         last_used=jnp.zeros((m,), jnp.int32),
         max_staleness=int(max_staleness),
+        weighting=weighting,
+        decay=float(decay),
+    )
+
+
+def stale_weights(stale: Optional[StaleXbar]) -> Optional[jax.Array]:
+    """Per-client aggregation weights for staleness-aware eq. (11).
+
+    A contribution computed against an s-rounds-old anchor is one more
+    bounded inexactness (arXiv:2204.10607); adaptive-aggregation results
+    (arXiv:2205.02719) say to REWEIGHT it rather than average uniformly.
+    Schedules (s = ``stale.last_used``, the age of the anchor the
+    client's current contribution was computed against):
+
+    * ``"uniform"`` — returns None: `client_mean` keeps its unweighted
+      path, bitwise (this is why uniform weighting costs nothing).
+    * ``"poly"`` — w_i = (1 + s_i)^(-decay), polynomial decay in age.
+    * ``"exp"`` — w_i = exp(-decay · s_i), exponential decay in age.
+
+    The result feeds ``client_mean(..., weights=...)``, which normalises
+    by Σw (so fresh-only rounds reduce to the plain mean) and keeps
+    eq. (11) a single model-size psum under sharding.
+    """
+    if stale is None or stale.weighting == "uniform":
+        return None
+    s = stale.last_used.astype(jnp.float32)
+    if stale.weighting == "poly":
+        return (1.0 + s) ** (-stale.decay)
+    if stale.weighting == "exp":
+        return jnp.exp(-stale.decay * s)
+    raise ValueError(
+        f"unknown stale weighting {stale.weighting!r}: {STALE_WEIGHTINGS}"
     )
 
 
@@ -310,6 +388,8 @@ def stale_xbar_view(stale: StaleXbar, xbar, mask):
             jnp.ones_like(stale.age),
             jnp.zeros_like(stale.last_used),
             0,
+            stale.weighting,
+            stale.decay,
         )
     force = stale.age > stale.max_staleness
     anchor_c = jax.tree.map(
@@ -325,7 +405,8 @@ def stale_xbar_view(stale: StaleXbar, xbar, mask):
         xbar,
     )
     age = jnp.where(refresh, 1, s_used + 1).astype(jnp.int32)
-    return anchor_c, StaleXbar(buf, age, s_used, stale.max_staleness)
+    return anchor_c, StaleXbar(buf, age, s_used, stale.max_staleness,
+                               stale.weighting, stale.decay)
 
 
 def make_algorithm(fed, loss_fn: LossFn, model=None):

@@ -67,8 +67,13 @@ class FedAvg:
             local_step, (xc, first0), jnp.arange(fed.k0)
         )
         # partial participation: only masked-in clients are aggregated
-        # (FedAvg has no per-client carry-over state to freeze)
-        x_new = api.client_mean(xc_new, mask=mask)
+        # (FedAvg has no per-client carry-over state to freeze). Under a
+        # non-uniform staleness weighting, a trajectory started from an
+        # s-rounds-old anchor is downweighted by decay in s (post-view
+        # `last_used` = the age of the anchor these k0 steps ran against);
+        # weights=None (uniform / sync) keeps this path bitwise.
+        x_new = api.client_mean(xc_new, mask=mask,
+                                weights=api.stale_weights(stale))
 
         new_state = dict(state)
         new_state.update(

@@ -97,7 +97,10 @@ class FedPD:
         # contribute their (stale) anchors to the aggregation
         if mask is not None:
             lam_new = api.masked_update(mask, lam_new, state["lam"])
-        x_new = api.client_mean(anchors_new, mask=mask)
+        # staleness-aware weights downweight anchors rebuilt from an old
+        # download (None = uniform = bitwise unweighted)
+        x_new = api.client_mean(anchors_new, mask=mask,
+                                weights=api.stale_weights(stale))
 
         new_state = dict(state)
         new_state.update(

@@ -75,8 +75,11 @@ class FedProx:
         (xc_new, (losses0, grads0)), _ = jax.lax.scan(
             local_step, (xc, first0), jnp.arange(fed.k0)
         )
-        # partial participation: aggregate over masked-in clients only
-        x_new = api.client_mean(xc_new, mask=mask)
+        # partial participation: aggregate over masked-in clients only;
+        # staleness-aware weights downweight trajectories proxed toward an
+        # old anchor (None = uniform = bitwise unweighted)
+        x_new = api.client_mean(xc_new, mask=mask,
+                                weights=api.stale_weights(stale))
 
         new_state = dict(state)
         new_state.update(

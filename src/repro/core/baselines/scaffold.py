@@ -92,7 +92,12 @@ class Scaffold:
         # clients contribute a zero delta, giving the paper's |S|/N scaling.
         if mask is not None:
             ci_new = api.masked_update(mask, ci_new, state["ci"])
-        x_new = api.client_mean(y, mask=mask)
+        # staleness-aware weights downweight trajectories run from an old
+        # anchor (None = uniform = bitwise unweighted); the control-variate
+        # mean below keeps the paper's uniform 1/N scaling regardless —
+        # the variates CORRECT drift, they are not model mass to reweight
+        x_new = api.client_mean(y, mask=mask,
+                                weights=api.stale_weights(stale))
         c_new = pt.tree_add(
             state["c"],
             api.client_mean(pt.tree_sub(ci_new, state["ci"])),

@@ -1,0 +1,208 @@
+"""Wall-clock simulation: per-client compute/communication time models.
+
+The async engine (docs/async.md) counts staleness in ROUNDS, but the
+paper's cost accounting (§V, Table 4) is about TIME: a client that is one
+round late because its device is slow is not the same as one round late on
+a fast device. A `ComputeClock` closes that gap by simulating each
+client's wall-clock — how long one unit of local work (download + compute
++ upload) takes — and deriving the engine's per-round ARRIVAL MASK from
+the simulated finish times instead of sampling it from a
+`ParticipationPolicy` trace.
+
+Event-driven semantics (`run_rounds(clock=...)`, which implies
+`async_rounds=True`):
+
+  * every client holds an in-flight work item finishing at simulated time
+    ``busy_until[i]``; the clock state rides in the engine's scan carry
+    exactly like a participation-policy state.
+  * the server is event-driven: each round it advances its simulated time
+    to the EARLIEST client finish, ``now' = max(now, min_i busy_until)``,
+    so at least one client arrives every round (the engine's >= 1
+    participant invariant holds by construction).
+  * the round's arrival mask is ``busy_until <= now'`` — whoever has
+    finished by the time the server wakes up uploads this round. Arrivals
+    then download the fresh x̄ and start a new work item:
+    ``busy_until[i] = now' + d_i`` with ``d_i`` drawn from the model.
+  * the engine reports ``now'`` as the per-round ``sim_time`` history —
+    time-to-target-accuracy is ``sim_time`` at the stopping round
+    (benchmarks/wallclock_bench.py).
+
+Initial state is ``busy_until = now = 0``: round 0 syncs everyone, which
+matches the async engine's round-0 force-sync.
+
+Two degenerate identities pin the model (tests/test_wallclock.py):
+
+  * equal constant speeds ⇒ every client arrives every round ⇒ bitwise
+    identical to the async engine under a full-participation arrival
+    process;
+  * constant integer speeds with a unit-speed client present ⇒ the mask
+    sequence equals `AvailabilityParticipation.from_periods` with the
+    speeds as periods — the clock GENERALISES the periodic trace policy
+    (which is why the arrival process is now clock-backed end to end).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# (mask, sim_time_now, advanced clock state) — what `tick` returns
+TickResult = Tuple[jax.Array, jax.Array, Any]
+
+
+def _per_client(x, m: int, name: str) -> jax.Array:
+    """Broadcast a scalar or validate an (m,) array of per-client seconds."""
+    arr = jnp.asarray(x, jnp.float32)
+    if arr.ndim == 0:
+        arr = jnp.full((m,), arr)
+    if arr.shape != (m,):
+        raise ValueError(
+            f"{name} must be scalar or (m={m},), got {arr.shape}"
+        )
+    return arr
+
+
+class ComputeClock:
+    """Base clock: CONSTANT per-client durations (compute_s + comm_s).
+
+    ``compute_s`` / ``comm_s`` are per-client seconds for one unit of
+    local work and one upload+download; a work item's duration is their
+    sum. Durations must be strictly positive (a zero-duration client
+    would arrive every round without ever advancing simulated time).
+    """
+
+    name = "constant"
+
+    def __init__(self, m: int, compute_s=1.0, comm_s=0.0):
+        if m < 1:
+            raise ValueError("need at least one client")
+        self.m = m
+        self.compute_s = _per_client(compute_s, m, "compute_s")
+        self.comm_s = _per_client(comm_s, m, "comm_s")
+        total = np.asarray(self.compute_s) + np.asarray(self.comm_s)
+        if not (total > 0).all():
+            raise ValueError(f"work-item durations must be > 0, got {total}")
+        self.durations_s = self.compute_s + self.comm_s
+
+    def init(self) -> Dict[str, Any]:
+        """Clock carry state: in-flight finish times + the server's simulated
+        time. ``busy_until = now = 0`` makes round 0 sync every client."""
+        return {
+            "busy_until": jnp.zeros((self.m,), jnp.float32),
+            "now": jnp.zeros((), jnp.float32),
+        }
+
+    def _draw(self, cstate, round_idx):
+        """Durations of work STARTED this round + any advanced sampler state.
+        Pure and traceable (called inside the engine's compiled scan)."""
+        return self.durations_s, cstate
+
+    def tick(self, cstate, round_idx) -> TickResult:
+        """One server event: advance simulated time to the earliest client
+        finish, derive the arrival mask, restart arrived clients.
+
+        Returns ``(mask, now, cstate')`` — the (m,) bool arrival mask (at
+        least one True), the simulated time at which this round happens,
+        and the advanced clock state. Pure and traceable; the engine calls
+        it from the scan carry exactly like ``ParticipationPolicy.mask``,
+        so clock-driven scan == clock-driven legacy holds the same way.
+        """
+        busy = cstate["busy_until"]
+        now = jnp.maximum(cstate["now"], jnp.min(busy))
+        mask = busy <= now
+        d, cstate = self._draw(cstate, round_idx)
+        cs2 = dict(cstate)
+        cs2.update(busy_until=jnp.where(mask, now + d, busy), now=now)
+        return mask, now, cs2
+
+
+class LognormalClock(ComputeClock):
+    """Lognormal compute-time jitter: each work item's compute time is
+    ``compute_s[i] * exp(sigma * N(0, 1))`` (median = ``compute_s``),
+    communication time stays constant. The PRNG key rides in the clock
+    state, so the duration sequence is a pure function of ``seed`` —
+    identical across the scan and legacy engine paths."""
+
+    name = "lognormal"
+
+    def __init__(self, m: int, compute_s=1.0, comm_s=0.0, sigma: float = 0.5,
+                 seed: int = 0):
+        super().__init__(m, compute_s, comm_s)
+        if sigma < 0:
+            raise ValueError(f"sigma must be >= 0, got {sigma}")
+        self.sigma = float(sigma)
+        self.seed = seed
+
+    def init(self):
+        cs = super().init()
+        cs["key"] = jax.random.PRNGKey(self.seed)
+        return cs
+
+    def _draw(self, cstate, round_idx):
+        key, sub = jax.random.split(cstate["key"])
+        jitter = jnp.exp(self.sigma * jax.random.normal(sub, (self.m,)))
+        cs2 = dict(cstate)
+        cs2["key"] = key
+        return self.compute_s * jitter + self.comm_s, cs2
+
+
+class TraceClock(ComputeClock):
+    """Trace-driven durations: a (T, m) table of measured per-work-item
+    seconds; work started at round t uses row ``t mod T`` (replayed
+    modulo the trace length). Use for profiles captured from a real
+    heterogeneous fleet."""
+
+    name = "trace"
+
+    def __init__(self, m: int, trace):
+        tr = np.asarray(trace, np.float32)
+        if tr.ndim != 2 or tr.shape[1] != m:
+            raise ValueError(f"trace must be (T, m={m}), got {tr.shape}")
+        if not (tr > 0).all():
+            raise ValueError("trace durations must be > 0")
+        super().__init__(m, compute_s=tr[0], comm_s=0.0)
+        self.trace = jnp.asarray(tr)
+
+    def _draw(self, cstate, round_idx):
+        t = jnp.asarray(round_idx, jnp.int32) % self.trace.shape[0]
+        return jnp.take(self.trace, t, axis=0), cstate
+
+
+CLOCKS = ("constant", "lognormal", "trace")
+
+
+def default_speeds(m: int) -> np.ndarray:
+    """Heterogeneous default: per-client compute seconds cycling 1..4 —
+    the wall-clock twin of `selection.make_policy("periodic")`'s default
+    periods, so the two arrival processes are comparable out of the box."""
+    return 1.0 + (np.arange(m) % 4).astype(np.float32)
+
+
+def make_clock(
+    kind: str,
+    m: int,
+    *,
+    compute_s=None,
+    comm_s=0.0,
+    sigma: float = 0.5,
+    seed: int = 0,
+    trace=None,
+) -> Optional[ComputeClock]:
+    """CLI-level factory (launch: --clock/--client-speeds). ``kind="none"``
+    returns None — rounds stay trace- or policy-driven. ``compute_s``
+    defaults to `default_speeds` (per-client seconds cycling 1..4)."""
+    if kind == "none":
+        return None
+    if compute_s is None:
+        compute_s = default_speeds(m)
+    if kind == "constant":
+        return ComputeClock(m, compute_s, comm_s)
+    if kind == "lognormal":
+        return LognormalClock(m, compute_s, comm_s, sigma=sigma, seed=seed)
+    if kind == "trace":
+        if trace is None:
+            raise ValueError("trace clock needs a (T, m) duration table")
+        return TraceClock(m, trace)
+    raise KeyError(f"unknown clock {kind!r}: {CLOCKS} or 'none'")

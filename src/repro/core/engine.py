@@ -34,17 +34,27 @@ not math. This engine removes both costs without changing a single number
     stale anchor x̄^(t-s), s <= `max_staleness` (bounded by a forced
     server sync). `max_staleness=0` is bitwise identical to the masked
     synchronous engine on every path. See docs/async.md.
+  * **wall-clock rounds** — `clock=` takes a `core.clock.ComputeClock`
+    (per-client compute/communication time model) and makes the arrival
+    mask EVENT-DRIVEN: the clock's state (in-flight finish times +
+    simulated server time) rides in the scan carry and each round's mask
+    is derived from simulated client finish times instead of sampled
+    from a policy. Rounds report the simulated wall-clock (`sim_time`)
+    alongside CR, and `stale_weighting=` turns eq. (11) into the
+    staleness-aware weighted mean (`api.stale_weights`) — uniform
+    weighting is today's unweighted path, bitwise. See docs/async.md.
 
 Scan-carry layout (donated between chunks):
 
-    (state, policy_state, stale, done, rounds_run)
+    (state, policy_state, clock_state, stale, done, rounds_run)
 
 where `state` is the algorithm state dict, `policy_state` the
-participation policy's pytree (() when participation is None), `stale`
-the async `StaleXbar` (() when async_rounds is False), `done` the eq.-35
-stop flag and `rounds_run` an int32 round counter. The legacy loop
-threads the same tuple through its per-round jitted step, which is why
-scan == legacy holds exactly for every feature combination.
+participation policy's pytree (() when participation is None),
+`clock_state` the wall-clock simulation state (() when clock is None),
+`stale` the async `StaleXbar` (() when async_rounds is False), `done`
+the eq.-35 stop flag and `rounds_run` an int32 round counter. The legacy
+loop threads the same tuple through its per-round jitted step, which is
+why scan == legacy holds exactly for every feature combination.
 """
 from __future__ import annotations
 
@@ -190,6 +200,9 @@ def run_rounds(
     participation=None,
     async_rounds: bool = False,
     max_staleness: int = 0,
+    clock=None,
+    stale_weighting: str = "uniform",
+    stale_decay: float = 1.0,
 ) -> RoundResult:
     """Run up to `num_rounds` communication rounds of `algo`.
 
@@ -203,24 +216,61 @@ def run_rounds(
     and passed to `round(state, batch, mask)` (sliced per shard on the
     client-sharded path). None keeps the legacy in-algorithm behaviour.
 
-    async_rounds: overlapped (stale-x̄) rounds. Requires a participation
-    policy — its mask becomes the ARRIVAL process (who uploads/downloads
-    this round); an availability-trace policy is the natural choice. An
-    `api.StaleXbar` buffer rides in the scan carry: each client anchors
-    its branch on the x̄ it last downloaded, at most `max_staleness`
-    rounds old (over-stale clients are force-synced first). The history
-    gains a per-round `staleness` (m,) vector and `staleness_max` scalar.
+    async_rounds: overlapped (stale-x̄) rounds. Requires an arrival
+    process — either a participation policy (its mask becomes WHO
+    uploads/downloads this round) or a `clock`. An `api.StaleXbar` buffer
+    rides in the scan carry: each client anchors its branch on the x̄ it
+    last downloaded, at most `max_staleness` rounds old (over-stale
+    clients are force-synced first). The history gains a per-round
+    `staleness` (m,) vector and `staleness_max` scalar.
     `max_staleness=0` is bitwise identical to the synchronous masked
     engine (tests/test_async.py pins this for all five algorithms).
+
+    clock: a `core.clock.ComputeClock` — wall-clock event-driven rounds
+    (implies async_rounds; mutually exclusive with `participation`). The
+    clock's state rides in the scan carry and each round's arrival mask
+    is DERIVED from simulated client finish times; the history gains the
+    per-round simulated wall-clock `sim_time`. With identical client
+    speeds every client arrives every round — bitwise identical to a
+    full-participation arrival policy (tests/test_wallclock.py).
+
+    stale_weighting/stale_decay: staleness-aware aggregation schedule for
+    eq. (11) (`api.stale_weights`): "uniform" (default, today's
+    unweighted path — bitwise), "poly" ((1+s)^-decay) or "exp"
+    (e^(-decay*s)). Requires async_rounds (or clock).
     """
     if num_rounds <= 0:
         return RoundResult(state, {}, 0, False, 0.0)
-    masked = participation is not None
+    if clock is not None:
+        if participation is not None:
+            raise ValueError(
+                "clock= and participation= are mutually exclusive: the "
+                "clock DERIVES the arrival mask from simulated finish "
+                "times (core/clock.py), a policy samples it"
+            )
+        if clock.m != algo.fed.num_clients:
+            raise ValueError(
+                f"clock models {clock.m} clients, algorithm has "
+                f"{algo.fed.num_clients}"
+            )
+        async_rounds = True  # a clock IS an arrival process
+    if stale_weighting not in api.STALE_WEIGHTINGS:
+        raise ValueError(
+            f"unknown stale_weighting {stale_weighting!r}: "
+            f"{api.STALE_WEIGHTINGS}"
+        )
+    if stale_weighting != "uniform" and not async_rounds:
+        raise ValueError(
+            "stale_weighting only applies to async rounds — pass "
+            "async_rounds=True (with a participation policy) or clock="
+        )
+    masked = participation is not None or clock is not None
     if async_rounds:
         if not masked:
             raise ValueError(
-                "async_rounds requires a participation policy — its mask is "
-                "the arrival process (e.g. selection.AvailabilityParticipation)"
+                "async_rounds requires an arrival process — a participation "
+                "policy (e.g. selection.AvailabilityParticipation) or a "
+                "clock (core.clock.ComputeClock)"
             )
         if max_staleness < 0:
             raise ValueError(f"max_staleness must be >= 0, got {max_staleness}")
@@ -237,57 +287,68 @@ def run_rounds(
         # CPU XLA cannot alias buffers; donating would only emit warnings
         donate = jax.default_backend() != "cpu"
     stale0 = (
-        api.init_stale_xbar(state["x"], algo.fed.num_clients, max_staleness)
+        api.init_stale_xbar(state["x"], algo.fed.num_clients, max_staleness,
+                            weighting=stale_weighting, decay=stale_decay)
         if async_rounds else ()
     )
     if not scan:
         return _run_legacy_loop(round_fn, state, batch, num_rounds, tol,
                                 tol_metric, participation, stale0,
-                                async_rounds)
+                                async_rounds, clock)
     if chunk_size <= 0:
         chunk_size = num_rounds if tol <= 0 else min(num_rounds, 32)
 
-    pstate = participation.init() if masked else ()
+    pstate = participation.init() if participation is not None else ()
+    cstate = clock.init() if clock is not None else ()
 
-    def call_round(st, b, ps, sl, n):
-        """One round + advanced policy/staleness state (drawn from the carry)."""
+    def call_round(st, b, ps, cs, sl, n):
+        """One round + advanced policy/clock/staleness state (from the carry)."""
+        if clock is not None:
+            mask, now, cs2 = clock.tick(cs, n)
+            s2, sl2, met = round_fn(st, b, mask, sl)
+            met = _with_staleness_metrics(met, sl2)
+            met["sim_time"] = now
+            return s2, ps, cs2, sl2, met
         if not masked:
             s2, met = round_fn(st, b)
-            return s2, ps, sl, met
+            return s2, ps, cs, sl, met
         mask, ps2 = participation.mask(ps, n)
         if async_rounds:
             s2, sl2, met = round_fn(st, b, mask, sl)
-            return s2, ps2, sl2, _with_staleness_metrics(met, sl2)
+            return s2, ps2, cs, sl2, _with_staleness_metrics(met, sl2)
         s2, met = round_fn(st, b, mask)
-        return s2, ps2, sl, met
+        return s2, ps2, cs, sl, met
 
-    _, _, _, abs_met = jax.eval_shape(
-        call_round, state, batch, pstate, stale0, jnp.zeros((), jnp.int32)
+    _, _, _, _, abs_met = jax.eval_shape(
+        call_round, state, batch, pstate, cstate, stale0,
+        jnp.zeros((), jnp.int32)
     )
 
     def chunk_fn(carry, batch, *, length):
         def step(carry, _):
-            st, ps, sl, done, n = carry
+            st, ps, cs, sl, done, n = carry
             if tol > 0:
                 def live(op):
-                    st_, ps_, sl_, b_, n_ = op
-                    s2, ps2, sl2, met = call_round(st_, b_, ps_, sl_, n_)
-                    return s2, ps2, sl2, met, met[tol_metric] < tol, n_ + 1
+                    st_, ps_, cs_, sl_, b_, n_ = op
+                    s2, ps2, cs2, sl2, met = call_round(st_, b_, ps_, cs_,
+                                                        sl_, n_)
+                    return (s2, ps2, cs2, sl2, met,
+                            met[tol_metric] < tol, n_ + 1)
 
                 def frozen(op):
-                    st_, ps_, sl_, _, n_ = op
+                    st_, ps_, cs_, sl_, _, n_ = op
                     zeros = jax.tree.map(
                         lambda l: jnp.zeros(l.shape, l.dtype), abs_met
                     )
-                    return st_, ps_, sl_, zeros, jnp.ones((), bool), n_
+                    return st_, ps_, cs_, sl_, zeros, jnp.ones((), bool), n_
 
-                s2, ps2, sl2, met, d2, n2 = jax.lax.cond(
-                    done, frozen, live, (st, ps, sl, batch, n)
+                s2, ps2, cs2, sl2, met, d2, n2 = jax.lax.cond(
+                    done, frozen, live, (st, ps, cs, sl, batch, n)
                 )
             else:
-                s2, ps2, sl2, met = call_round(st, batch, ps, sl, n)
+                s2, ps2, cs2, sl2, met = call_round(st, batch, ps, cs, sl, n)
                 d2, n2 = done, n + 1
-            return (s2, ps2, sl2, d2, n2), met
+            return (s2, ps2, cs2, sl2, d2, n2), met
 
         return jax.lax.scan(step, carry, None, length=length)
 
@@ -308,7 +369,7 @@ def run_rounds(
             )
         return chunks[length]
 
-    carry = (state, pstate, stale0, jnp.zeros((), bool),
+    carry = (state, pstate, cstate, stale0, jnp.zeros((), bool),
              jnp.zeros((), jnp.int32))
 
     if mesh is None:
@@ -338,9 +399,9 @@ def run_rounds(
         carry, mets = get_chunk(c)(carry, batch)
         chunk_metrics.append(mets)
         remaining -= c
-        if tol > 0 and bool(carry[3]):  # the chunk's ONE host sync
+        if tol > 0 and bool(carry[4]):  # the chunk's ONE host sync
             break
-    state, _, _, done, n = carry
+    state, _, _, _, done, n = carry
     jax.block_until_ready(n)
     wall = time.time() - t0
 
@@ -365,45 +426,55 @@ def _with_staleness_metrics(met, stale):
 
 
 def _run_legacy_loop(round_fn, state, batch, num_rounds, tol, tol_metric,
-                     participation=None, stale0=(), async_rounds=False):
+                     participation=None, stale0=(), async_rounds=False,
+                     clock=None):
     """Per-round jit dispatch + per-round host sync (the --no-scan path).
 
     With a participation policy the per-round jitted step also advances the
     policy state and draws the round's mask — the same pure `policy.mask`
     sequence as the scan path, so masks (and results) agree between paths.
-    The async `StaleXbar` state threads through the step the same way, so
-    async scan == async legacy holds exactly as well.
+    The async `StaleXbar` state and the wall-clock simulation state thread
+    through the step the same way, so async/clock scan == legacy holds
+    exactly as well.
     """
-    if participation is None:
-        def step(st, ps, sl, b, n):
+    if clock is not None:
+        def step(st, ps, cs, sl, b, n):
+            mask, now, cs2 = clock.tick(cs, n)
+            s2, sl2, met = round_fn(st, b, mask, sl)
+            met = _with_staleness_metrics(met, sl2)
+            met["sim_time"] = now
+            return s2, ps, cs2, sl2, met
+        pstate, cstate = (), clock.init()
+    elif participation is None:
+        def step(st, ps, cs, sl, b, n):
             s2, met = round_fn(st, b)
-            return s2, ps, sl, met
-        pstate = ()
+            return s2, ps, cs, sl, met
+        pstate, cstate = (), ()
     elif async_rounds:
-        def step(st, ps, sl, b, n):
+        def step(st, ps, cs, sl, b, n):
             mask, ps2 = participation.mask(ps, n)
             s2, sl2, met = round_fn(st, b, mask, sl)
-            return s2, ps2, sl2, _with_staleness_metrics(met, sl2)
-        pstate = participation.init()
+            return s2, ps2, cs, sl2, _with_staleness_metrics(met, sl2)
+        pstate, cstate = participation.init(), ()
     else:
-        def step(st, ps, sl, b, n):
+        def step(st, ps, cs, sl, b, n):
             mask, ps2 = participation.mask(ps, n)
             s2, met = round_fn(st, b, mask)
-            return s2, ps2, sl, met
-        pstate = participation.init()
+            return s2, ps2, cs, sl, met
+        pstate, cstate = participation.init(), ()
     sstate = stale0
     rfn = jax.jit(step)
     # warm-up compile outside the timed region (same convention as the
     # scan path's AOT pre-compile); round is pure, the result is discarded
-    _s, _ps, _sl, _m = rfn(state, pstate, sstate, batch,
-                           jnp.zeros((), jnp.int32))
+    _s, _ps, _cs, _sl, _m = rfn(state, pstate, cstate, sstate, batch,
+                                jnp.zeros((), jnp.int32))
     jax.block_until_ready(_m)
     hist = []
     stopped = False
     t0 = time.time()
     for i in range(num_rounds):
-        state, pstate, sstate, met = rfn(state, pstate, sstate, batch,
-                                         jnp.int32(i))
+        state, pstate, cstate, sstate, met = rfn(state, pstate, cstate,
+                                                 sstate, batch, jnp.int32(i))
         met_h = jax.device_get(met)
         hist.append(met_h)
         if tol > 0 and float(met_h[tol_metric]) < tol:

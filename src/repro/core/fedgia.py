@@ -169,8 +169,12 @@ class FedGiA:
         required), each client's gradient and branch anchor is its own
         possibly stale view x̄^(t-s) instead of the fresh x̄ᵗ — the
         inexact-ADMM analysis tolerates the bounded perturbation (see
-        docs/async.md). The server-side aggregation (eq. 11) and state
-        update are untouched: eq. (11) stays the round's one psum.
+        docs/async.md). The server-side state update is untouched and
+        eq. (11) stays the round's one psum; with a non-uniform
+        `stale.weighting` the aggregation downweights each z_i by the age
+        of the anchor it was computed against (`api.stale_weights` — the
+        incoming `last_used`, i.e. the staleness of the round that
+        PRODUCED the current z_i), riding the same psum.
         """
         fed = self.fed
         m = fed.num_clients
@@ -182,8 +186,10 @@ class FedGiA:
         )
 
         # (1) aggregation — the round's ONLY model-size communication
-        # (under client sharding this is the single psum of the round)
-        xbar = api.client_mean(state["z"])  # eq. (11)
+        # (under client sharding this is the single psum of the round).
+        # Staleness-aware weights (None = uniform = bitwise today's path)
+        # downweight z_i computed against old anchors.
+        xbar = api.client_mean(state["z"], weights=api.stale_weights(stale))  # eq. (11)
 
         # (3) client selection. The engine-drawn participation mask (when
         # given) decides the branch split and arrives pre-sliced to this

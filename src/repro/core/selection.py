@@ -22,6 +22,12 @@ against its last-downloaded x̄ (see docs/async.md). Trace-driven policies
 are the natural arrival processes: `AvailabilityParticipation` replays a
 measured availability trace, and `from_periods` builds the deterministic
 heterogeneous-speed trace where client i arrives every p_i rounds.
+
+The arrival process can also be CLOCK-BACKED instead of sampled:
+`run_rounds(clock=...)` derives the mask from simulated per-client finish
+times (core/clock.py) — a constant integer-speed clock reproduces the
+`from_periods` mask sequence exactly, and generalises it to real-valued
+and jittered compute times (tests/test_wallclock.py).
 """
 from __future__ import annotations
 

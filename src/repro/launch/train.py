@@ -20,11 +20,22 @@ staleness-aware overlapped rounds: a straggler works against the x̄ it
 last downloaded, at most `--max-staleness` rounds old (see docs/async.md).
 `--max-staleness 0` is bitwise identical to the synchronous masked run.
 
+`--clock` replaces the sampled arrival process with a WALL-CLOCK
+simulation (core/clock.py): per-client compute times (`--client-speeds`)
+drive event-driven rounds whose arrival mask is derived from simulated
+finish times, and the run reports simulated seconds alongside CR.
+`--stale-weighting poly|exp` downweights stale contributions in the
+aggregation (eq. 11) by decay in anchor age (`--stale-decay`).
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --problem linreg --algo fedgia \
       --clients 128 --k0 10 --rounds 200 --tol 1e-7
   PYTHONPATH=src python -m repro.launch.train --problem linreg --algo scaffold \
       --clients 64 --rounds 100 --participation uniform --alpha 0.25
+  PYTHONPATH=src python -m repro.launch.train --problem linreg --algo fedgia \
+      --clients 64 --rounds 200 --clock constant --client-speeds "$(python -c \
+      'print(",".join(str(1+i%4) for i in range(64)))")" \
+      --max-staleness 4 --stale-weighting poly
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b --reduced \
       --algo fedgia --clients 4 --rounds 20 --seq-len 64 --batch 2
 """
@@ -38,7 +49,8 @@ import jax.numpy as jnp
 from repro.checkpoint import save_checkpoint
 from repro.config import FedConfig
 from repro.configs import get_config, list_architectures
-from repro.core import make_algorithm, make_policy, run_rounds
+from repro.core import make_algorithm, make_clock, make_policy, run_rounds
+from repro.core.clock import CLOCKS
 from repro.core.selection import POLICIES
 from repro.data import linreg_noniid, logreg_data
 from repro.data.tokens import synthetic_batch_for
@@ -80,7 +92,81 @@ def build_problem(args):
     return model, model.loss, params0, batch
 
 
+def _parse_csv(value: str, n: int, flag: str, cast):
+    try:
+        items = [cast(v) for v in value.split(",")]
+    except ValueError as e:
+        raise SystemExit(f"{flag}: {e}")
+    if len(items) != n:
+        raise SystemExit(f"{flag} needs {n} values, got {len(items)}")
+    return items
+
+
+def validate_flags(args) -> dict:
+    """Cross-flag validation for the engine knobs, shared by `train` and
+    testable without building a problem (tests/test_train_flags.py).
+
+    Rejects (SystemExit): `--max-staleness` / `--stale-weighting` without
+    `--async` (or `--clock`, which implies it); `--arrival-periods`
+    without the periodic policy; `--client-weights` without the weighted
+    policy; `--client-speeds` without `--clock`; `--clock` combined with
+    an explicit `--participation` (the clock DERIVES the arrival mask);
+    `--clock trace` (library-level — needs a duration table); a
+    non-positive `--stale-decay` with a decaying weighting.
+
+    Returns the resolved engine knobs: participation kind, clock kind,
+    whether async rounds are on (a clock implies them), and the parsed
+    per-client lists (weights / periods / speeds, or None).
+    """
+    kind = getattr(args, "participation", "full")
+    clock_kind = getattr(args, "clock", "none")
+    async_rounds = getattr(args, "async_rounds", False) or clock_kind != "none"
+    if clock_kind != "none" and kind != "full":
+        raise SystemExit(
+            "--clock derives the arrival mask from simulated finish times "
+            "and cannot be combined with --participation"
+        )
+    if clock_kind == "trace":
+        raise SystemExit(
+            "--clock trace is library-level (it needs a (T, m) duration "
+            "table): build core.clock.TraceClock and pass it to "
+            "run_rounds(clock=...) programmatically"
+        )
+    if (getattr(args, "stale_weighting", "uniform") != "uniform"
+            and getattr(args, "stale_decay", 1.0) <= 0):
+        raise SystemExit("--stale-decay must be > 0")
+    if getattr(args, "max_staleness", 0) and not async_rounds:
+        raise SystemExit("--max-staleness requires --async (or --clock)")
+    if getattr(args, "stale_weighting", "uniform") != "uniform" and not async_rounds:
+        raise SystemExit("--stale-weighting requires --async (or --clock)")
+    weights = periods = speeds = None
+    weights_arg = getattr(args, "client_weights", "")
+    if weights_arg:
+        if kind != "weighted":
+            raise SystemExit("--client-weights requires --participation weighted")
+        weights = _parse_csv(weights_arg, args.clients, "--client-weights", float)
+    periods_arg = getattr(args, "arrival_periods", "")
+    if periods_arg:
+        if kind != "periodic":
+            raise SystemExit("--arrival-periods requires --participation periodic")
+        periods = _parse_csv(periods_arg, args.clients, "--arrival-periods", int)
+    speeds_arg = getattr(args, "client_speeds", "")
+    if speeds_arg:
+        if clock_kind == "none":
+            raise SystemExit("--client-speeds requires --clock")
+        speeds = _parse_csv(speeds_arg, args.clients, "--client-speeds", float)
+    return {
+        "kind": kind,
+        "clock_kind": clock_kind,
+        "async_rounds": async_rounds,
+        "weights": weights,
+        "periods": periods,
+        "speeds": speeds,
+    }
+
+
 def train(args) -> dict:
+    parsed = validate_flags(args)
     model, loss_fn, params0, batch = build_problem(args)
     fed = FedConfig(
         algorithm=args.algo,
@@ -107,36 +193,16 @@ def train(args) -> dict:
 
     # engine-level participation (core/selection.py): "full" -> None keeps
     # the legacy in-algorithm behaviour (FedGiA's internal §V.B draw)
-    kind = getattr(args, "participation", "full")
-    weights = None
-    weights_arg = getattr(args, "client_weights", "")
-    if weights_arg:
-        if kind != "weighted":
-            raise SystemExit("--client-weights requires --participation weighted")
-        weights = [float(w) for w in weights_arg.split(",")]
-        if len(weights) != args.clients:
-            raise SystemExit(
-                f"--client-weights needs {args.clients} values, got {len(weights)}"
-            )
-    periods = None
-    periods_arg = getattr(args, "arrival_periods", "")
-    if periods_arg:
-        if kind != "periodic":
-            raise SystemExit("--arrival-periods requires --participation periodic")
-        periods = [int(p) for p in periods_arg.split(",")]
-        if len(periods) != args.clients:
-            raise SystemExit(
-                f"--arrival-periods needs {args.clients} values, got {len(periods)}"
-            )
+    kind = parsed["kind"]
     policy = make_policy(
         kind,
         args.clients,
         args.alpha,
         seed=args.seed,
-        weights=weights,
+        weights=parsed["weights"],
         drop_prob=getattr(args, "drop_prob", 0.2),
         horizon=max(args.rounds, 1),
-        periods=periods,
+        periods=parsed["periods"],
     )
     if policy is not None:
         if kind in ("straggler", "periodic"):
@@ -146,25 +212,38 @@ def train(args) -> dict:
             log.info("participation: %s policy, alpha=%.2f (|C|=%d of m=%d)",
                      kind, args.alpha, policy.n_selected, args.clients)
 
-    async_rounds = getattr(args, "async_rounds", False)
+    # wall-clock simulation (core/clock.py): the clock derives the arrival
+    # mask from simulated finish times and implies async rounds
+    clock = make_clock(
+        parsed["clock_kind"],
+        args.clients,
+        compute_s=parsed["speeds"],
+        sigma=getattr(args, "clock_sigma", 0.5),
+        seed=args.seed,
+    )
+    async_rounds = parsed["async_rounds"]
     max_staleness = getattr(args, "max_staleness", 0)
-    if max_staleness and not async_rounds:
-        raise SystemExit("--max-staleness requires --async")
+    stale_weighting = getattr(args, "stale_weighting", "uniform")
     if async_rounds:
-        if policy is None:
+        if policy is None and clock is None:
             raise SystemExit(
                 "--async needs an arrival process: pass --participation "
-                "straggler/periodic/... (the mask is who communicates)"
+                "straggler/periodic/... (the mask is who communicates) "
+                "or --clock (event-driven wall-clock arrivals)"
             )
-        log.info("async rounds: stale-x̄ engine, max_staleness=%d",
-                 max_staleness)
+        log.info("async rounds: stale-x̄ engine, max_staleness=%d, "
+                 "weighting=%s", max_staleness, stale_weighting)
+    if clock is not None:
+        log.info("wall-clock rounds: %s clock, m=%d", clock.name, args.clients)
 
     res = run_rounds(
         algo, state, batch, args.rounds,
         tol=args.tol, scan=not getattr(args, "no_scan", False),
         chunk_size=getattr(args, "chunk", 0), mesh=mesh,
-        participation=policy,
+        participation=policy, clock=clock,
         async_rounds=async_rounds, max_staleness=max_staleness,
+        stale_weighting=stale_weighting,
+        stale_decay=getattr(args, "stale_decay", 1.0),
     )
     history = [
         {"round": r, "f": float(res.history["f_xbar"][r]),
@@ -189,9 +268,16 @@ def train(args) -> dict:
     }
     if async_rounds:
         result["max_staleness"] = max_staleness
+        result["stale_weighting"] = stale_weighting
         result["staleness_max_seen"] = int(res.history["staleness_max"].max())
         log.info("async: max staleness actually used = %d (bound %d)",
                  result["staleness_max_seen"], max_staleness)
+    if clock is not None:
+        result["clock"] = clock.name
+        result["sim_time_s"] = float(res.history["sim_time"][-1])
+        log.info("simulated wall-clock: %.3f s to round %d "
+                 "(time-to-target when the tolerance stopped the run)",
+                 result["sim_time_s"], res.rounds_run - 1)
     if args.checkpoint_dir:
         save_checkpoint(args.checkpoint_dir, res.rounds_run, res.state,
                         extra={"algo": args.algo})
@@ -204,7 +290,7 @@ def train(args) -> dict:
     return result
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--problem", default="linreg",
                     choices=["linreg", "logreg", "ncvx_logreg"])
@@ -251,6 +337,29 @@ def main():
     ap.add_argument("--max-staleness", type=int, default=0,
                     help="bound on the stale-x̄ age in rounds (--async); "
                          "0 = bitwise-identical to the synchronous run")
+    ap.add_argument("--clock", default="none", choices=("none",) + CLOCKS,
+                    help="wall-clock simulation (implies --async): derive "
+                         "the arrival mask from per-client compute times "
+                         "instead of a sampled policy — constant "
+                         "(fixed per-client speeds), lognormal (jittered), "
+                         "trace (library-level; needs a duration table). "
+                         "Reports simulated seconds alongside CR")
+    ap.add_argument("--client-speeds", default="",
+                    help="comma-separated per-client compute seconds for "
+                         "--clock (default: speeds cycling 1..4, the "
+                         "wall-clock twin of the periodic policy)")
+    ap.add_argument("--clock-sigma", type=float, default=0.5,
+                    help="lognormal compute-time jitter for --clock "
+                         "lognormal")
+    ap.add_argument("--stale-weighting", default="uniform",
+                    choices=["uniform", "poly", "exp"],
+                    help="staleness-aware aggregation (--async/--clock): "
+                         "downweight a contribution computed against an "
+                         "s-rounds-old anchor — uniform (unweighted, "
+                         "bitwise today's path), poly ((1+s)^-decay), "
+                         "exp (e^(-decay*s))")
+    ap.add_argument("--stale-decay", type=float, default=1.0,
+                    help="decay rate for --stale-weighting poly/exp")
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--rounds", type=int, default=100)
     ap.add_argument("--tol", type=float, default=1e-7)
@@ -261,8 +370,11 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--checkpoint-dir", default="")
-    args = ap.parse_args()
-    train(args)
+    return ap
+
+
+def main():
+    train(build_parser().parse_args())
 
 
 if __name__ == "__main__":

@@ -1,0 +1,81 @@
+"""Cross-flag validation of the training CLI (launch/train.py).
+
+`validate_flags` is the single place the engine knobs are checked against
+each other, callable on a parsed Namespace without building a problem —
+these tests pin every rejection (SystemExit) and the resolved knobs for
+the accepted combinations (e.g. --clock implying async rounds).
+"""
+import pytest
+
+from repro.launch.train import build_parser, validate_flags
+
+BASE = ["--problem", "linreg", "--clients", "8", "--rounds", "4"]
+
+
+def _args(*extra):
+    return build_parser().parse_args(BASE + list(extra))
+
+
+@pytest.mark.parametrize("argv,match", [
+    # async-family flags need the async engine (or a clock, which implies it)
+    (["--max-staleness", "2"], "--max-staleness requires --async"),
+    (["--stale-weighting", "poly"], "--stale-weighting requires --async"),
+    # per-client list flags need their owning mode
+    (["--arrival-periods", "1,2,3,4,1,2,3,4"],
+     "--arrival-periods requires --participation periodic"),
+    (["--participation", "straggler", "--arrival-periods", "1,2,3,4,1,2,3,4"],
+     "--arrival-periods requires --participation periodic"),
+    (["--client-weights", "1,1,1,1,1,1,1,1"],
+     "--client-weights requires --participation weighted"),
+    (["--client-speeds", "1,2,3,4,1,2,3,4"],
+     "--client-speeds requires --clock"),
+    # the clock derives the arrival mask; a sampled policy conflicts
+    (["--clock", "constant", "--participation", "periodic"],
+     "cannot be combined with --participation"),
+    # the trace clock needs a duration table the CLI cannot carry
+    (["--clock", "trace"], "library-level"),
+    # a negative decay would upweight the stalest anchors
+    (["--clock", "constant", "--stale-weighting", "poly",
+      "--stale-decay", "-1.0"], "--stale-decay must be > 0"),
+    # list-length mismatches
+    (["--participation", "periodic", "--arrival-periods", "1,2"],
+     "--arrival-periods needs 8 values"),
+    (["--participation", "weighted", "--client-weights", "1,2,3"],
+     "--client-weights needs 8 values"),
+    (["--clock", "constant", "--client-speeds", "1.5"],
+     "--client-speeds needs 8 values"),
+])
+def test_rejected_flag_combinations(argv, match):
+    with pytest.raises(SystemExit, match=match):
+        validate_flags(_args(*argv))
+
+
+@pytest.mark.parametrize("argv", [
+    ["--async", "--participation", "periodic", "--max-staleness", "2"],
+    ["--async", "--participation", "straggler", "--stale-weighting", "exp"],
+    ["--participation", "periodic", "--arrival-periods", "1,2,4,1,2,4,1,2"],
+    ["--participation", "weighted", "--client-weights", "1,2,3,4,5,6,7,8"],
+])
+def test_accepted_flag_combinations(argv):
+    parsed = validate_flags(_args(*argv))
+    assert parsed["kind"] == argv[argv.index("--participation") + 1]
+
+
+def test_clock_implies_async_rounds():
+    parsed = validate_flags(_args("--clock", "constant", "--max-staleness",
+                                  "4", "--stale-weighting", "poly"))
+    assert parsed["async_rounds"] and parsed["clock_kind"] == "constant"
+    assert parsed["kind"] == "full" and parsed["speeds"] is None
+
+
+def test_client_speeds_parsed_per_client():
+    parsed = validate_flags(_args("--clock", "lognormal", "--client-speeds",
+                                  "1,2,3,4,1,2,3,4"))
+    assert parsed["speeds"] == [1.0, 2.0, 3.0, 4.0, 1.0, 2.0, 3.0, 4.0]
+
+
+def test_arrival_periods_parsed_as_ints():
+    parsed = validate_flags(_args("--participation", "periodic",
+                                  "--arrival-periods", "1,2,4,1,2,4,1,2"))
+    assert parsed["periods"] == [1, 2, 4, 1, 2, 4, 1, 2]
+    assert not parsed["async_rounds"]  # periodic alone stays synchronous

@@ -1,0 +1,349 @@
+"""Wall-clock event-driven rounds + staleness-weighted aggregation.
+
+Acceptance contract of the wall-clock subsystem (core/clock.py + the
+`clock=` / `stale_weighting=` engine knobs):
+  * uniform weighting: `stale_weighting="uniform"` is BITWISE identical
+    to the PR-3 async engine (it passes weights=None into `client_mean`,
+    so the lowered round is the same program) — all five algorithms,
+    scan and legacy paths.
+  * equal client speeds: a constant clock with identical speeds arrives
+    everyone every round — BITWISE identical to the async engine under a
+    full-participation arrival policy (all five algorithms, scan+legacy).
+  * integer speeds generalise the periodic trace policy: constant speeds
+    with a unit-speed client present produce the same arrival masks as
+    `AvailabilityParticipation.from_periods`, hence identical runs.
+  * event-driven time: `sim_time` matches the hand-computed event
+    sequence and is nondecreasing; staleness stays bounded.
+  * weighted aggregation: poly/exp schedules match a numpy reference;
+    weighted scan == weighted legacy; the sharded weighted round still
+    issues exactly one model-size all-reduce (HLO-asserted, subprocess).
+"""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import fake_device_env
+from repro.config import FedConfig
+from repro.core import ComputeClock, LognormalClock, TraceClock, api, \
+    make_algorithm, run_rounds
+from repro.core.selection import AvailabilityParticipation, ParticipationPolicy
+
+M, N, D, ROUNDS, CHUNK = 8, 20, 400, 12, 5
+
+ALGO_SETUPS = {
+    "fedgia": dict(algorithm="fedgia", sigma_t=0.2, h_policy="scalar", alpha=1.0),
+    "fedgia_diag": dict(algorithm="fedgia", sigma_t=0.2, h_policy="diag_ema",
+                        alpha=1.0),
+    "fedavg": dict(algorithm="fedavg", lr=0.01),
+    "fedprox": dict(algorithm="fedprox", lr=0.002, prox_mu=1e-4, inner_steps=3),
+    "fedpd": dict(algorithm="fedpd", lr=0.05, fedpd_eta=1.0, inner_steps=3),
+    "scaffold": dict(algorithm="scaffold", lr=0.01),
+}
+
+
+@pytest.fixture(scope="module")
+def problem():
+    from repro.data import linreg_noniid
+    from repro.models import LeastSquares
+
+    batch = {k: jnp.asarray(v) for k, v in linreg_noniid(0, D, N, M).items()}
+    return LeastSquares(N), batch
+
+
+def _make(problem, key):
+    model, batch = problem
+    fed = FedConfig(num_clients=M, k0=3, **ALGO_SETUPS[key])
+    algo = make_algorithm(fed, model.loss, model=model)
+    state = algo.init(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(1),
+                      init_batch=batch)
+    return algo, state, batch
+
+
+def _state_leaves(state):
+    for k, v in state.items():
+        for leaf in jax.tree.leaves(v):
+            yield k, np.asarray(leaf)
+
+
+def _assert_bitwise(res, ref, label):
+    assert res.rounds_run == ref.rounds_run
+    for k in ref.history:  # the clock run adds sim_time on top
+        np.testing.assert_array_equal(res.history[k], ref.history[k],
+                                      err_msg=f"{label}/{k}")
+    for (k, a), (_, b) in zip(_state_leaves(ref.state), _state_leaves(res.state)):
+        np.testing.assert_array_equal(a, b, err_msg=f"{label}/state[{k}]")
+
+
+# ------------------------------------------------------- bitwise identities
+@pytest.mark.parametrize("algo_key", sorted(ALGO_SETUPS))
+@pytest.mark.parametrize("scan", [True, False], ids=["scan", "legacy"])
+def test_uniform_weighting_bitwise_identical(problem, algo_key, scan):
+    """stale_weighting="uniform" == the PR-3 async engine, bit for bit:
+    uniform weighting resolves to weights=None, the same lowered round."""
+    algo, state, batch = _make(problem, algo_key)
+    pol = AvailabilityParticipation.from_periods(M, 1 + (np.arange(M) % 3),
+                                                 horizon=ROUNDS)
+    ref = run_rounds(algo, state, batch, ROUNDS, scan=scan, chunk_size=CHUNK,
+                     participation=pol, async_rounds=True, max_staleness=2)
+    res = run_rounds(algo, state, batch, ROUNDS, scan=scan, chunk_size=CHUNK,
+                     participation=pol, async_rounds=True, max_staleness=2,
+                     stale_weighting="uniform", stale_decay=3.0)
+    _assert_bitwise(res, ref, algo_key)
+
+
+@pytest.mark.parametrize("algo_key", sorted(ALGO_SETUPS))
+@pytest.mark.parametrize("scan", [True, False], ids=["scan", "legacy"])
+def test_equal_speed_clock_bitwise_identical_to_async(problem, algo_key, scan):
+    """Identical client speeds => every client arrives every round => the
+    clock run is bitwise the async engine under full-participation
+    arrivals (the ISSUE-4 acceptance identity)."""
+    algo, state, batch = _make(problem, algo_key)
+    ref = run_rounds(algo, state, batch, ROUNDS, scan=scan, chunk_size=CHUNK,
+                     participation=ParticipationPolicy(M), async_rounds=True,
+                     max_staleness=2)
+    res = run_rounds(algo, state, batch, ROUNDS, scan=scan, chunk_size=CHUNK,
+                     clock=ComputeClock(M, compute_s=2.5), max_staleness=2,
+                     stale_weighting="uniform")
+    _assert_bitwise(res, ref, algo_key)
+    # event-driven time: rounds fire at each (equal) work-item finish
+    np.testing.assert_allclose(res.history["sim_time"],
+                               2.5 * np.arange(ROUNDS), rtol=1e-6)
+
+
+@pytest.mark.parametrize("algo_key", ["fedgia", "scaffold"])
+def test_integer_speed_clock_matches_periodic_policy(problem, algo_key):
+    """Constant integer speeds (unit-speed client present) derive the SAME
+    arrival masks as the from_periods trace => identical runs. The clock
+    strictly generalises the PR-3 periodic arrival process."""
+    algo, state, batch = _make(problem, algo_key)
+    periods = np.array([1, 2, 4, 1, 2, 4, 1, 2])
+    ref = run_rounds(algo, state, batch, ROUNDS, scan=True, chunk_size=CHUNK,
+                     participation=AvailabilityParticipation.from_periods(
+                         M, periods, horizon=ROUNDS),
+                     async_rounds=True, max_staleness=8)
+    res = run_rounds(algo, state, batch, ROUNDS, scan=True, chunk_size=CHUNK,
+                     clock=ComputeClock(M, compute_s=periods.astype(float)),
+                     max_staleness=8)
+    _assert_bitwise(res, ref, algo_key)
+
+
+def test_trace_clock_constant_rows_match_constant_clock(problem):
+    """A trace whose rows all equal the constant speeds is the constant
+    clock (trace-driven durations, same event sequence)."""
+    algo, state, batch = _make(problem, "fedavg")
+    speeds = 1.0 + (np.arange(M) % 4)
+    ref = run_rounds(algo, state, batch, ROUNDS, scan=True, chunk_size=CHUNK,
+                     clock=ComputeClock(M, compute_s=speeds), max_staleness=4)
+    res = run_rounds(algo, state, batch, ROUNDS, scan=True, chunk_size=CHUNK,
+                     clock=TraceClock(M, np.tile(speeds, (5, 1))),
+                     max_staleness=4)
+    _assert_bitwise(res, ref, "trace")
+    np.testing.assert_array_equal(res.history["sim_time"],
+                                  ref.history["sim_time"])
+
+
+# ------------------------------------------------------- event-driven time
+def test_sim_time_and_staleness_are_event_driven(problem):
+    """Hand-computed event sequence for speeds alternating 1 and 3: the
+    server wakes at every fast-client finish (t = 0, 1, 2, ...), slow
+    clients arrive every 3rd round, and their staleness cycles 1, 2, 3."""
+    algo, state, batch = _make(problem, "fedavg")
+    speeds = np.where(np.arange(M) % 2 == 0, 1.0, 3.0)
+    res = run_rounds(algo, state, batch, ROUNDS, scan=True, chunk_size=CHUNK,
+                     clock=ComputeClock(M, compute_s=speeds), max_staleness=8)
+    np.testing.assert_allclose(res.history["sim_time"], np.arange(ROUNDS),
+                               rtol=1e-6)
+    st = res.history["staleness"]  # (ROUNDS, M)
+    t = np.arange(ROUNDS)
+    for i in range(M):
+        p = int(speeds[i])
+        expect = np.where(t == 0, 0, ((t - 1) % p) + 1)
+        np.testing.assert_array_equal(st[:, i], expect,
+                                      err_msg=f"client {i} (speed {p})")
+
+
+def test_lognormal_clock_scan_matches_legacy(problem):
+    """The jitter key rides in the clock carry: the duration sequence is a
+    pure function of the seed, so scan == legacy under lognormal times
+    (and staleness stays bounded)."""
+    algo, state, batch = _make(problem, "fedgia")
+    clk = LognormalClock(M, compute_s=1.0 + (np.arange(M) % 3), sigma=0.6,
+                         seed=4)
+    res = run_rounds(algo, state, batch, ROUNDS, scan=True, chunk_size=CHUNK,
+                     clock=clk, max_staleness=3, stale_weighting="exp",
+                     stale_decay=0.5)
+    ref = run_rounds(algo, state, batch, ROUNDS, scan=False, clock=clk,
+                     max_staleness=3, stale_weighting="exp", stale_decay=0.5)
+    assert set(res.history) == set(ref.history)
+    for k in ref.history:
+        np.testing.assert_allclose(res.history[k], ref.history[k],
+                                   rtol=1e-5, atol=1e-6, err_msg=k)
+    assert (res.history["staleness"] <= 3).all()
+    sim = res.history["sim_time"]
+    assert (np.diff(sim) >= 0).all() and sim[0] == 0.0
+
+
+# --------------------------------------------------- weighted aggregation
+def test_stale_weights_schedules():
+    """poly/exp decay in anchor age; uniform resolves to None (the bitwise
+    escape hatch `client_mean` keys on)."""
+    ages = jnp.asarray([0, 1, 3, 7], jnp.int32)
+    mk = lambda w, d: api.StaleXbar(anchor=(), age=ages, last_used=ages,
+                                    max_staleness=8, weighting=w, decay=d)
+    assert api.stale_weights(None) is None
+    assert api.stale_weights(mk("uniform", 2.0)) is None
+    np.testing.assert_allclose(api.stale_weights(mk("poly", 1.0)),
+                               1.0 / (1.0 + np.array([0, 1, 3, 7])))
+    np.testing.assert_allclose(api.stale_weights(mk("exp", 0.5)),
+                               np.exp(-0.5 * np.array([0, 1, 3, 7])),
+                               rtol=1e-6)
+
+
+def test_client_mean_weights_numpy_reference(rng):
+    """Weighted (and masked-weighted) client_mean == Σw·x / Σw in numpy."""
+    x = jnp.asarray(rng.normal(size=(M, 5)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.1, 1.0, size=M), jnp.float32)
+    mask = jnp.asarray([True, False] * (M // 2))
+    got = api.client_mean(x, weights=w)
+    np.testing.assert_allclose(
+        got, (np.asarray(w)[:, None] * np.asarray(x)).sum(0) / np.asarray(w).sum(),
+        rtol=1e-6)
+    got_m = api.client_mean(x, mask=mask, weights=w)
+    wm = np.where(np.asarray(mask), np.asarray(w), 0.0)
+    np.testing.assert_allclose(
+        got_m, (wm[:, None] * np.asarray(x)).sum(0) / wm.sum(), rtol=1e-6)
+
+
+@pytest.mark.parametrize("algo_key", sorted(ALGO_SETUPS))
+def test_weighted_scan_matches_legacy(problem, algo_key):
+    """poly staleness weighting: identical weight/staleness threading on
+    both engine paths, for every algorithm."""
+    algo, state, batch = _make(problem, algo_key)
+    pol = AvailabilityParticipation.from_periods(M, 1 + (np.arange(M) % 3),
+                                                 horizon=ROUNDS)
+    res = run_rounds(algo, state, batch, ROUNDS, scan=True, chunk_size=CHUNK,
+                     participation=pol, async_rounds=True, max_staleness=2,
+                     stale_weighting="poly", stale_decay=1.0)
+    ref = run_rounds(algo, state, batch, ROUNDS, scan=False,
+                     participation=pol, async_rounds=True, max_staleness=2,
+                     stale_weighting="poly", stale_decay=1.0)
+    assert res.rounds_run == ref.rounds_run == ROUNDS
+    for k in ref.history:
+        np.testing.assert_allclose(res.history[k], ref.history[k],
+                                   rtol=1e-5, atol=1e-6, err_msg=k)
+    for (k, a), (_, b) in zip(_state_leaves(ref.state), _state_leaves(res.state)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6,
+                                   err_msg=f"state[{k}]")
+
+
+def test_weighted_run_differs_from_uniform(problem):
+    """A sanity direction check: non-uniform weighting actually changes
+    the aggregation under a heterogeneous arrival process (the plumbing
+    is not silently dropping the weights)."""
+    algo, state, batch = _make(problem, "fedgia")
+    clk = ComputeClock(M, compute_s=1.0 + (np.arange(M) % 4))
+    uni = run_rounds(algo, state, batch, ROUNDS, clock=clk, max_staleness=4)
+    wtd = run_rounds(algo, state, batch, ROUNDS, clock=clk, max_staleness=4,
+                     stale_weighting="poly", stale_decay=2.0)
+    assert not np.allclose(uni.history["f_xbar"], wtd.history["f_xbar"])
+
+
+# ----------------------------------------------------------- engine guards
+def test_clock_excludes_participation(problem):
+    algo, state, batch = _make(problem, "fedgia")
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        run_rounds(algo, state, batch, 2, clock=ComputeClock(M),
+                   participation=ParticipationPolicy(M))
+
+
+def test_clock_client_count_must_match(problem):
+    algo, state, batch = _make(problem, "fedgia")
+    with pytest.raises(ValueError, match="clients"):
+        run_rounds(algo, state, batch, 2, clock=ComputeClock(M + 1))
+
+
+def test_stale_weighting_requires_async(problem):
+    algo, state, batch = _make(problem, "fedgia")
+    with pytest.raises(ValueError, match="async"):
+        run_rounds(algo, state, batch, 2, stale_weighting="poly")
+    with pytest.raises(ValueError, match="stale_weighting"):
+        run_rounds(algo, state, batch, 2, clock=ComputeClock(M),
+                   stale_weighting="typo")
+
+
+def test_stale_decay_must_be_positive(problem):
+    """A negative decay would silently UPweight the stalest anchors."""
+    algo, state, batch = _make(problem, "fedgia")
+    with pytest.raises(ValueError, match="decay"):
+        run_rounds(algo, state, batch, 2, clock=ComputeClock(M),
+                   stale_weighting="poly", stale_decay=-1.0)
+    # decay is ignored (and unvalidated) under uniform weighting
+    run_rounds(algo, state, batch, 2, clock=ComputeClock(M),
+               stale_weighting="uniform", stale_decay=-1.0)
+
+
+# -------------------------------------------------- sharded one-psum check
+_SHARDED_WEIGHTED_SCRIPT = textwrap.dedent(
+    """
+    import re
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.config import FedConfig
+    from repro.core import api, engine, make_algorithm, run_rounds
+    from repro.core.clock import ComputeClock
+    from repro.data import linreg_noniid
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import LeastSquares
+
+    m, n, d = 8, 24, 320
+    batch = {k: jnp.asarray(v) for k, v in linreg_noniid(0, d, n, m).items()}
+    model = LeastSquares(n)
+    mesh = make_host_mesh(data=8)
+    fed = FedConfig(algorithm="fedgia", num_clients=m, k0=5, alpha=1.0,
+                    sigma_t=0.3, h_policy="diag_ema")
+    algo = make_algorithm(fed, model.loss, model=model)
+    s0 = algo.init(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(1),
+                   init_batch=batch)
+
+    def model_size_all_reduces(weighting):
+        rf = engine.make_round_fn(algo, mesh, masked=True, stale=True)
+        st, b = engine.shard_inputs(algo, s0, batch, mesh)
+        stale = api.init_stale_xbar(s0["x"], m, 2, weighting=weighting,
+                                    decay=1.0)
+        args = (st, b, jnp.ones((m,), bool), stale)
+        txt = jax.jit(rf).lower(*args).compile().as_text()
+        shapes = re.findall(r"= (\\S+) all-reduce\\(", txt)
+        return sum(1 for s in shapes if re.search(r"\\[\\d", s))
+
+    uni, wtd = model_size_all_reduces("uniform"), model_size_all_reduces("poly")
+    assert wtd == uni, (
+        f"weighted aggregation changed the model-size all-reduce count: "
+        f"{uni} -> {wtd}")
+
+    # and the weighted sharded RUN matches the single-device run
+    clk = ComputeClock(m, compute_s=1.0 + (np.arange(m) % 3))
+    ref = run_rounds(algo, s0, batch, 10, scan=True, chunk_size=5, clock=clk,
+                     max_staleness=2, stale_weighting="poly")
+    res = run_rounds(algo, s0, batch, 10, scan=True, chunk_size=5, clock=clk,
+                     max_staleness=2, stale_weighting="poly", mesh=mesh)
+    for k in ref.history:
+        np.testing.assert_allclose(res.history[k], ref.history[k],
+                                   rtol=1e-4, atol=1e-6, err_msg=k)
+    print(f"WEIGHTED_SHARDED_OK model_size_all_reduces={wtd}")
+    """
+)
+
+
+def test_weighted_sharded_one_psum_and_parity():
+    """eq. (11) with weights= is still the round's ONE model-size
+    all-reduce (the weight sum rides the same psum), and the weighted
+    clock-driven sharded run matches single-device."""
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARDED_WEIGHTED_SCRIPT],
+        env=fake_device_env(8), capture_output=True, text=True, timeout=600,
+    )
+    assert "WEIGHTED_SHARDED_OK" in out.stdout, out.stdout + out.stderr

@@ -1,0 +1,115 @@
+#!/usr/bin/env python
+"""Gate CI on engine-benchmark regressions.
+
+Compares a freshly produced BENCH_engine.json (benchmarks/run.py --only
+engine) against the committed baseline
+benchmarks/baselines/BENCH_engine.baseline.json, per engine path
+(scan / legacy / sharded / async), on rounds-per-second:
+
+  * FAIL (exit 1) only on a slowdown worse than --max-slowdown (default
+    2.5x) — generous on purpose: CI runners are shared and noisy, and
+    the point is to catch "someone put a host sync back in the round
+    loop", not 20% jitter.
+  * WARN on anything worse than --warn-slowdown (default 1.5x).
+  * FAIL on a path present in the baseline but missing from the fresh
+    run (a silently dropped benchmark is a regression too). Paths only
+    in the fresh run are reported as new.
+
+Speedups are fine (they print, so a new baseline can be committed when
+they persist). Refresh the baseline with:
+
+    ENGINE_BENCH_ROUNDS=40 PYTHONPATH=src python -m benchmarks.run --only engine
+    python tools/check_bench.py --update-baseline
+
+Both files are uploaded as CI artifacts, so the trajectory is diffable
+across runs even between baseline refreshes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+BASELINE = ROOT / "benchmarks" / "baselines" / "BENCH_engine.baseline.json"
+
+
+def load_engine_section(path: Path) -> dict:
+    """Accept either the full benchmarks/run.py dump ({"engine": {...}})
+    or a bare engine-section dict."""
+    with open(path) as f:
+        data = json.load(f)
+    section = data.get("engine", data)
+    if "paths" not in section:
+        raise SystemExit(f"{path}: no engine benchmark section found")
+    return section
+
+
+def check(current: dict, baseline: dict, max_slowdown: float,
+          warn_slowdown: float) -> int:
+    failures = warnings = 0
+    cur_paths = current["paths"]
+    base_paths = baseline["paths"]
+    print(f"{'path':<10} {'baseline r/s':>14} {'current r/s':>14} "
+          f"{'slowdown':>10}  verdict")
+    for name, base in sorted(base_paths.items()):
+        if name not in cur_paths:
+            print(f"{name:<10} {base['rounds_per_s']:>14.2f} "
+                  f"{'MISSING':>14} {'-':>10}  FAIL (path dropped)")
+            failures += 1
+            continue
+        base_rps = float(base["rounds_per_s"])
+        cur_rps = float(cur_paths[name]["rounds_per_s"])
+        slowdown = base_rps / cur_rps if cur_rps > 0 else float("inf")
+        if slowdown > max_slowdown:
+            verdict = f"FAIL (> {max_slowdown:g}x)"
+            failures += 1
+        elif slowdown > warn_slowdown:
+            verdict = f"WARN (> {warn_slowdown:g}x)"
+            warnings += 1
+        else:
+            verdict = "ok"
+        print(f"{name:<10} {base_rps:>14.2f} {cur_rps:>14.2f} "
+              f"{slowdown:>9.2f}x  {verdict}")
+    for name in sorted(set(cur_paths) - set(base_paths)):
+        print(f"{name:<10} {'-':>14} "
+              f"{float(cur_paths[name]['rounds_per_s']):>14.2f} "
+              f"{'-':>10}  new (not in baseline)")
+    if failures:
+        print(f"\n{failures} path(s) regressed beyond {max_slowdown:g}x — "
+              f"if intentional, refresh the baseline "
+              f"(tools/check_bench.py --update-baseline)", file=sys.stderr)
+        return 1
+    if warnings:
+        print(f"\n{warnings} path(s) slower than {warn_slowdown:g}x baseline "
+              f"(within tolerance — watch the artifact trajectory)")
+    else:
+        print("\nall engine paths within tolerance")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default="BENCH_engine.json",
+                    help="freshly produced benchmark json")
+    ap.add_argument("--baseline", default=str(BASELINE))
+    ap.add_argument("--max-slowdown", type=float, default=2.5,
+                    help="fail beyond this rounds/s slowdown factor")
+    ap.add_argument("--warn-slowdown", type=float, default=1.5,
+                    help="warn beyond this rounds/s slowdown factor")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="copy --current over --baseline instead of checking")
+    args = ap.parse_args()
+    if args.update_baseline:
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline refreshed from {args.current} -> {args.baseline}")
+        return 0
+    current = load_engine_section(Path(args.current))
+    baseline = load_engine_section(Path(args.baseline))
+    return check(current, baseline, args.max_slowdown, args.warn_slowdown)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

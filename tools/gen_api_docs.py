@@ -1,10 +1,11 @@
 #!/usr/bin/env python
 """Generate docs/api.md from the round-engine public surface's docstrings.
 
-The reference covers `repro.core.engine`, `repro.core.selection` and
-`repro.core.api` — the modules whose docstrings carry the engine
-contracts (scan-carry layout, mask contract, staleness fields). Symbols
-are emitted in source order; classes include their public methods.
+The reference covers `repro.core.engine`, `repro.core.selection`,
+`repro.core.clock` and `repro.core.api` — the modules whose docstrings
+carry the engine contracts (scan-carry layout, mask contract, staleness
+fields, wall-clock event semantics). Symbols are emitted in source
+order; classes include their public methods.
 
     PYTHONPATH=src python tools/gen_api_docs.py            # (re)write
     PYTHONPATH=src python tools/gen_api_docs.py --check    # CI freshness
@@ -25,7 +26,8 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 OUT = ROOT / "docs" / "api.md"
-MODULES = ("repro.core.engine", "repro.core.selection", "repro.core.api")
+MODULES = ("repro.core.engine", "repro.core.selection", "repro.core.clock",
+           "repro.core.api")
 
 HEADER = """\
 # API reference (generated)
