@@ -1,7 +1,8 @@
 """Round-engine benchmark: scan-compiled chunks vs the seed's per-round
-dispatch loop — plus the client-sharded and async (stale-x̄) engine paths —
-on the paper's linreg problem, fixed round count (no early stop) so every
-path executes comparable math.
+dispatch loop — plus the client-sharded and async (stale-x̄) engine paths,
+and the flat-buffer round path against its per-leaf pytree twin — on the
+paper's linreg problem, fixed round count (no early stop) so every path
+executes comparable math.
 
 The legacy path pays one dispatch + one metric host-sync per round; the
 scan path pays one dispatch per chunk and no per-round syncs. On CPU with
@@ -11,6 +12,15 @@ path runs in a subprocess over 8 FAKE CPU devices (so its round/s is a
 plumbing sanity number, not a hardware claim); the async path adds the
 staleness carry + per-client anchor selects to the scan path, and its
 round/s shows that overlap bookkeeping is (near) free.
+
+`scan` is the shipping configuration (flat=True: ravel-once (m, N) client
+state, contiguous eq.-11 reduction, fused branch update);
+`scan_pytree` is the same scan engine with `flat=False`. The two are
+measured INTERLEAVED (scan/pytree/scan/pytree/...) so slow drift on a
+shared CI runner hits both paths equally; the reported ratio is the
+ratio of the two per-path medians. On the single-leaf linreg model the flat win is
+moderate (ravel is a no-op reshape, the gain is fewer HLO ops per round);
+multi-leaf models widen it.
 
 `run()` returns the machine-readable dict that `benchmarks/run.py` dumps
 to BENCH_engine.json (round/s per path). Env knobs for CI budgets:
@@ -72,7 +82,7 @@ def run():
     state = algo.init(model.init(jax.random.PRNGKey(0)),
                       jax.random.PRNGKey(1), init_batch=batch)
 
-    res_loop = res_scan = res_async = None
+    res_loop = res_scan = res_pytree = res_async = None
 
     def loop():
         nonlocal res_loop
@@ -83,6 +93,12 @@ def run():
         nonlocal res_scan
         res_scan = run_rounds(algo, state, batch, ROUNDS, scan=True)
         return res_scan
+
+    def scan_pytree():
+        nonlocal res_pytree
+        res_pytree = run_rounds(algo, state, batch, ROUNDS, scan=True,
+                                flat=False)
+        return res_pytree
 
     # async: heterogeneous periodic arrivals, bounded staleness 2. alpha is
     # irrelevant (the arrival mask IS the branch split).
@@ -96,11 +112,22 @@ def run():
                                max_staleness=2)
         return res_async
 
-    loop_s, scan_s, async_s = _measure(loop), _measure(scan), _measure(asyn)
-    # the sync paths must agree before their times are comparable
+    loop_s, async_s = _measure(loop), _measure(asyn)
+    # flat vs pytree scan: interleaved repeats so runner drift hits both
+    # paths equally; per-path median
+    flat_walls, pytree_walls = [], []
+    for _ in range(REPEATS):
+        flat_walls.append(scan().wall_s)
+        pytree_walls.append(scan_pytree().wall_s)
+    scan_s = float(np.median(flat_walls))
+    pytree_s = float(np.median(pytree_walls))
+    # the sync paths must agree before their times are comparable (flat is
+    # bitwise the pytree scan on a single device — tests/test_flat.py)
     for k in ("f_xbar", "grad_sq_norm"):
         np.testing.assert_allclose(res_scan.history[k], res_loop.history[k],
                                    rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(res_scan.history[k],
+                                      res_pytree.history[k])
     assert int(res_async.history["staleness_max"].max()) <= 2
 
     sharded_s = run_sharded()
@@ -109,7 +136,11 @@ def run():
         "clients": M_CLIENTS,
         "paths": {
             "legacy": {"wall_s": loop_s, "rounds_per_s": ROUNDS / loop_s},
-            "scan": {"wall_s": scan_s, "rounds_per_s": ROUNDS / scan_s},
+            "scan": {"wall_s": scan_s, "rounds_per_s": ROUNDS / scan_s,
+                     "note": "flat-buffer rounds (the default path)"},
+            "scan_pytree": {"wall_s": pytree_s,
+                            "rounds_per_s": ROUNDS / pytree_s,
+                            "note": "per-leaf pytree rounds (--no-flat)"},
             "sharded": {"wall_s": sharded_s,
                         "rounds_per_s": ROUNDS / sharded_s,
                         "note": "8 fake CPU devices, one physical socket"},
@@ -117,6 +148,7 @@ def run():
                       "max_staleness": 2},
         },
         "speedup_scan_vs_legacy": loop_s / scan_s,
+        "speedup_flat_vs_pytree": pytree_s / scan_s,
         # NOTE: not a pure bookkeeping-overhead ratio — stale rounds
         # evaluate gradients at PER-CLIENT anchors (a batched dot), which
         # CPU XLA parallelizes differently from the sync path's
@@ -146,9 +178,15 @@ def main():
     for name, p in r["paths"].items():
         print(f"{name},{p['wall_s']:.3f},{p['rounds_per_s']:.1f}")
     print(f"speedup scan vs legacy: {r['speedup_scan_vs_legacy']:.2f}x, "
+          f"flat vs pytree: {r['speedup_flat_vs_pytree']:.2f}x, "
           f"async overhead vs scan: {r['overhead_async_vs_scan']:.2f}x")
     assert r["speedup_scan_vs_legacy"] > 1.0, (
         f"scan engine slower than per-round dispatch: {r}")
+    # interleaved medians: the flat round path must not lose to its pytree
+    # twin (2% grace for shared-runner noise; the check_bench gate pins
+    # the absolute round/s trajectory)
+    assert r["speedup_flat_vs_pytree"] >= 0.98, (
+        f"flat rounds slower than pytree rounds: {r}")
     return r
 
 

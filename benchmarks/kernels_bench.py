@@ -4,6 +4,14 @@ roofline numbers live in benchmarks/roofline.py).
   1. collapsed vs unrolled FedGiA round (DESIGN §6 B1): the measurable
      computational-efficiency win of the closed-form round.
   2. FedGiA vs FedAvg per-round cost (paper Table I: one gradient vs k0).
+  3. flat (m, N) round update vs the per-leaf pytree twin at model scale —
+     the elementwise pass `kernels/fedgia_update` fuses on TPU, isolated
+     from the gradient compute (the jnp twins on CPU; the Pallas kernel
+     itself is only meaningfully timed on TPU hardware).
+
+`main()` returns the rows machine-readably; benchmarks/run.py folds them
+into BENCH_engine.json under the "kernels" section so the flat/kernel
+round-update cost is tracked round-over-round next to the engine paths.
 """
 from __future__ import annotations
 
@@ -16,6 +24,7 @@ import numpy as np
 from repro.config import FedConfig
 from repro.core import make_algorithm
 from repro.data import linreg_noniid
+from repro.kernels.fedgia_update import fedgia_update_flat
 from repro.models import LeastSquares
 
 
@@ -61,13 +70,62 @@ def bench_fedgia_vs_fedavg(m=16, k0=10):
     return rows
 
 
+def bench_flat_update(n=200_000, m=16, k0=20, leaves=10):
+    """The round's ADMM/GD elementwise update at model scale: one fused
+    (m, n) pass (the flat engine's hot path, = the Pallas kernel's math)
+    vs the same arithmetic split over a `leaves`-leaf pytree (what the
+    per-leaf round dispatches), vs the k0-step unrolled oracle."""
+    rng = np.random.default_rng(0)
+    arr = lambda: jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    xbar_c, g, pi = arr(), arr(), arr()
+    h = jnp.asarray(rng.uniform(0.1, 2.0, (m, n)), jnp.float32)
+    sel = jnp.asarray(rng.random(m) < 0.5)
+    sigma = jnp.float32(0.4)
+
+    def collapsed(xb, gg, p0, hh):
+        d = 1.0 / (hh / m + sigma)
+        a = 1.0 - sigma * d
+        b = p0 + gg
+        ak1 = a ** (k0 - 1)
+        pi_a = ak1 * a * b - gg
+        x_a = xb + (-d * ak1 * b)
+        pick = sel.reshape((m,) + (1,) * (xb.ndim - 1))
+        pi_n = jnp.where(pick, pi_a, -gg)
+        x_n = jnp.where(pick, x_a, xb)
+        return x_n, pi_n, x_n + pi_n / sigma
+
+    flat_fn = jax.jit(collapsed)
+
+    split = np.array_split(np.arange(n), leaves)
+    cut = lambda v: [v[:, idx] for idx in split]
+    xs, gs, ps, hs = cut(xbar_c), cut(g), cut(pi), cut(h)
+
+    @jax.jit
+    def leafwise(xs, gs, ps, hs):
+        return [collapsed(a, b, c, d) for a, b, c, d in zip(xs, gs, ps, hs)]
+
+    unrolled = jax.jit(
+        lambda: fedgia_update_flat(xbar_c, g, pi, h, sel, sigma, m, k0=k0,
+                                   use_kernel=False))
+    return [
+        (f"fedgia_update_flat_fused_m{m}_n{n}", _time(flat_fn, xbar_c, g, pi, h)),
+        (f"fedgia_update_pytree_{leaves}leaf_m{m}_n{n}",
+         _time(leafwise, xs, gs, ps, hs)),
+        (f"fedgia_update_unrolled_ref_k0{k0}", _time(unrolled)),
+    ]
+
+
 def main():
     rows = []
     rows += bench_collapsed_vs_unrolled()
     rows += bench_fedgia_vs_fedavg()
+    rows += bench_flat_update()
     for name, us in rows:
         print(f"{name},{us:.1f},")
-    return rows
+    # machine-readable: benchmarks/run.py dumps this under "kernels" in
+    # BENCH_engine.json so the flat/kernel update cost is tracked next to
+    # the engine round/s trajectory
+    return {"unit": "us", "micro": {name: us for name, us in rows}}
 
 
 if __name__ == "__main__":

@@ -48,12 +48,15 @@ SECTIONS = {
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=sorted(SECTIONS), default=None)
+    ap.add_argument("--only", choices=sorted(SECTIONS), default=None,
+                    action="append",
+                    help="run only the named section(s); repeatable "
+                         "(e.g. --only engine --only kernels)")
     ap.add_argument("--json", default="BENCH_engine.json",
                     help="where to write the machine-readable engine "
                          "results (written when the engine section runs)")
     args = ap.parse_args()
-    names = [args.only] if args.only else list(SECTIONS)
+    names = args.only if args.only else list(SECTIONS)
     results = {}
     for name in names:
         print(f"\n===== {name} =====")

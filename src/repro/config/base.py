@@ -232,6 +232,13 @@ class FedConfig:
     auto_lipschitz: bool = False
     h_policy: str = "diag_ema"  # diag_ema | scalar | gram (linear models only)
     collapsed: bool = True  # beyond-paper exact closed-form round (DESIGN §6 B1)
+    # flat-buffer round path (engine `flat=True`): route the collapsed
+    # ADMM/GD branch through the batched Pallas kernel
+    # (kernels/fedgia_update). None = auto (kernel on TPU, fused jnp
+    # closed form elsewhere); kernel_interpret runs the kernel in Pallas
+    # interpret mode (CPU tests).
+    use_kernel: Optional[bool] = None
+    kernel_interpret: bool = False
     client_axes: Tuple[str, ...] = ("data",)  # mesh axes that enumerate clients
     # §Perf knobs (see EXPERIMENTS.md):
     # fsdp_axes: additionally shard client-state inner dims over these mesh

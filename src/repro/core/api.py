@@ -18,6 +18,8 @@ from typing import Any, Callable, Dict, Optional, Protocol, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.utils import pytree as pt
+
 LossFn = Callable[[Any, Any], Tuple[jax.Array, Dict[str, jax.Array]]]
 
 
@@ -212,6 +214,107 @@ def masked_update(mask, new_tree, old_tree):
     return jax.tree.map(
         lambda n, o: jnp.where(_mask_bcast(mask, n), n, o), new_tree, old_tree
     )
+
+
+def flat_grad_sq_norm(grads_flat: jax.Array, spec) -> jax.Array:
+    """The `grad_sq_norm` diagnostic ||(1/m) Σ_i ∇f_i||² over the FLAT
+    (m_local, N) gradient buffer, without a model-size all-reduce.
+
+    Unsharded this unravels the all-client gradient mean and takes the
+    pytree sq-norm — BITWISE the pytree path's
+    ``tree_sq_norm(client_mean(grads))`` (per-leaf vdot accumulation in
+    treedef order, which a whole-buffer vdot would not reproduce).
+
+    Under client sharding the metric only needs the SCALAR norm, never the
+    replicated mean, so the full `psum` of the (N,) gradient sum is
+    replaced by the cheaper `psum_scatter`: each shard receives one
+    contiguous chunk of the global gradient sum, squares it locally, and a
+    scalar psum of the chunk norms yields ||Σ||²/m². The lowered HLO
+    contains a reduce-scatter + a scalar all-reduce — NO second model-size
+    all-reduce, which is what keeps the flat sharded round at exactly one
+    (tests/test_flat.py). Falls back to a full psum when the buffer does
+    not divide over the shards (never the case for the LANES-padded spec
+    with power-of-two shard counts)."""
+    if _CLIENT_AXIS is None:
+        return pt.tree_sq_norm(spec.unravel(jnp.mean(grads_flat, axis=0)))
+    name, shards = _CLIENT_AXIS
+    m_global = grads_flat.shape[0] * shards
+    g_sum = jnp.sum(grads_flat, axis=0)
+    if g_sum.shape[-1] % shards == 0:
+        chunk = jax.lax.psum_scatter(g_sum, name, scatter_dimension=0,
+                                     tiled=True)
+        sq = jax.lax.psum(jnp.vdot(chunk, chunk), name)
+    else:
+        total = jax.lax.psum(g_sum, name)
+        sq = jnp.vdot(total, total)
+    return sq / jnp.float32(m_global) ** 2
+
+
+def flat_round_aggregate(contrib, grads, losses, sel_vec, spec,
+                         mask: Optional[jax.Array] = None,
+                         weights: Optional[jax.Array] = None,
+                         extra_mean: Optional[jax.Array] = None):
+    """Eq. (11) + the round's diagnostics over the FLAT client buffer, in
+    ONE collective (used by the four baselines' flat rounds, whose local
+    trajectories — unlike FedGiA's z — are already functions of this
+    round's gradients, so aggregation and diagnostics can share a psum).
+
+    `contrib` is the (m_local, N) flat client contribution, `grads` the
+    (m_local, N) flat raw per-client gradients, `losses` the (m_local,)
+    per-client loss and `sel_vec` the (m_local,) participation indicator
+    (pre-masked) for the `selected` metric. `extra_mean` optionally rides
+    one more (m_local, N) buffer through the same psum as a plain
+    all-client mean (SCAFFOLD's control-variate delta). Returns
+    ``(agg, grad_sq_norm, f_mean, n_sel[, extra])``.
+
+    Unsharded this is exactly `client_mean` + `jnp.mean` / `jnp.sum` +
+    :func:`flat_grad_sq_norm` — BITWISE the pytree path's reductions on
+    the raveled layout. Under client sharding every local partial sum
+    rides a single `jax.lax.psum` tuple and the gradient norm goes
+    through `flat_grad_sq_norm`'s reduce-scatter, so the lowered round
+    contains exactly ONE (model-size) all-reduce instruction — eq. (11)
+    as one contiguous communication (HLO-asserted in tests/test_flat.py).
+    The fused psum sums local SUMS instead of pmean-ing local means, so
+    the sharded flat round matches the sharded pytree round only to fp
+    tolerance (same caveat as `client_mean(mask=...)`)."""
+    gsq = flat_grad_sq_norm(grads, spec)
+    if _CLIENT_AXIS is None:
+        agg = client_mean(contrib, mask=mask, weights=weights)
+        out = (agg, gsq, jnp.mean(losses), jnp.sum(sel_vec))
+        if extra_mean is not None:
+            out = out + (jnp.mean(extra_mean, axis=0),)
+        return out
+    name, shards = _CLIENT_AXIS
+    m_global = contrib.shape[0] * shards
+    if weights is not None:
+        w = weights.astype(jnp.float32)
+        if mask is not None:
+            w = jnp.where(mask, w, 0.0)
+        num = jnp.sum(w[:, None].astype(contrib.dtype) * contrib, axis=0)
+        den = jnp.sum(w)
+    elif mask is not None:
+        num = jnp.sum(jnp.where(mask[:, None], contrib, 0), axis=0)
+        den = jnp.sum(mask.astype(jnp.float32))
+    else:
+        num = jnp.sum(contrib, axis=0)
+        den = None  # static m_global, no rider needed
+    n_buf = num.shape[0]
+    if extra_mean is not None:
+        # concatenate the rider onto the numerator: ONE all-reduce
+        # instruction even when the backend skips the collective combiner
+        num = jnp.concatenate(
+            [num, jnp.sum(extra_mean, axis=0).astype(num.dtype)])
+    local = (num, jnp.sum(losses), jnp.sum(sel_vec))
+    if den is not None:
+        local = local + (den,)
+    red = jax.lax.psum(local, name)  # the round's ONE all-reduce
+    den_red = (red[3].astype(red[0].dtype) if den is not None
+               else jnp.asarray(m_global, red[0].dtype))
+    agg = red[0][:n_buf] / den_red
+    out = (agg, gsq, red[1] / m_global, red[2])
+    if extra_mean is not None:
+        out = out + (red[0][n_buf:] / m_global,)
+    return out
 
 
 def per_client_value_and_grad(loss_fn: LossFn):

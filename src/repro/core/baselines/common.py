@@ -35,3 +35,41 @@ def round_metrics(losses, grads, round_idx, mask=None):
         "selected": api.client_scalar_sum(jnp.ones_like(losses), mask=mask),
         "cr": 2.0 * (round_idx + 1).astype(jnp.float32),
     }
+
+
+# ------------------------------------------------------------- flat buffer
+def flat_value_and_grad(vg_stacked, spec):
+    """Route a stacked value-and-grad through the flat (m, N) view.
+
+    The baselines' local GD loops carry their per-client trajectories as
+    one contiguous (m, N) buffer (engine `flat=True`); the loss is still
+    a pytree function of the model, so each gradient evaluation unravels
+    the buffer, evaluates, and ravels the gradients back — the ONLY
+    pytree boundary in the local loop. An unravel->ravel round trip is
+    exact (RavelSpec casts to a wider-or-equal dtype), so the flat local
+    steps are bitwise the pytree local steps on the raveled layout."""
+
+    def fvg(x_flat, batch):
+        losses, grads = vg_stacked(spec.unravel_stacked(x_flat), batch)
+        return losses, spec.ravel_stacked(grads)
+
+    return fvg
+
+
+def participation_vec(losses, mask):
+    """The (m_local,) `selected`-metric indicator: 1 for participants, 0
+    for masked-out clients (matches `client_scalar_sum(ones, mask=...)`
+    bitwise)."""
+    ones = jnp.ones_like(losses)
+    return ones if mask is None else jnp.where(mask, ones, 0)
+
+
+def round_metrics_flat(gsq, f_mean, n_sel, round_idx):
+    """`round_metrics` from the outputs of `api.flat_round_aggregate` (the
+    flat rounds compute the reductions fused with eq. (11)'s psum)."""
+    return {
+        "f_xbar": f_mean,
+        "grad_sq_norm": gsq,
+        "selected": n_sel,
+        "cr": 2.0 * (round_idx + 1).astype(jnp.float32),
+    }

@@ -13,13 +13,21 @@ import jax.numpy as jnp
 from repro.config import FedConfig
 from repro.core import api
 from repro.core.api import LossFn, broadcast_clients
-from repro.core.baselines.common import lr_schedule, round_metrics
+from repro.core.baselines.common import (
+    flat_value_and_grad,
+    lr_schedule,
+    participation_vec,
+    round_metrics,
+    round_metrics_flat,
+)
 from repro.utils import pytree as pt
 
 
 class FedAvg:
     name = "fedavg"
     client_state_keys = ()
+    flat_client_keys = ()
+    flat_global_keys = ("x",)
 
     def __init__(self, fed: FedConfig, loss_fn: LossFn, model=None):
         self.fed = fed
@@ -80,6 +88,52 @@ class FedAvg:
             x=x_new, round=state["round"] + 1, step=state["step"] + fed.k0
         )
         metrics = round_metrics(losses0, grads0, state["round"], mask=mask)
+        metrics["local_grad_evals"] = jnp.float32(fed.k0)
+        if stale is not None:
+            return new_state, stale, metrics
+        return new_state, metrics
+
+    # ------------------------------------------------------------ flat round
+    def round_flat(self, state, batch, spec, mask=None, stale=None):
+        """`round` on the flat (m, N) trajectory buffer (engine flat=True):
+        the k0 local steps update one contiguous array, the gradient
+        evaluation is the only pytree boundary
+        (`common.flat_value_and_grad`), and the aggregation + diagnostics
+        ride ONE fused reduction (`api.flat_round_aggregate`) — eq. (11)
+        as the round's single model-size all-reduce under sharding."""
+        fed = self.fed
+        m = api.local_client_count(fed.num_clients)
+        if stale is None:
+            xc = broadcast_clients(state["x"], m)
+        else:
+            xc, stale = api.stale_xbar_view(stale, state["x"], mask)
+        fvg = flat_value_and_grad(self._vg_stacked, spec)
+
+        def local_step(carry, j):
+            x, first = carry
+            losses, grads = fvg(x, batch)
+            lr = lr_schedule(fed.lr, state["step"] + j)
+            x_new = x - lr * grads.astype(x.dtype)
+            first = jax.tree.map(
+                lambda f, new: jnp.where(j == 0, new, f), first,
+                (losses, grads)
+            )
+            return (x_new, first), None
+
+        first0 = (jnp.zeros((m,), jnp.float32), jnp.zeros_like(xc))
+        (xc_new, (losses0, grads0)), _ = jax.lax.scan(
+            local_step, (xc, first0), jnp.arange(fed.k0)
+        )
+        x_new, gsq, f_mean, n_sel = api.flat_round_aggregate(
+            xc_new, grads0, losses0, participation_vec(losses0, mask), spec,
+            mask=mask, weights=api.stale_weights(stale),
+        )
+
+        new_state = dict(state)
+        new_state.update(
+            x=x_new, round=state["round"] + 1, step=state["step"] + fed.k0
+        )
+        metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
         metrics["local_grad_evals"] = jnp.float32(fed.k0)
         if stale is not None:
             return new_state, stale, metrics

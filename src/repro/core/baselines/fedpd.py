@@ -16,13 +16,21 @@ import jax.numpy as jnp
 from repro.config import FedConfig
 from repro.core import api
 from repro.core.api import LossFn, broadcast_clients
-from repro.core.baselines.common import lr_schedule, round_metrics
+from repro.core.baselines.common import (
+    flat_value_and_grad,
+    lr_schedule,
+    participation_vec,
+    round_metrics,
+    round_metrics_flat,
+)
 from repro.utils import pytree as pt
 
 
 class FedPD:
     name = "fedpd"
     client_state_keys = ("lam",)
+    flat_client_keys = ("lam",)
+    flat_global_keys = ("x",)
 
     def __init__(self, fed: FedConfig, loss_fn: LossFn, model=None):
         self.fed = fed
@@ -110,6 +118,67 @@ class FedPD:
             step=state["step"] + fed.k0,
         )
         metrics = round_metrics(losses0, grads0, state["round"], mask=mask)
+        metrics["local_grad_evals"] = jnp.float32(fed.k0 * fed.inner_steps)
+        if stale is not None:
+            return new_state, stale, metrics
+        return new_state, metrics
+
+    # ------------------------------------------------------------ flat round
+    def round_flat(self, state, batch, spec, mask=None, stale=None):
+        """`round` on the flat (m, N) buffers: per-client primal-dual
+        anchors and duals are contiguous arrays, the gradient evaluation
+        the only pytree boundary, and eq. (11) + diagnostics one fused
+        reduction (see FedAvg.round_flat)."""
+        fed = self.fed
+        m = api.local_client_count(fed.num_clients)
+        eta = fed.fedpd_eta
+        if stale is None:
+            anchors = broadcast_clients(state["x"], m)
+        else:
+            anchors, stale = api.stale_xbar_view(stale, state["x"], mask)
+        fvg = flat_value_and_grad(self._vg_stacked, spec)
+
+        def local_step(carry, j):
+            anchor, lam, first = carry
+            lr = lr_schedule(fed.lr, state["step"] + j)
+
+            def inner(x, _):
+                losses, grads = fvg(x, batch)
+                g = grads + lam + (x - anchor) / eta
+                x_new = x - lr * g.astype(x.dtype)
+                return x_new, (losses, grads)
+
+            xi, (losses, grads) = jax.lax.scan(
+                inner, anchor, None, length=fed.inner_steps
+            )
+            lam_new = lam + (xi - anchor) / eta
+            anchor_new = xi + eta * lam_new
+            first = jax.tree.map(
+                lambda f, new: jnp.where(j == 0, new, f),
+                first,
+                (losses[0], grads[0]),
+            )
+            return (anchor_new, lam_new, first), None
+
+        first0 = (jnp.zeros((m,), jnp.float32), jnp.zeros_like(anchors))
+        (anchors_new, lam_new, (losses0, grads0)), _ = jax.lax.scan(
+            local_step, (anchors, state["lam"], first0), jnp.arange(fed.k0)
+        )
+        if mask is not None:
+            lam_new = api.masked_update(mask, lam_new, state["lam"])
+        x_new, gsq, f_mean, n_sel = api.flat_round_aggregate(
+            anchors_new, grads0, losses0, participation_vec(losses0, mask),
+            spec, mask=mask, weights=api.stale_weights(stale),
+        )
+
+        new_state = dict(state)
+        new_state.update(
+            x=x_new,
+            lam=lam_new,
+            round=state["round"] + 1,
+            step=state["step"] + fed.k0,
+        )
+        metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
         metrics["local_grad_evals"] = jnp.float32(fed.k0 * fed.inner_steps)
         if stale is not None:
             return new_state, stale, metrics

@@ -9,13 +9,21 @@ import jax.numpy as jnp
 from repro.config import FedConfig
 from repro.core import api
 from repro.core.api import LossFn, broadcast_clients
-from repro.core.baselines.common import lr_schedule, round_metrics
+from repro.core.baselines.common import (
+    flat_value_and_grad,
+    lr_schedule,
+    participation_vec,
+    round_metrics,
+    round_metrics_flat,
+)
 from repro.utils import pytree as pt
 
 
 class FedProx:
     name = "fedprox"
     client_state_keys = ()
+    flat_client_keys = ()
+    flat_global_keys = ("x",)
 
     def __init__(self, fed: FedConfig, loss_fn: LossFn, model=None):
         self.fed = fed
@@ -86,6 +94,58 @@ class FedProx:
             x=x_new, round=state["round"] + 1, step=state["step"] + fed.k0
         )
         metrics = round_metrics(losses0, grads0, state["round"], mask=mask)
+        metrics["local_grad_evals"] = jnp.float32(fed.k0 * fed.inner_steps)
+        if stale is not None:
+            return new_state, stale, metrics
+        return new_state, metrics
+
+    # ------------------------------------------------------------ flat round
+    def round_flat(self, state, batch, spec, mask=None, stale=None):
+        """`round` on the flat (m, N) trajectory buffer: the proximal GD
+        loop is contiguous elementwise math, the gradient evaluation the
+        only pytree boundary, and eq. (11) + diagnostics one fused
+        reduction (see FedAvg.round_flat)."""
+        fed = self.fed
+        m = api.local_client_count(fed.num_clients)
+        if stale is None:
+            xc = broadcast_clients(state["x"], m)
+        else:
+            xc, stale = api.stale_xbar_view(stale, state["x"], mask)
+        fvg = flat_value_and_grad(self._vg_stacked, spec)
+
+        def local_step(carry, j):
+            x, first = carry
+            lr = lr_schedule(fed.lr, state["step"] + j)
+
+            def inner(x, _):
+                losses, grads = fvg(x, batch)
+                g = grads + fed.prox_mu * (x - xc)
+                x_new = x - lr * g.astype(x.dtype)
+                return x_new, (losses, grads)
+
+            x, (losses, grads) = jax.lax.scan(inner, x, None,
+                                              length=fed.inner_steps)
+            first = jax.tree.map(
+                lambda f, new: jnp.where(j == 0, new, f),
+                first,
+                (losses[0], grads[0]),
+            )
+            return (x, first), None
+
+        first0 = (jnp.zeros((m,), jnp.float32), jnp.zeros_like(xc))
+        (xc_new, (losses0, grads0)), _ = jax.lax.scan(
+            local_step, (xc, first0), jnp.arange(fed.k0)
+        )
+        x_new, gsq, f_mean, n_sel = api.flat_round_aggregate(
+            xc_new, grads0, losses0, participation_vec(losses0, mask), spec,
+            mask=mask, weights=api.stale_weights(stale),
+        )
+
+        new_state = dict(state)
+        new_state.update(
+            x=x_new, round=state["round"] + 1, step=state["step"] + fed.k0
+        )
+        metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
         metrics["local_grad_evals"] = jnp.float32(fed.k0 * fed.inner_steps)
         if stale is not None:
             return new_state, stale, metrics

@@ -13,13 +13,21 @@ import jax.numpy as jnp
 from repro.config import FedConfig
 from repro.core import api
 from repro.core.api import LossFn, broadcast_clients
-from repro.core.baselines.common import lr_schedule, round_metrics
+from repro.core.baselines.common import (
+    flat_value_and_grad,
+    lr_schedule,
+    participation_vec,
+    round_metrics,
+    round_metrics_flat,
+)
 from repro.utils import pytree as pt
 
 
 class Scaffold:
     name = "scaffold"
     client_state_keys = ("ci",)
+    flat_client_keys = ("ci",)
+    flat_global_keys = ("x", "c")
 
     def __init__(self, fed: FedConfig, loss_fn: LossFn, model=None):
         self.fed = fed
@@ -112,6 +120,65 @@ class Scaffold:
             step=state["step"] + fed.k0,
         )
         metrics = round_metrics(losses0, grads0, state["round"], mask=mask)
+        metrics["local_grad_evals"] = jnp.float32(fed.k0)
+        if stale is not None:
+            return new_state, stale, metrics
+        return new_state, metrics
+
+    # ------------------------------------------------------------ flat round
+    def round_flat(self, state, batch, spec, mask=None, stale=None):
+        """`round` on the flat (m, N) buffers: trajectories and control
+        variates are contiguous arrays, and the server-model mean, the
+        control-variate delta mean AND the diagnostics all ride eq. (11)'s
+        ONE fused reduction (`extra_mean=` in `api.flat_round_aggregate`)
+        — the pytree round needs three model-size all-reduces for the
+        same quantities under sharding."""
+        fed = self.fed
+        m = api.local_client_count(fed.num_clients)
+        if stale is None:
+            xc = broadcast_clients(state["x"], m)
+        else:
+            xc, stale = api.stale_xbar_view(stale, state["x"], mask)
+        lr = lr_schedule(fed.lr, state["step"])
+        fvg = flat_value_and_grad(self._vg_stacked, spec)
+
+        def local_step(carry, j):
+            y, first = carry
+            losses, grads = fvg(y, batch)
+            lr_j = lr_schedule(fed.lr, state["step"] + j)
+            y_new = y - lr_j * (grads + state["c"][None]
+                                - state["ci"]).astype(y.dtype)
+            first = jax.tree.map(
+                lambda f, new: jnp.where(j == 0, new, f), first,
+                (losses, grads)
+            )
+            return (y_new, first), None
+
+        first0 = (jnp.zeros((m,), jnp.float32), jnp.zeros_like(xc))
+        (y, (losses0, grads0)), _ = jax.lax.scan(
+            local_step, (xc, first0), jnp.arange(fed.k0)
+        )
+
+        denom = fed.k0 * lr
+        ci_new = state["ci"] - state["c"][None] + (xc - y) / denom
+        if mask is not None:
+            ci_new = api.masked_update(mask, ci_new, state["ci"])
+        x_new, gsq, f_mean, n_sel, dci = api.flat_round_aggregate(
+            y, grads0, losses0, participation_vec(losses0, mask), spec,
+            mask=mask, weights=api.stale_weights(stale),
+            extra_mean=ci_new - state["ci"],
+        )
+        c_new = state["c"] + dci
+
+        new_state = dict(state)
+        new_state.update(
+            x=x_new,
+            c=c_new,
+            ci=ci_new,
+            round=state["round"] + 1,
+            step=state["step"] + fed.k0,
+        )
+        metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
         metrics["local_grad_evals"] = jnp.float32(fed.k0)
         if stale is not None:
             return new_state, stale, metrics

@@ -44,6 +44,19 @@ not math. This engine removes both costs without changing a single number
     staleness-aware weighted mean (`api.stale_weights`) — uniform
     weighting is today's unweighted path, bitwise. See docs/async.md.
 
+  * **flat-buffer rounds** — `flat=True` (default) ravels the model-shaped
+    state ONCE at the `run_rounds` boundary (`utils.pytree.ravel_spec`):
+    client state becomes one contiguous lane-padded (m, N) buffer per key,
+    anchors (N,) vectors, and the rounds dispatch to `algo.round_flat`.
+    Eq. (11) is a mean over a single array (under sharding: the round's
+    ONE model-size all-reduce), the stale anchor buffer is one (m, N)
+    array, and FedGiA's ADMM/GD branch is one fused elementwise pass
+    (the batched Pallas `kernels/fedgia_update` kernel on TPU). The
+    pytree layout is reconstructed only at the gradient/metric
+    boundaries and at return; `flat=False` (`--no-flat`) keeps the
+    per-leaf pytree rounds, bitwise-equal on a single device
+    (tests/test_flat.py). See docs/engine.md#flat-buffer-round-state.
+
 Scan-carry layout (donated between chunks):
 
     (state, policy_state, clock_state, stale, done, rounds_run)
@@ -70,6 +83,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import api
+from repro.utils import pytree as pt
 
 
 @dataclasses.dataclass
@@ -104,8 +118,38 @@ def _batch_specs(batch_like, axis: str):
     return jax.tree.map(lambda l: _full_spec(axis, l.ndim), batch_like)
 
 
+def flatten_state(algo, state, spec):
+    """Ravel the algorithm state's model-shaped entries into flat buffers:
+    `algo.flat_global_keys` -> (N,) vectors, `algo.flat_client_keys` ->
+    one (m, N) buffer each (`spec` = `pt.ravel_spec(state["x"])`). Done
+    ONCE at the `run_rounds` boundary; everything else (rng, scalars,
+    gram factors) passes through untouched."""
+    out = dict(state)
+    for k in getattr(algo, "flat_global_keys", ()):
+        if k in out:
+            out[k] = spec.ravel(out[k])
+    for k in getattr(algo, "flat_client_keys", ()):
+        if k in out:
+            out[k] = spec.ravel_stacked(out[k])
+    return out
+
+
+def unflatten_state(algo, state, spec):
+    """Inverse of `flatten_state` — the return boundary: callers always
+    see the pytree state layout, whichever path ran the rounds."""
+    out = dict(state)
+    for k in getattr(algo, "flat_global_keys", ()):
+        if k in out:
+            out[k] = spec.unravel(out[k])
+    for k in getattr(algo, "flat_client_keys", ()):
+        if k in out:
+            out[k] = spec.unravel_stacked(out[k])
+    return out
+
+
 def make_round_fn(algo, mesh=None, client_axis: str = "data",
-                  masked: bool = False, stale: bool = False):
+                  masked: bool = False, stale: bool = False,
+                  flat_spec=None):
     """`algo.round`, optionally wrapped in `shard_map` over the client axis.
 
     `masked=True` returns a `(state, batch, mask) -> (state, metrics)`
@@ -119,14 +163,24 @@ def make_round_fn(algo, mesh=None, client_axis: str = "data",
     client axis, so it enters and leaves `shard_map` with per-client
     specs — the stale-anchor selects are shard-local and the round keeps
     eq. (11) as its ONE model-size psum.
+
+    `flat_spec` (a `pt.RavelSpec`) selects the FLAT round: the callable
+    has the same signature but `state` carries the raveled (m, N) /
+    (N,) buffers (`flatten_state`) and dispatch goes to
+    `algo.round_flat(state, batch, spec, ...)` instead of `algo.round`.
     """
+    if flat_spec is not None:
+        base_round = lambda state, batch, *extra: algo.round_flat(
+            state, batch, flat_spec, *extra)
+    else:
+        base_round = algo.round
     if mesh is None:
         if stale:
-            return lambda state, batch, mask, sl: algo.round(
+            return lambda state, batch, mask, sl: base_round(
                 state, batch, mask, sl)
         if masked:
-            return lambda state, batch, mask: algo.round(state, batch, mask)
-        return algo.round
+            return lambda state, batch, mask: base_round(state, batch, mask)
+        return base_round
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     if client_axis not in axis_sizes:
         raise ValueError(f"mesh has no axis {client_axis!r}: {mesh.axis_names}")
@@ -142,10 +196,10 @@ def make_round_fn(algo, mesh=None, client_axis: str = "data",
     def body(state, batch, *extra):
         # context makes api.client_mean/... collective over `client_axis`
         with api.client_sharding(client_axis, shards):
-            return algo.round(state, batch, *extra)
+            return base_round(state, batch, *extra)
 
     def sharded_round(state, batch, *extra):
-        abs_out = jax.eval_shape(algo.round, state, batch, *extra)
+        abs_out = jax.eval_shape(base_round, state, batch, *extra)
         in_specs = (_state_specs(algo, state, client_axis),
                     _batch_specs(batch, client_axis))
         if masked or stale:
@@ -184,6 +238,9 @@ def shard_inputs(algo, state, batch, mesh, client_axis: str = "data"):
 
 
 # ------------------------------------------------------------------ driver
+AUTO_CHUNK_CANDIDATES = (8, 32, 128)
+
+
 def run_rounds(
     algo,
     state,
@@ -193,7 +250,7 @@ def run_rounds(
     tol: float = 0.0,
     tol_metric: str = "grad_sq_norm",
     scan: bool = True,
-    chunk_size: int = 0,
+    chunk_size=0,
     donate: Optional[bool] = None,
     mesh=None,
     client_axis: str = "data",
@@ -203,13 +260,37 @@ def run_rounds(
     clock=None,
     stale_weighting: str = "uniform",
     stale_decay: float = 1.0,
+    flat: bool = True,
 ) -> RoundResult:
     """Run up to `num_rounds` communication rounds of `algo`.
 
     tol > 0 enables the paper's stopping rule (eq. 35): stop after the
     first round with metrics[tol_metric] < tol (that round counts as run).
     chunk_size=0 picks a default: the whole run when tol is off, else 32
-    rounds between (single-boolean) host checks.
+    rounds between (single-boolean) host checks. chunk_size="auto"
+    autotunes on the live run (unsharded scan path only — the sharded
+    path has no AOT warm-up, so candidate timings would measure
+    compilation): the first chunks execute the AOT-pre-compiled
+    `AUTO_CHUNK_CANDIDATES` lengths in turn, each is timed, and the
+    fastest per-round candidate drives the remainder. The rounds executed
+    are identical whatever the timings, so with tol <= 0 results are
+    bitwise deterministic; with tol > 0 only the stop GRANULARITY (which
+    is already chunk-dependent) can differ between machines.
+
+    flat=True (default) runs the FLAT round path when the algorithm
+    provides it (`round_flat`): the model-shaped state is raveled ONCE
+    into contiguous lane-padded buffers (`utils.pytree.ravel_spec`) —
+    client state one (m, N) array, anchors (N,) — the scan/legacy/sharded
+    drivers carry those buffers, and the pytree layout is reconstructed
+    only at the gradient/metric boundaries inside the round and at this
+    function's return. Eq. (11) becomes one contiguous model-size
+    reduction (under sharding: the round's single model-size all-reduce,
+    HLO-asserted in tests/test_flat.py) and FedGiA's branch update a
+    single fused elementwise pass (the batched Pallas kernel on TPU).
+    `flat=False` (`--no-flat` in the launchers) keeps the per-leaf pytree
+    rounds; both paths produce bitwise-identical results on every
+    single-device configuration (fp-tolerance where the Pallas kernel or
+    the sharded fused psum is involved — tests/test_flat.py).
 
     participation: a `core.selection.ParticipationPolicy`. Its state rides
     in the scan carry and a fresh (m,) mask is drawn ON DEVICE each round
@@ -241,6 +322,23 @@ def run_rounds(
     """
     if num_rounds <= 0:
         return RoundResult(state, {}, 0, False, 0.0)
+    auto_chunk = isinstance(chunk_size, str)
+    if auto_chunk:
+        if chunk_size != "auto":
+            raise ValueError(
+                f"chunk_size must be an int or 'auto', got {chunk_size!r}")
+        if not scan:
+            raise ValueError(
+                "chunk_size='auto' tunes the scan chunk length — the "
+                "legacy per-round loop (scan=False) has no chunks")
+        if mesh is not None:
+            # chunks compile lazily under a mesh (GSPMD may re-place carry
+            # leaves between chunks, so there is no AOT warm-up) — the
+            # candidate timings would measure compilation, not rounds
+            raise ValueError(
+                "chunk_size='auto' needs AOT-precompiled candidates to "
+                "time execution, which the sharded path does not have — "
+                "pass a fixed chunk_size under a mesh")
     if clock is not None:
         if participation is not None:
             raise ValueError(
@@ -279,8 +377,14 @@ def run_rounds(
                 "async_rounds needs the global anchor under state['x'] "
                 "(FederatedAlgorithm state contract)"
             )
+    flat = flat and hasattr(algo, "round_flat")
+    spec = pt.ravel_spec(state["x"]) if flat else None
+    if flat:
+        # the ONE ravel of the run: everything downstream carries the
+        # contiguous buffers; the inverse runs at the return boundary.
+        state = flatten_state(algo, state, spec)
     round_fn = make_round_fn(algo, mesh, client_axis, masked=masked,
-                             stale=async_rounds)
+                             stale=async_rounds, flat_spec=spec)
     if mesh is not None:
         state, batch = shard_inputs(algo, state, batch, mesh, client_axis)
     if donate is None:
@@ -292,10 +396,16 @@ def run_rounds(
         if async_rounds else ()
     )
     if not scan:
-        return _run_legacy_loop(round_fn, state, batch, num_rounds, tol,
-                                tol_metric, participation, stale0,
-                                async_rounds, clock)
-    if chunk_size <= 0:
+        res = _run_legacy_loop(round_fn, state, batch, num_rounds, tol,
+                               tol_metric, participation, stale0,
+                               async_rounds, clock)
+        if flat:
+            res = dataclasses.replace(
+                res, state=unflatten_state(algo, res.state, spec))
+        return res
+    if auto_chunk:
+        chunk_size = AUTO_CHUNK_CANDIDATES[0]
+    elif chunk_size <= 0:
         chunk_size = num_rounds if tol <= 0 else min(num_rounds, 32)
 
     pstate = participation.init() if participation is not None else ()
@@ -372,19 +482,45 @@ def run_rounds(
     carry = (state, pstate, cstate, stale0, jnp.zeros((), bool),
              jnp.zeros((), jnp.int32))
 
+    # chunk_size="auto": the first chunks run the candidate lengths in
+    # turn (clipped to the rounds left — the rounds executed are the same
+    # whatever the timings), then the fastest per-round candidate drives
+    # the remainder.
+    plan = None
+    if auto_chunk:
+        plan, rem_after = [], num_rounds
+        for cand in AUTO_CHUNK_CANDIDATES:
+            if rem_after <= 0:
+                break
+            plan.append(min(cand, rem_after))
+            rem_after -= plan[-1]
+
     if mesh is None:
         # Pre-compile (AOT) every chunk length this run can need — at most
-        # two — so wall_s measures execution, matching the legacy warm-up
-        # convention. The compiled executables are called directly; on a
-        # single device input/output placements are trivially consistent.
-        # (Under a mesh, GSPMD may re-place carry leaves between chunks, so
-        # there we let jit handle compilation on first call instead.)
-        lengths = {min(chunk_size, num_rounds)}
-        if num_rounds % chunk_size and tol <= 0:
-            # with tol off the remainder chunk always runs; with tol on,
-            # converging runs never reach it, so leave it to compile
-            # lazily (get_chunk falls back to plain jit on first call)
-            lengths.add(num_rounds % chunk_size)
+        # two (fixed chunk) or the candidate set plus each possible
+        # remainder (auto) — so wall_s measures execution, matching the
+        # legacy warm-up convention. The compiled executables are called
+        # directly; on a single device input/output placements are
+        # trivially consistent. (Under a mesh, GSPMD may re-place carry
+        # leaves between chunks, so there we let jit handle compilation on
+        # first call instead.)
+        if auto_chunk:
+            lengths = set(plan)
+            if tol <= 0 and rem_after > 0:
+                # whatever candidate wins, the remainder runs full chunks
+                # of it plus one partial chunk
+                for cand in set(plan):
+                    lengths.add(min(cand, rem_after))
+                    if rem_after % cand:
+                        lengths.add(rem_after % cand)
+        else:
+            lengths = {min(chunk_size, num_rounds)}
+            if num_rounds % chunk_size and tol <= 0:
+                # with tol off the remainder chunk always runs; with tol
+                # on, converging runs never reach it, so leave it to
+                # compile lazily (get_chunk falls back to plain jit on
+                # first call)
+                lengths.add(num_rounds % chunk_size)
         abs_of = lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)
         for length in lengths:
             chunks[length] = get_chunk(length).lower(
@@ -392,11 +528,21 @@ def run_rounds(
             ).compile()
 
     chunk_metrics = []
+    timings = []
     remaining = num_rounds
     t0 = time.time()
     while remaining > 0:
-        c = min(chunk_size, remaining)
-        carry, mets = get_chunk(c)(carry, batch)
+        if plan:
+            c = plan.pop(0)
+            tc = time.time()
+            carry, mets = get_chunk(c)(carry, batch)
+            jax.block_until_ready(carry[5])
+            timings.append(((time.time() - tc) / c, c))
+            if not plan:
+                chunk_size = min(timings)[1]
+        else:
+            c = min(chunk_size, remaining)
+            carry, mets = get_chunk(c)(carry, batch)
         chunk_metrics.append(mets)
         remaining -= c
         if tol > 0 and bool(carry[4]):  # the chunk's ONE host sync
@@ -412,6 +558,8 @@ def run_rounds(
         k: np.concatenate([np.asarray(m[k]) for m in mets_host])[:rounds_run]
         for k in mets_host[0]
     }
+    if flat:
+        state = unflatten_state(algo, state, spec)
     return RoundResult(state, history, rounds_run, stopped, wall)
 
 

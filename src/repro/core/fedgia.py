@@ -34,6 +34,7 @@ import jax.scipy.linalg as jsl
 from repro.config import FedConfig
 from repro.core import api, hparams, selection
 from repro.core.api import LossFn, broadcast_clients, per_client_value_and_grad
+from repro.kernels.fedgia_update import fedgia_update_flat, kernel_by_default
 from repro.utils import pytree as pt
 
 
@@ -41,6 +42,11 @@ class FedGiA:
     name = "fedgia"
     # leaves with a leading client axis — what the engine shards over `data`
     client_state_keys = ("z", "pi", "h", "gram_chol")
+    # model-shaped state the flat engine ravels into (m, N) / (N,) buffers
+    # (gram_chol is client-stacked but not model-shaped: it stays a
+    # (m, n, n) factor either way)
+    flat_client_keys = ("z", "pi", "h")
+    flat_global_keys = ("x",)
 
     def __init__(self, fed: FedConfig, loss_fn: LossFn, model=None):
         self.fed = fed
@@ -159,6 +165,165 @@ class FedGiA:
 
         z_new = pt.tree_axpy(1.0 / sigma, pi_new, x_new)
         return x_new, pi_new, z_new
+
+    def _apply_Dinv_flat(self, state, v, spec):
+        """Flat-buffer (m, N) twin of `_apply_Dinv` — same op order, so the
+        unrolled flat iteration is bitwise the unrolled pytree iteration
+        on the raveled layout."""
+        fed, m = self.fed, self.fed.num_clients
+        sigma = state["sigma"]
+        if fed.h_policy == "gram":
+            chol = state["gram_chol"]
+            n = spec.size  # gram is restricted to single-leaf linear models
+            flat = v[:, :n]
+            out = jax.vmap(lambda c, b: jsl.cho_solve((c, False), b))(chol, flat)
+            pad = v.shape[1] - n
+            return jnp.pad(out, ((0, 0), (0, pad))) if pad else out
+        h = state.get("h")
+        if h is None:  # scalar policy: H = r I
+            return v / (state["r"] / m + sigma)
+        return v / (h / m + sigma)
+
+    def _admm_branch_flat(self, state, xbar_c, gbar, spec):
+        """k0 iterations of eqs (12)-(14) on the flat (m, N) buffer.
+
+        Mirrors `_admm_branch` operation-for-operation (division by
+        (h/m + sigma), add-of-negated relative step, axpy z), so the
+        non-kernel flat branch is bitwise the pytree branch on the
+        raveled layout."""
+        fed = self.fed
+        sigma = state["sigma"]
+        pi0 = state["pi"]
+
+        if fed.collapsed and fed.h_policy != "gram":
+            m = fed.num_clients
+            h = state.get("h")
+            hh = state["r"] if h is None else h
+            d = 1.0 / (hh / m + sigma)
+            a = 1.0 - sigma * d
+            b = pi0 + gbar
+            ak1 = a ** (fed.k0 - 1)
+            pi_new = ak1 * a * b - gbar
+            x_new = xbar_c + (-d * ak1 * b)
+        else:
+            pi_after = pi0
+            for _ in range(fed.k0 - 1):
+                x = xbar_c - self._apply_Dinv_flat(state, gbar + pi_after,
+                                                   spec)
+                pi_after = sigma * (x - xbar_c) + pi_after
+            x_new = xbar_c - self._apply_Dinv_flat(state, gbar + pi_after,
+                                                   spec)
+            pi_new = sigma * (x_new - xbar_c) + pi_after
+
+        z_new = (1.0 / sigma) * pi_new + x_new
+        return x_new, pi_new, z_new
+
+    def _use_kernel(self) -> bool:
+        """Route the collapsed diagonal-H branch through the batched Pallas
+        kernel? `FedConfig.use_kernel`: None = auto by backend."""
+        fed = self.fed
+        if not fed.collapsed or fed.h_policy == "gram":
+            return False
+        if fed.use_kernel is None:
+            return kernel_by_default()
+        return fed.use_kernel
+
+    # ------------------------------------------------------------ flat round
+    def round_flat(self, state, batch, spec, mask=None, stale=None):
+        """One communication round on the FLAT client-state buffer.
+
+        Same contract as `round`, but `state["z"]` / `state["pi"]` /
+        `state["h"]` are one (m, N) buffer each (`state["x"]` is (N,)),
+        raveled once by the engine (`utils.pytree.RavelSpec`). Eq. (11)
+        is a mean over a single contiguous array — under sharding the
+        round's ONE model-size all-reduce — and the ADMM/GD branch is a
+        single fused elementwise pass: the batched Pallas
+        `kernels/fedgia_update` kernel when `FedConfig.use_kernel`
+        resolves true (fp-equivalent), else a jnp twin that is bitwise
+        the pytree branch on the raveled layout. The pytree is
+        reconstructed only for the per-client gradient evaluation and the
+        `grad_sq_norm` metric boundary (docs/engine.md).
+        """
+        fed = self.fed
+        m = fed.num_clients
+        m_local = api.local_client_count(m)
+        sdt = jnp.dtype(fed.state_dtype)
+        sigma = state["sigma"]
+        assert stale is None or mask is not None, (
+            "stale-x̄ rounds need the engine arrival mask"
+        )
+
+        # (1) aggregation — eq. (11) as ONE contiguous model-size mean
+        # (under client sharding: the round's single model-size psum).
+        xbar = api.client_mean(state["z"], weights=api.stale_weights(stale))
+
+        # (3) client selection — identical rng stream to the pytree round.
+        rng, sel_key = jax.random.split(state["rng"])
+        if mask is None:
+            sel = api.local_client_slice(
+                selection.selection_mask(
+                    jax.random.fold_in(sel_key, state["round"]), m, fed.alpha
+                )
+            )
+        else:
+            sel = mask
+
+        # (2) per-client gradient — the one boundary that unravels: the
+        # loss is a pytree function of the model, everything around it
+        # stays flat.
+        cast = (
+            (lambda t: pt.tree_cast(t, self.model.dtype))
+            if self.model is not None and hasattr(self.model, "dtype")
+            else (lambda t: t)
+        )
+        if stale is None or stale.always_fresh:
+            if stale is not None:
+                xbar_c, stale = api.stale_xbar_view(stale, xbar, sel)
+            else:
+                xbar_c = broadcast_clients(xbar, m_local)
+            losses, grads = self._vg(cast(spec.unravel(xbar)), batch)
+        else:
+            xbar_c, stale = api.stale_xbar_view(stale, xbar, sel)
+            losses, grads = self._vg_per_anchor(
+                cast(spec.unravel_stacked(xbar_c)), batch)
+        gbar = spec.ravel_stacked(
+            pt.tree_cast(pt.tree_scale(grads, 1.0 / m), sdt))  # ḡ_i (m, N)
+
+        # (4) both branches + masked combine, one fused elementwise pass
+        if self._use_kernel():
+            h = state.get("h")
+            if h is None:
+                h = jnp.broadcast_to(state["r"], gbar.shape)
+            x_new, pi_new, z_new = fedgia_update_flat(
+                xbar_c, gbar, state["pi"], h, sel, sigma, m,
+                k0=fed.k0, interpret=fed.kernel_interpret,
+            )
+        else:
+            xa, pia, za = self._admm_branch_flat(state, xbar_c, gbar, spec)
+            pig = gbar * -1.0  # eq. (16)
+            zg = (-1.0 / sigma) * gbar + xbar_c  # eq. (17)
+            pi_new = api.masked_update(sel, pia, pig)
+            z_new = api.masked_update(sel, za, zg)
+
+        new_state = dict(state)
+        new_state.update(
+            x=xbar, z=z_new, pi=pi_new, rng=rng, round=state["round"] + 1
+        )
+        if fed.h_policy == "diag_ema":
+            new_state["h"] = hparams.update_diag_h(state["h"], gbar,
+                                                   state["r"], m)
+
+        metrics = {
+            "f_xbar": api.client_scalar_mean(losses),
+            "grad_sq_norm": api.flat_grad_sq_norm(
+                spec.ravel_stacked(grads), spec),
+            "selected": api.client_scalar_sum(sel),
+            "cr": 2.0 * (state["round"] + 1).astype(jnp.float32),
+            "local_grad_evals": jnp.float32(1.0),  # per client per round (C2)
+        }
+        if stale is not None:
+            return new_state, stale, metrics
+        return new_state, metrics
 
     # ----------------------------------------------------------------- round
     def round(self, state, batch, mask=None, stale=None):

@@ -1,2 +1,6 @@
-from repro.kernels.fedgia_update.ops import fedgia_update
+from repro.kernels.fedgia_update.ops import (
+    fedgia_update,
+    fedgia_update_flat,
+    kernel_by_default,
+)
 from repro.kernels.fedgia_update.ref import fedgia_update_ref

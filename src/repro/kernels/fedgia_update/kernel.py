@@ -57,6 +57,77 @@ def _kernel(sel_ref, scal_ref, xbar_ref, g_ref, pi_ref, h_ref,
     z_out_ref[...] = z_new.astype(z_out_ref.dtype)
 
 
+def _batched_kernel(sel_ref, scal_ref, xbar_ref, g_ref, pi_ref, h_ref,
+                    x_out_ref, pi_out_ref, z_out_ref, *, k0: int):
+    """One (client, row-block) grid step of the batched round update.
+
+    Identical math to `_kernel`, but the client index is grid dimension 0
+    and the per-client ADMM/GD branch select comes from the (m,) SMEM
+    `sel_ref` — the whole round's client axis runs in ONE pallas_call
+    instead of m dispatches."""
+    i = pl.program_id(0)
+    sigma = scal_ref[0]
+    inv_m = scal_ref[1]
+    xbar = xbar_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    pi = pi_ref[...].astype(jnp.float32)
+    h = h_ref[...].astype(jnp.float32)
+
+    d = 1.0 / (h * inv_m + sigma)
+    a = 1.0 - sigma * d
+    base = pi + g
+    ak1 = a ** (k0 - 1)
+    pi_admm = ak1 * a * base - g
+    x_admm = xbar - d * ak1 * base
+
+    is_sel = sel_ref[i] > 0
+    x_new = jnp.where(is_sel, x_admm, xbar)
+    pi_new = jnp.where(is_sel, pi_admm, -g)
+    z_new = x_new + pi_new / sigma
+
+    x_out_ref[...] = x_new.astype(x_out_ref.dtype)
+    pi_out_ref[...] = pi_new.astype(pi_out_ref.dtype)
+    z_out_ref[...] = z_new.astype(z_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("k0", "interpret"))
+def fedgia_update_batched_kernel(xbar, gbar, pi, h, sel, sigma, m, *,
+                                 k0: int, interpret: bool = False):
+    """Batched flat round update: all inputs (mb, N) with N % 128 == 0
+    (ops.py pads); sel: (mb,) bool — client i's ADMM/GD branch select;
+    sigma: () f32; m: GLOBAL client count (the 1/m gradient scale).
+    Returns (x', pi', z'), each (mb, N).
+
+    Grid is (clients, row blocks): one kernel launch covers the whole
+    (m, N) client-state buffer — the flat engine's round is a single
+    fused elementwise pass instead of per-leaf (or per-client) dispatch.
+    """
+    mb, n = xbar.shape
+    rows = n // LANES
+    br = min(BLOCK_ROWS, rows)
+    grid = (mb, pl.cdiv(rows, br))
+
+    def reshape(v):
+        return v.reshape(mb, rows, LANES)
+
+    scal = jnp.stack([sigma.astype(jnp.float32), jnp.float32(1.0 / m)])
+    sel_arr = sel.astype(jnp.int32)
+
+    block = pl.BlockSpec((1, br, LANES), lambda i, j: (i, j, 0))
+    rep = pl.BlockSpec(memory_space=pltpu.SMEM)
+    out_shape = [jax.ShapeDtypeStruct((mb, rows, LANES), xbar.dtype)] * 3
+    x_new, pi_new, z_new = pl.pallas_call(
+        functools.partial(_batched_kernel, k0=k0),
+        grid=grid,
+        in_specs=[rep, rep, block, block, block, block],
+        out_specs=[block, block, block],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(sel_arr, scal, reshape(xbar), reshape(gbar), reshape(pi), reshape(h))
+    return (x_new.reshape(mb, n), pi_new.reshape(mb, n),
+            z_new.reshape(mb, n))
+
+
 @functools.partial(jax.jit, static_argnames=("k0", "interpret"))
 def fedgia_update_kernel(xbar, gbar, pi, h, sel, sigma, m, *, k0: int,
                          interpret: bool = False):

@@ -2,10 +2,21 @@
 to the Pallas kernel (TPU) or the jnp reference (CPU / interpret)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-from repro.kernels.fedgia_update.kernel import LANES, fedgia_update_kernel
+from repro.kernels.fedgia_update.kernel import (
+    LANES,
+    fedgia_update_batched_kernel,
+    fedgia_update_kernel,
+)
 from repro.kernels.fedgia_update.ref import fedgia_update_ref
+
+
+def kernel_by_default() -> bool:
+    """The `use_kernel=None` auto-selection: Pallas on TPU, the fused jnp
+    paths elsewhere (CPU tests opt in explicitly with interpret=True)."""
+    return jax.default_backend() == "tpu"
 
 
 def fedgia_update(xbar, gbar, pi, h, sel, sigma, m, *, k0: int,
@@ -25,4 +36,33 @@ def fedgia_update(xbar, gbar, pi, h, sel, sigma, m, *, k0: int,
     )
     if pad:
         x, p, z = x[:n], p[:n], z[:n]
+    return x, p, z
+
+
+def fedgia_update_flat(xbar_c, gbar, pi, h, sel, sigma, m, *, k0: int,
+                       use_kernel: bool = True, interpret: bool = False):
+    """Batched flat-buffer round update: the whole (mb, N) client-state
+    buffer in one pass (the flat engine's ADMM/GD branch, vmapped over the
+    client axis in a single pallas grid).
+
+    `xbar_c` is the per-client anchor view — a broadcast of x̄ in
+    synchronous rounds, the stale per-client buffer in async rounds —
+    and `sel` the (mb,) ADMM/GD branch select. `use_kernel=False` runs
+    the jnp oracle (`ref.py`) broadcast over the client axis, which the
+    tier-1 kernel tests pin against the interpret-mode kernel."""
+    if not use_kernel:
+        return fedgia_update_ref(xbar_c, gbar, pi, h, sel[:, None], sigma, m,
+                                 k0=k0)
+    mb, n = xbar_c.shape
+    pad = (-n) % LANES
+    if pad:
+        pad1 = lambda v: jnp.pad(v, ((0, 0), (0, pad)))
+        xbar_c, gbar, pi, h = map(pad1, (xbar_c, gbar, pi, h))
+    x, p, z = fedgia_update_batched_kernel(
+        xbar_c, gbar, pi, h,
+        jnp.asarray(sel), jnp.asarray(sigma, jnp.float32), m,
+        k0=k0, interpret=interpret,
+    )
+    if pad:
+        x, p, z = x[:, :n], p[:, :n], z[:, :n]
     return x, p, z

@@ -8,7 +8,15 @@ Rounds are driven by the scan-compiled round engine (core/engine.py):
 chunks of rounds compile into one lax.scan with the tolerance check on
 device, so the host is not in the per-round loop. `--no-scan` restores the
 legacy per-round dispatch for debugging; `--shard-clients N` splits the
-client axis over an N-way `data` mesh axis (requires >= N devices).
+client axis over an N-way `data` mesh axis (requires >= N devices);
+`--chunk auto` times the candidate chunk lengths on the live run and
+keeps the fastest.
+
+Rounds run on the FLAT client-state buffer by default: the model pytree
+is raveled once into contiguous (m, N) arrays, eq. (11) is one
+model-size reduction and FedGiA's branch update one fused pass (the
+batched Pallas kernel on TPU — `--kernel`). `--no-flat` restores the
+per-leaf pytree rounds (bitwise-equal single-device, tests/test_flat.py).
 
 `--participation` moves client selection into the engine: a fresh
 per-round mask is drawn on device (inside the compiled scan) and fed to
@@ -112,15 +120,43 @@ def validate_flags(args) -> dict:
     policy; `--client-speeds` without `--clock`; `--clock` combined with
     an explicit `--participation` (the clock DERIVES the arrival mask);
     `--clock trace` (library-level — needs a duration table); a
-    non-positive `--stale-decay` with a decaying weighting.
+    non-positive `--stale-decay` with a decaying weighting; a `--chunk`
+    that is neither an int nor "auto"; `--chunk auto` with `--no-scan`
+    (the legacy loop has no chunks).
 
     Returns the resolved engine knobs: participation kind, clock kind,
-    whether async rounds are on (a clock implies them), and the parsed
-    per-client lists (weights / periods / speeds, or None).
+    whether async rounds are on (a clock implies them), the parsed
+    per-client lists (weights / periods / speeds, or None), the chunk
+    size (int or "auto"), whether the flat round path is on, and the
+    FedConfig kernel knobs resolved from `--kernel`.
     """
     kind = getattr(args, "participation", "full")
     clock_kind = getattr(args, "clock", "none")
     async_rounds = getattr(args, "async_rounds", False) or clock_kind != "none"
+    chunk = getattr(args, "chunk", "0")
+    if chunk != "auto":
+        try:
+            chunk = int(chunk)
+        except ValueError:
+            raise SystemExit(
+                f"--chunk must be an integer or 'auto', got {chunk!r}")
+    elif getattr(args, "no_scan", False):
+        raise SystemExit(
+            "--chunk auto tunes the scan chunk length and cannot be "
+            "combined with --no-scan")
+    elif getattr(args, "shard_clients", 0) > 1:
+        raise SystemExit(
+            "--chunk auto times AOT-precompiled chunks, which the "
+            "sharded path does not have — pass a fixed --chunk with "
+            "--shard-clients")
+    kernel_arg = getattr(args, "kernel", "auto")
+    use_kernel = {"auto": None, "on": True, "off": False,
+                  "interpret": True}[kernel_arg]
+    kernel_interpret = kernel_arg == "interpret"
+    if kernel_arg in ("on", "interpret") and getattr(args, "no_flat", False):
+        raise SystemExit(
+            "--kernel on/interpret requires the flat round path "
+            "(drop --no-flat)")
     if clock_kind != "none" and kind != "full":
         raise SystemExit(
             "--clock derives the arrival mask from simulated finish times "
@@ -162,6 +198,10 @@ def validate_flags(args) -> dict:
         "weights": weights,
         "periods": periods,
         "speeds": speeds,
+        "chunk": chunk,
+        "flat": not getattr(args, "no_flat", False),
+        "use_kernel": use_kernel,
+        "kernel_interpret": kernel_interpret,
     }
 
 
@@ -178,6 +218,8 @@ def train(args) -> dict:
         collapsed=not args.unrolled,
         lr=args.lr,
         auto_lipschitz=args.arch is not None,
+        use_kernel=parsed["use_kernel"],
+        kernel_interpret=parsed["kernel_interpret"],
     )
     algo = make_algorithm(fed, loss_fn, model=model)
     state = algo.init(params0, jax.random.PRNGKey(args.seed + 1), init_batch=batch)
@@ -239,11 +281,12 @@ def train(args) -> dict:
     res = run_rounds(
         algo, state, batch, args.rounds,
         tol=args.tol, scan=not getattr(args, "no_scan", False),
-        chunk_size=getattr(args, "chunk", 0), mesh=mesh,
+        chunk_size=parsed["chunk"], mesh=mesh,
         participation=policy, clock=clock,
         async_rounds=async_rounds, max_staleness=max_staleness,
         stale_weighting=stale_weighting,
         stale_decay=getattr(args, "stale_decay", 1.0),
+        flat=parsed["flat"],
     )
     history = [
         {"round": r, "f": float(res.history["f_xbar"][r]),
@@ -307,8 +350,24 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--unrolled", action="store_true")
     ap.add_argument("--no-scan", action="store_true",
                     help="legacy per-round dispatch loop (debugging)")
-    ap.add_argument("--chunk", type=int, default=0,
-                    help="rounds per compiled scan chunk (0 = auto)")
+    ap.add_argument("--chunk", default="0",
+                    help="rounds per compiled scan chunk (0 = default "
+                         "sizing), or 'auto' to time the candidate chunk "
+                         "lengths (8/32/128) on the live run and keep the "
+                         "fastest — deterministic results under --tol 0")
+    ap.add_argument("--no-flat", action="store_true",
+                    help="disable the flat-buffer round path (ravel-once "
+                         "(m, N) client state, contiguous eq.-11 "
+                         "all-reduce, batched round kernel) and run the "
+                         "per-leaf pytree rounds; both paths are bitwise-"
+                         "equal on a single device (tests/test_flat.py)")
+    ap.add_argument("--kernel", default="auto",
+                    choices=["auto", "on", "off", "interpret"],
+                    help="route FedGiA's flat collapsed round through the "
+                         "batched Pallas fedgia_update kernel: auto "
+                         "(kernel on TPU, fused jnp elsewhere), on, off, "
+                         "or interpret (Pallas interpret mode — CPU "
+                         "validation). Requires the flat path")
     ap.add_argument("--shard-clients", type=int, default=0,
                     help="shard the client axis over an N-way data mesh")
     ap.add_argument("--participation", default="full", choices=POLICIES,

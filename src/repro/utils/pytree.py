@@ -4,8 +4,20 @@ Every federated algorithm in this repo manipulates whole model states
 (parameters, duals, control variates) as pytrees; these helpers keep that
 code readable and fusion-friendly (jnp ops only, no python loops over
 leaves at trace time beyond tree_map).
+
+The `RavelSpec` family (`ravel_spec` / `RavelSpec.ravel` /
+`RavelSpec.ravel_stacked` / `RavelSpec.unravel`) is the flat-buffer layout
+the round engine's hot path runs on: the model pytree is flattened ONCE
+per `run_rounds` call into a single lane-padded (N,) vector (client state:
+one (m, N) buffer), every round's elementwise math and eq. (11)'s
+all-reduce operate on that contiguous buffer, and the pytree is only
+reconstructed at the gradient/metric/return boundaries. See
+docs/engine.md#flat-buffer-round-state.
 """
 from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -94,3 +106,110 @@ def tree_allclose(a: Pytree, b: Pytree, rtol=1e-5, atol=1e-6) -> bool:
         lambda x, y: bool(jnp.allclose(x, y, rtol=rtol, atol=atol)), a, b
     )
     return all(jax.tree.leaves(oks))
+
+
+# --------------------------------------------------------------------------
+# Flat-buffer layout: ravel a model pytree once, run the round on the
+# contiguous vector, unravel only at gradient/metric/return boundaries.
+# --------------------------------------------------------------------------
+LANES = 128  # TPU vector-register lane width; the flat buffer is padded to
+# a multiple of it so the Pallas round kernel never re-pads on the hot path
+
+
+@dataclasses.dataclass(frozen=True)
+class RavelSpec:
+    """Cached flatten layout for a model pytree.
+
+    Records the treedef plus per-leaf shapes/dtypes/offsets into a single
+    1-D buffer of ``size`` elements, lane-padded to ``padded_size``
+    (``LANES``-multiple, zeros in the tail). The buffer dtype is the
+    result-type promotion of the leaf dtypes, so an unravel->ravel round
+    trip is exact (leaves are cast to a wider-or-equal dtype and back).
+
+    Built by :func:`ravel_spec` (cached on (treedef, shapes, dtypes), so
+    repeated `run_rounds` calls on the same model reuse one spec object
+    and jit caches keyed on the spec hit).
+    """
+
+    treedef: jax.tree_util.PyTreeDef
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[jnp.dtype, ...]
+    offsets: Tuple[int, ...]
+    size: int
+    padded_size: int
+    dtype: jnp.dtype
+
+    def ravel(self, tree: Pytree) -> jax.Array:
+        """Pytree -> contiguous (padded_size,) vector (zero-padded tail)."""
+        leaves = self.treedef.flatten_up_to(tree)
+        flat = jnp.concatenate(
+            [l.astype(self.dtype).reshape(-1) for l in leaves]
+        )
+        pad = self.padded_size - self.size
+        return jnp.pad(flat, (0, pad)) if pad else flat
+
+    def ravel_stacked(self, tree: Pytree) -> jax.Array:
+        """Client-stacked pytree (leading axis m on every leaf) ->
+        one contiguous (m, padded_size) buffer."""
+        leaves = self.treedef.flatten_up_to(tree)
+        m = leaves[0].shape[0]
+        flat = jnp.concatenate(
+            [l.astype(self.dtype).reshape(m, -1) for l in leaves], axis=1
+        )
+        pad = self.padded_size - self.size
+        return jnp.pad(flat, ((0, 0), (0, pad))) if pad else flat
+
+    def unravel(self, flat: jax.Array) -> Pytree:
+        """(padded_size,) vector -> pytree (inverse of :meth:`ravel`)."""
+        leaves = [
+            jax.lax.slice_in_dim(flat, o, o + _size_of(s), axis=-1)
+            .reshape(flat.shape[:-1] + s)
+            .astype(d)
+            for o, s, d in zip(self.offsets, self.shapes, self.dtypes)
+        ]
+        return self.treedef.unflatten(leaves)
+
+    def unravel_stacked(self, flat: jax.Array) -> Pytree:
+        """(m, padded_size) buffer -> client-stacked pytree."""
+        return self.unravel(flat)
+
+
+def _size_of(shape) -> int:
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+_SPEC_CACHE: dict = {}
+
+
+def ravel_spec(tree: Pytree) -> RavelSpec:
+    """Build (or fetch the cached) :class:`RavelSpec` for `tree`'s layout.
+
+    The cache key is (treedef, shapes, dtypes): any two pytrees with the
+    same structure share one spec object, so the engine's jit caches —
+    which close over the spec — are reused across `run_rounds` calls."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    key = (treedef, shapes, dtypes)
+    spec = _SPEC_CACHE.get(key)
+    if spec is None:
+        sizes = [_size_of(s) for s in shapes]
+        offsets, off = [], 0
+        for s in sizes:
+            offsets.append(off)
+            off += s
+        padded = -(-off // LANES) * LANES
+        spec = RavelSpec(
+            treedef=treedef,
+            shapes=shapes,
+            dtypes=dtypes,
+            offsets=tuple(offsets),
+            size=off,
+            padded_size=padded,
+            dtype=jnp.result_type(*dtypes) if dtypes else jnp.dtype("float32"),
+        )
+        _SPEC_CACHE[key] = spec
+    return spec

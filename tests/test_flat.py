@@ -1,0 +1,338 @@
+"""Flat-buffer round engine equivalence (engine `flat=True`, the default).
+
+The flat path ravels the model-shaped state once into contiguous
+lane-padded buffers and runs every round on them (`algo.round_flat`);
+the pytree path (`flat=False`, `--no-flat`) is the per-leaf original.
+On a single device the two must be BITWISE identical — history AND final
+state — for all five algorithms across scan/legacy, masked, async and
+clocked rounds: the flat round mirrors the pytree round operation for
+operation on the raveled layout (see docs/engine.md). fp tolerance is
+allowed only where the Pallas kernel (interpret mode on CPU) or the
+sharded fused psum replaces the mirrored arithmetic.
+
+Also covers: the RavelSpec layout helpers, the `--chunk auto` autotuner's
+determinism, and (subprocess) the flat sharded round's ONE model-size
+all-reduce.
+"""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import fake_device_env
+from repro.config import FedConfig
+from repro.core import make_algorithm, make_policy, run_rounds
+from repro.core.clock import ComputeClock
+from repro.core.engine import flatten_state, unflatten_state
+from repro.data import linreg_noniid
+from repro.models import LeastSquares
+from repro.utils import pytree as pt
+
+M, N, D = 8, 20, 400
+ROUNDS = 12
+CHUNK = 5  # exercises full + partial chunks
+
+ALGO_SETUPS = {
+    "fedgia": dict(sigma_t=0.2, h_policy="scalar", alpha=0.5),
+    "fedgia_diag": dict(sigma_t=0.2, h_policy="diag_ema", alpha=0.5),
+    "fedgia_unrolled": dict(sigma_t=0.2, h_policy="diag_ema", alpha=0.5,
+                            collapsed=False),
+    "fedgia_gram": dict(sigma_t=0.2, h_policy="gram", alpha=0.5,
+                        collapsed=False),
+    "fedavg": dict(lr=0.01),
+    "fedprox": dict(lr=0.002, prox_mu=1e-4, inner_steps=3),
+    "fedpd": dict(lr=0.05, fedpd_eta=1.0, inner_steps=3),
+    "scaffold": dict(lr=0.01),
+}
+FIVE = ["fedgia_diag", "fedavg", "fedprox", "fedpd", "scaffold"]
+
+
+@pytest.fixture(scope="module")
+def problem():
+    batch = {k: jnp.asarray(v) for k, v in linreg_noniid(0, D, N, M).items()}
+    return LeastSquares(N), batch
+
+
+def _make(problem, key, **overrides):
+    model, batch = problem
+    name = "fedgia" if key.startswith("fedgia") else key
+    kwargs = dict(algorithm=name, num_clients=M, k0=3)
+    kwargs.update(ALGO_SETUPS[key])
+    kwargs.update(overrides)
+    fed = FedConfig(**kwargs)
+    algo = make_algorithm(fed, model.loss, model=model)
+    state = algo.init(model.init(jax.random.PRNGKey(0)),
+                      jax.random.PRNGKey(1), init_batch=batch)
+    return algo, state
+
+
+def _assert_bitwise(res, ref):
+    assert res.rounds_run == ref.rounds_run
+    assert set(res.history) == set(ref.history)
+    for k in ref.history:
+        np.testing.assert_array_equal(res.history[k], ref.history[k],
+                                      err_msg=k)
+    for key in ref.state:
+        ok = jax.tree.map(lambda a, b: bool(jnp.array_equal(a, b)),
+                          res.state[key], ref.state[key])
+        assert all(jax.tree.leaves(ok)), f"state[{key!r}] diverged"
+
+
+# ---------------------------------------------------------------- RavelSpec
+def test_ravel_spec_layout_and_roundtrip():
+    tree = {
+        "w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": jnp.arange(3, dtype=jnp.float32) + 10.0,
+    }
+    spec = pt.ravel_spec(tree)
+    assert spec.size == 9
+    assert spec.padded_size == pt.LANES  # lane-padded
+    flat = spec.ravel(tree)
+    assert flat.shape == (pt.LANES,)
+    assert float(jnp.abs(flat[spec.size:]).max()) == 0.0  # zero tail
+    back = spec.unravel(flat)
+    ok = jax.tree.map(lambda a, b: bool(jnp.array_equal(a, b)), tree, back)
+    assert all(jax.tree.leaves(ok))
+
+
+def test_ravel_spec_stacked_roundtrip_and_cache():
+    tree = {"w": jnp.ones((4, 2, 3)), "b": jnp.zeros((4, 5))}
+    spec = pt.ravel_spec({"w": tree["w"][0], "b": tree["b"][0]})
+    flat = spec.ravel_stacked(tree)
+    assert flat.shape == (4, spec.padded_size)
+    back = spec.unravel_stacked(flat)
+    ok = jax.tree.map(lambda a, b: bool(jnp.array_equal(a, b)), tree, back)
+    assert all(jax.tree.leaves(ok))
+    # the cache returns the SAME object for the same layout, so jit caches
+    # keyed on the closed-over spec are reused across run_rounds calls
+    assert pt.ravel_spec({"w": tree["w"][0], "b": tree["b"][0]}) is spec
+
+
+def test_ravel_exact_lane_multiple_not_padded():
+    tree = {"w": jnp.ones((pt.LANES,))}
+    spec = pt.ravel_spec(tree)
+    assert spec.size == spec.padded_size == pt.LANES
+
+
+def test_flatten_state_roundtrip(problem):
+    algo, state = _make(problem, "scaffold")
+    spec = pt.ravel_spec(state["x"])
+    flat = flatten_state(algo, state, spec)
+    assert flat["x"].shape == (spec.padded_size,)
+    assert flat["c"].shape == (spec.padded_size,)
+    assert flat["ci"].shape == (M, spec.padded_size)
+    back = unflatten_state(algo, flat, spec)
+    for k in state:
+        ok = jax.tree.map(lambda a, b: bool(jnp.array_equal(a, b)),
+                          state[k], back[k])
+        assert all(jax.tree.leaves(ok)), k
+
+
+# ---------------------------------------------------- flat == pytree, sync
+@pytest.mark.parametrize("algo_key", sorted(ALGO_SETUPS))
+def test_flat_matches_pytree_scan(problem, algo_key):
+    algo, state = _make(problem, algo_key)
+    _, batch = problem
+    ref = run_rounds(algo, state, batch, ROUNDS, chunk_size=CHUNK, flat=False)
+    res = run_rounds(algo, state, batch, ROUNDS, chunk_size=CHUNK, flat=True)
+    _assert_bitwise(res, ref)
+
+
+@pytest.mark.parametrize("algo_key", ["fedgia_diag", "fedavg", "scaffold"])
+def test_flat_matches_pytree_legacy(problem, algo_key):
+    algo, state = _make(problem, algo_key)
+    _, batch = problem
+    ref = run_rounds(algo, state, batch, ROUNDS, scan=False, flat=False)
+    res = run_rounds(algo, state, batch, ROUNDS, scan=False, flat=True)
+    _assert_bitwise(res, ref)
+
+
+# ------------------------------------------- masked / async / clocked flat
+@pytest.mark.parametrize("algo_key", FIVE)
+def test_flat_matches_pytree_masked(problem, algo_key):
+    algo, state = _make(problem, algo_key)
+    _, batch = problem
+    pol = make_policy("straggler", M, 0.5, seed=0, drop_prob=0.3,
+                      horizon=ROUNDS)
+    ref = run_rounds(algo, state, batch, ROUNDS, participation=pol,
+                     flat=False)
+    res = run_rounds(algo, state, batch, ROUNDS, participation=pol,
+                     flat=True)
+    _assert_bitwise(res, ref)
+
+
+@pytest.mark.parametrize("algo_key", FIVE)
+def test_flat_matches_pytree_async(problem, algo_key):
+    """The stale anchor buffer is one (m, N) array on the flat path —
+    still bitwise the per-leaf pytree buffers."""
+    algo, state = _make(problem, algo_key)
+    _, batch = problem
+    pol = make_policy("straggler", M, 0.5, seed=0, drop_prob=0.3,
+                      horizon=ROUNDS)
+    kw = dict(participation=pol, async_rounds=True, max_staleness=2)
+    ref = run_rounds(algo, state, batch, ROUNDS, flat=False, **kw)
+    res = run_rounds(algo, state, batch, ROUNDS, flat=True, **kw)
+    _assert_bitwise(res, ref)
+
+
+@pytest.mark.parametrize("algo_key", ["fedgia_diag", "fedavg", "scaffold"])
+def test_flat_matches_pytree_clocked_weighted(problem, algo_key):
+    algo, state = _make(problem, algo_key)
+    _, batch = problem
+    clk = ComputeClock(M, 1.0 + (np.arange(M) % 3))
+    kw = dict(clock=clk, max_staleness=2, stale_weighting="poly")
+    ref = run_rounds(algo, state, batch, ROUNDS, flat=False, **kw)
+    res = run_rounds(algo, state, batch, ROUNDS, flat=True, **kw)
+    _assert_bitwise(res, ref)
+
+
+def test_flat_early_stop_matches(problem):
+    algo, state = _make(problem, "fedgia", k0=5)
+    _, batch = problem
+    ref = run_rounds(algo, state, batch, 300, tol=1e-7, chunk_size=13,
+                     flat=False)
+    res = run_rounds(algo, state, batch, 300, tol=1e-7, chunk_size=13,
+                     flat=True)
+    assert ref.stopped_early and res.stopped_early
+    _assert_bitwise(res, ref)
+
+
+# ------------------------------------------------------------ kernel path
+@pytest.mark.parametrize("h_policy", ["scalar", "diag_ema"])
+def test_flat_kernel_interpret_matches(problem, h_policy):
+    """The batched Pallas kernel (interpret mode on CPU) is fp-equivalent
+    to the fused jnp closed form on the flat round hot path."""
+    algo, state = _make(problem, "fedgia", h_policy=h_policy)
+    model, batch = problem
+    fed_k = FedConfig(algorithm="fedgia", num_clients=M, k0=3, sigma_t=0.2,
+                      h_policy=h_policy, alpha=0.5, use_kernel=True,
+                      kernel_interpret=True)
+    algo_k = make_algorithm(fed_k, model.loss, model=model)
+    ref = run_rounds(algo, state, batch, 6, flat=True)
+    res = run_rounds(algo_k, state, batch, 6, flat=True)
+    assert res.rounds_run == ref.rounds_run
+    for k in ref.history:
+        np.testing.assert_allclose(res.history[k], ref.history[k],
+                                   rtol=2e-5, atol=2e-6, err_msg=k)
+    for key in ref.state:
+        ok = jax.tree.map(
+            lambda a, b: bool(jnp.allclose(a, b, rtol=2e-5, atol=2e-6)),
+            res.state[key], ref.state[key])
+        assert all(jax.tree.leaves(ok)), key
+
+
+def test_use_kernel_rejected_nowhere(problem):
+    """use_kernel=None auto-selects by backend — on CPU the flat round
+    takes the fused jnp path and stays bitwise the pytree path."""
+    algo, state = _make(problem, "fedgia_diag")
+    assert algo._use_kernel() == (jax.default_backend() == "tpu")
+    algo_g, _ = _make(problem, "fedgia_gram")
+    assert not algo_g._use_kernel()  # gram never routes to the kernel
+
+
+# ------------------------------------------------------------- chunk auto
+def test_chunk_auto_is_deterministic(problem):
+    """`--chunk auto` times candidate chunk lengths on the live run; the
+    rounds EXECUTED are identical whatever the timings, so under tol<=0
+    the result is bitwise the fixed-chunk run."""
+    algo, state = _make(problem, "fedgia_diag")
+    _, batch = problem
+    ref = run_rounds(algo, state, batch, 60, chunk_size=7)
+    res = run_rounds(algo, state, batch, 60, chunk_size="auto")
+    _assert_bitwise(res, ref)
+
+
+def test_chunk_auto_short_run(problem):
+    """Fewer rounds than the first candidate still runs them all."""
+    algo, state = _make(problem, "fedgia_diag")
+    _, batch = problem
+    res = run_rounds(algo, state, batch, 5, chunk_size="auto")
+    assert res.rounds_run == 5
+
+
+def test_chunk_auto_validation(problem):
+    algo, state = _make(problem, "fedgia_diag")
+    _, batch = problem
+    with pytest.raises(ValueError, match="auto"):
+        run_rounds(algo, state, batch, 4, chunk_size="fastest")
+    with pytest.raises(ValueError, match="legacy"):
+        run_rounds(algo, state, batch, 4, chunk_size="auto", scan=False)
+    # under a mesh there is no AOT warm-up: candidate timings would
+    # measure compilation, not rounds — rejected rather than mis-tuned
+    with pytest.raises(ValueError, match="mesh"):
+        run_rounds(algo, state, batch, 4, chunk_size="auto",
+                   mesh=object())
+
+
+# ------------------------------------- sharded: ONE model-size all-reduce
+_SHARDED_FLAT_SCRIPT = textwrap.dedent(
+    """
+    import re
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.config import FedConfig
+    from repro.core import api, engine, make_algorithm, make_policy, run_rounds
+    from repro.data import linreg_noniid
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import LeastSquares
+    from repro.utils import pytree as pt
+
+    m, n, d = 8, 24, 320
+    batch = {k: jnp.asarray(v) for k, v in linreg_noniid(0, d, n, m).items()}
+    model = LeastSquares(n)
+    mesh = make_host_mesh(data=8)
+
+    def model_size_all_reduces(algo_name, stale):
+        fed = FedConfig(algorithm=algo_name, num_clients=m, k0=3, alpha=1.0,
+                        sigma_t=0.3, h_policy="diag_ema", lr=0.01)
+        algo = make_algorithm(fed, model.loss, model=model)
+        s0 = algo.init(model.init(jax.random.PRNGKey(0)),
+                       jax.random.PRNGKey(1), init_batch=batch)
+        spec = pt.ravel_spec(s0["x"])
+        s0f = engine.flatten_state(algo, s0, spec)
+        rf = engine.make_round_fn(algo, mesh, masked=True, stale=stale,
+                                  flat_spec=spec)
+        st, b = engine.shard_inputs(algo, s0f, batch, mesh)
+        args = (st, b, jnp.ones((m,), bool))
+        if stale:
+            args = args + (api.init_stale_xbar(s0f["x"], m, 2),)
+        txt = jax.jit(rf).lower(*args).compile().as_text()
+        shapes = re.findall(r"= (\\S+) all-reduce\\(", txt)
+        return sum(1 for s in shapes if re.search(r"\\[\\d", s))
+
+    for name in ("fedgia", "fedavg", "fedprox", "fedpd", "scaffold"):
+        for stale in (False, True):
+            cnt = model_size_all_reduces(name, stale)
+            assert cnt == 1, (name, stale, cnt)
+
+    # and the flat sharded RUN matches the flat single-device run
+    fed = FedConfig(algorithm="fedgia", num_clients=m, k0=3, alpha=1.0,
+                    sigma_t=0.3, h_policy="diag_ema")
+    algo = make_algorithm(fed, model.loss, model=model)
+    s0 = algo.init(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(1),
+                   init_batch=batch)
+    pol = make_policy("straggler", m, 0.5, seed=0, drop_prob=0.3, horizon=10)
+    kw = dict(participation=pol, async_rounds=True, max_staleness=2)
+    ref = run_rounds(algo, s0, batch, 10, **kw)
+    res = run_rounds(algo, s0, batch, 10, mesh=mesh, **kw)
+    for k in ref.history:
+        np.testing.assert_allclose(res.history[k], ref.history[k],
+                                   rtol=1e-4, atol=1e-6, err_msg=k)
+    print("FLAT_SHARDED_OK one model-size all-reduce for all five")
+    """
+)
+
+
+def test_flat_sharded_one_all_reduce_and_parity():
+    """The flat sharded round lowers to exactly ONE model-size all-reduce
+    for ALL FIVE algorithms (eq. (11) as the round's single model-size
+    communication; the grad-norm metric rides a reduce-scatter instead),
+    and the flat sharded run matches the flat single-device run."""
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARDED_FLAT_SCRIPT],
+        env=fake_device_env(8), capture_output=True, text=True, timeout=900,
+    )
+    assert "FLAT_SHARDED_OK" in out.stdout, out.stdout + out.stderr

@@ -5,7 +5,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.fedgia_update import fedgia_update, fedgia_update_ref
+from repro.kernels.fedgia_update import (
+    fedgia_update,
+    fedgia_update_flat,
+    fedgia_update_ref,
+)
+from repro.kernels.fedgia_update.kernel import LANES
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.rwkv6_scan import rwkv6_scan, rwkv6_scan_ref
 
@@ -44,6 +49,70 @@ def test_fedgia_update_dtypes(dtype):
         np.testing.assert_allclose(
             np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=tol, atol=tol
         )
+
+
+@pytest.mark.parametrize(
+    "n", [2 * LANES, 2 * LANES + 1, 3 * LANES - 1],
+    ids=["mod0", "mod1", "modLANES-1"],
+)
+def test_fedgia_update_padding_edges(n):
+    """N % LANES in {0, 1, LANES-1}: the ops-layer lane padding must be
+    invisible — kernel (interpret) == unpadded jnp oracle."""
+    xbar = jnp.asarray(RNG.standard_normal(n), jnp.float32)
+    g = jnp.asarray(RNG.standard_normal(n), jnp.float32)
+    pi = jnp.asarray(RNG.standard_normal(n), jnp.float32)
+    h = jnp.asarray(RNG.uniform(0.05, 3.0, n), jnp.float32)
+    sigma = jnp.float32(0.6)
+    ref = fedgia_update_ref(xbar, g, pi, h, jnp.asarray(True), sigma, 8, k0=4)
+    out = fedgia_update(xbar, g, pi, h, True, sigma, 8, k0=4, interpret=True)
+    for a, b, name in zip(out, ref, ("x", "pi", "z")):
+        assert a.shape == (n,), name
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-5, err_msg=name)
+
+
+@pytest.mark.parametrize("n", [LANES, LANES + 1, 2 * LANES - 1])
+@pytest.mark.parametrize("k0", [1, 5])
+def test_fedgia_update_batched_matches_ref(n, k0):
+    """The batched (m, N) kernel — the flat engine's round update — equals
+    the jnp oracle per client, mixed ADMM/GD branch selects, across the
+    same padding edges."""
+    m = 6
+    xbar = jnp.asarray(RNG.standard_normal((m, n)), jnp.float32)
+    g = jnp.asarray(RNG.standard_normal((m, n)), jnp.float32)
+    pi = jnp.asarray(RNG.standard_normal((m, n)), jnp.float32)
+    h = jnp.asarray(RNG.uniform(0.05, 3.0, (m, n)), jnp.float32)
+    sel = jnp.asarray([True, False, True, True, False, True])
+    sigma = jnp.float32(0.7)
+    ref = fedgia_update_flat(xbar, g, pi, h, sel, sigma, m, k0=k0,
+                             use_kernel=False)
+    out = fedgia_update_flat(xbar, g, pi, h, sel, sigma, m, k0=k0,
+                             use_kernel=True, interpret=True)
+    for a, b, name in zip(out, ref, ("x", "pi", "z")):
+        assert a.shape == (m, n), name
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-5, err_msg=name)
+
+
+def test_fedgia_update_batched_rowwise_equals_single():
+    """Each row of the batched kernel equals the single-vector kernel on
+    that client's slice (same interpret-mode lowering, same math)."""
+    m, n = 4, 2 * LANES
+    xbar = jnp.asarray(RNG.standard_normal((m, n)), jnp.float32)
+    g = jnp.asarray(RNG.standard_normal((m, n)), jnp.float32)
+    pi = jnp.asarray(RNG.standard_normal((m, n)), jnp.float32)
+    h = jnp.asarray(RNG.uniform(0.1, 2.0, (m, n)), jnp.float32)
+    sel = jnp.asarray([True, False, True, False])
+    sigma = jnp.float32(0.4)
+    batched = fedgia_update_flat(xbar, g, pi, h, sel, sigma, m, k0=3,
+                                 use_kernel=True, interpret=True)
+    for i in range(m):
+        single = fedgia_update(xbar[i], g[i], pi[i], h[i], bool(sel[i]),
+                               sigma, m, k0=3, interpret=True)
+        for a, b, name in zip(batched, single, ("x", "pi", "z")):
+            np.testing.assert_allclose(np.asarray(a[i]), np.asarray(b),
+                                       rtol=1e-6, atol=1e-6,
+                                       err_msg=f"client {i} {name}")
 
 
 # ------------------------------------------------------------ flash_attention

@@ -44,6 +44,14 @@ def _args(*extra):
      "--client-weights needs 8 values"),
     (["--clock", "constant", "--client-speeds", "1.5"],
      "--client-speeds needs 8 values"),
+    # chunk autotuning tunes the (unsharded) scan chunk length
+    (["--chunk", "fastest"], "--chunk must be an integer or 'auto'"),
+    (["--chunk", "auto", "--no-scan"], "cannot be combined with --no-scan"),
+    (["--chunk", "auto", "--shard-clients", "4"],
+     "pass a fixed --chunk with"),
+    # the kernel lives on the flat round path
+    (["--kernel", "on", "--no-flat"], "requires the flat round path"),
+    (["--kernel", "interpret", "--no-flat"], "requires the flat round path"),
 ])
 def test_rejected_flag_combinations(argv, match):
     with pytest.raises(SystemExit, match=match):
@@ -79,3 +87,23 @@ def test_arrival_periods_parsed_as_ints():
                                   "--arrival-periods", "1,2,4,1,2,4,1,2"))
     assert parsed["periods"] == [1, 2, 4, 1, 2, 4, 1, 2]
     assert not parsed["async_rounds"]  # periodic alone stays synchronous
+
+
+def test_chunk_parsed_int_and_auto():
+    assert validate_flags(_args("--chunk", "16"))["chunk"] == 16
+    assert validate_flags(_args("--chunk", "auto"))["chunk"] == "auto"
+    assert validate_flags(_args())["chunk"] == 0
+    # auto composes with the legacy loop only through --no-scan rejection,
+    # not with an int chunk
+    assert validate_flags(_args("--chunk", "16", "--no-scan"))["chunk"] == 16
+
+
+def test_flat_and_kernel_knobs_resolved():
+    parsed = validate_flags(_args())
+    assert parsed["flat"] and parsed["use_kernel"] is None
+    assert not parsed["kernel_interpret"]
+    parsed = validate_flags(_args("--no-flat"))
+    assert not parsed["flat"]
+    assert validate_flags(_args("--kernel", "off"))["use_kernel"] is False
+    parsed = validate_flags(_args("--kernel", "interpret"))
+    assert parsed["use_kernel"] is True and parsed["kernel_interpret"]

@@ -1,10 +1,10 @@
 #!/usr/bin/env python
-"""Gate CI on engine-benchmark regressions.
+"""Gate CI on benchmark regressions.
 
-Compares a freshly produced BENCH_engine.json (benchmarks/run.py --only
-engine) against the committed baseline
+Engine gate: compares a freshly produced BENCH_engine.json
+(benchmarks/run.py --only engine) against the committed baseline
 benchmarks/baselines/BENCH_engine.baseline.json, per engine path
-(scan / legacy / sharded / async), on rounds-per-second:
+(scan / scan_pytree / legacy / sharded / async), on rounds-per-second:
 
   * FAIL (exit 1) only on a slowdown worse than --max-slowdown (default
     2.5x) — generous on purpose: CI runners are shared and noisy, and
@@ -15,14 +15,26 @@ benchmarks/baselines/BENCH_engine.baseline.json, per engine path
     run (a silently dropped benchmark is a regression too). Paths only
     in the fresh run are reported as new.
 
+Wall-clock gate (--wallclock): compares BENCH_wallclock.json
+(benchmarks/wallclock_bench.py) time-to-target per
+(algo, spread, weighting) row against
+benchmarks/baselines/BENCH_wallclock.baseline.json with the same
+fail/warn thresholds. `sim_time_s` is SIMULATED time — deterministic and
+machine-independent — so a breach is an algorithmic regression, never
+runner noise; a row that converged in the baseline but no longer
+converges fails outright, and rows that never converged are skipped
+(their sim_time is a round-budget cap, not a time-to-target).
+
 Speedups are fine (they print, so a new baseline can be committed when
-they persist). Refresh the baseline with:
+they persist). Refresh the baselines with:
 
-    ENGINE_BENCH_ROUNDS=40 PYTHONPATH=src python -m benchmarks.run --only engine
+    ENGINE_BENCH_ROUNDS=40 PYTHONPATH=src python -m benchmarks.run --only engine --only kernels
     python tools/check_bench.py --update-baseline
+    WALLCLOCK_MAX_ROUNDS=400 PYTHONPATH=src python -m benchmarks.run --only wallclock
+    python tools/check_bench.py --wallclock --update-baseline
 
-Both files are uploaded as CI artifacts, so the trajectory is diffable
-across runs even between baseline refreshes.
+All four files are uploaded as CI artifacts, so the trajectory is
+diffable across runs even between baseline refreshes.
 """
 from __future__ import annotations
 
@@ -34,6 +46,8 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 BASELINE = ROOT / "benchmarks" / "baselines" / "BENCH_engine.baseline.json"
+WALLCLOCK_BASELINE = (ROOT / "benchmarks" / "baselines"
+                      / "BENCH_wallclock.baseline.json")
 
 
 def load_engine_section(path: Path) -> dict:
@@ -90,11 +104,76 @@ def check(current: dict, baseline: dict, max_slowdown: float,
     return 0
 
 
+def load_wallclock_rows(path: Path) -> dict:
+    """Index a BENCH_wallclock.json dump by (algo, spread, weighting)."""
+    with open(path) as f:
+        data = json.load(f)
+    rows = data.get("rows")
+    if rows is None:
+        raise SystemExit(f"{path}: no wall-clock benchmark rows found")
+    return {(r["algo"], float(r["spread"]), r["weighting"]): r for r in rows}
+
+
+def check_wallclock(current: dict, baseline: dict, max_slowdown: float,
+                    warn_slowdown: float) -> int:
+    """Gate simulated time-to-target per (algo, spread, weighting) row."""
+    failures = warnings = 0
+    print(f"{'algo':<10} {'spread':>6} {'weighting':>9} "
+          f"{'base t2t':>10} {'cur t2t':>10} {'slowdown':>10}  verdict")
+    for key, base in sorted(baseline.items()):
+        algo, spread, weighting = key
+        label = f"{algo:<10} {spread:>6g} {weighting:>9}"
+        cur = current.get(key)
+        if cur is None:
+            print(f"{label} {'-':>10} {'MISSING':>10} {'-':>10}  "
+                  f"FAIL (row dropped)")
+            failures += 1
+            continue
+        if not base["converged"]:
+            print(f"{label} {'-':>10} {'-':>10} {'-':>10}  skip "
+                  f"(baseline never reached target)")
+            continue
+        if not cur["converged"]:
+            print(f"{label} {base['sim_time_s']:>10.2f} {'DNF':>10} "
+                  f"{'-':>10}  FAIL (no longer converges)")
+            failures += 1
+            continue
+        slowdown = cur["sim_time_s"] / base["sim_time_s"]
+        if slowdown > max_slowdown:
+            verdict = f"FAIL (> {max_slowdown:g}x)"
+            failures += 1
+        elif slowdown > warn_slowdown:
+            verdict = f"WARN (> {warn_slowdown:g}x)"
+            warnings += 1
+        else:
+            verdict = "ok"
+        print(f"{label} {base['sim_time_s']:>10.2f} "
+              f"{cur['sim_time_s']:>10.2f} {slowdown:>9.2f}x  {verdict}")
+    for key in sorted(set(current) - set(baseline)):
+        print(f"{key[0]:<10} {key[1]:>6g} {key[2]:>9} new (not in baseline)")
+    if failures:
+        print(f"\n{failures} wall-clock row(s) regressed — sim_time is "
+              f"deterministic, so this is an algorithmic change; if "
+              f"intentional, refresh the baseline "
+              f"(tools/check_bench.py --wallclock --update-baseline)",
+              file=sys.stderr)
+        return 1
+    if warnings:
+        print(f"\n{warnings} row(s) slower than {warn_slowdown:g}x baseline "
+              f"(within tolerance)")
+    else:
+        print("\nall wall-clock rows within tolerance")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--current", default="BENCH_engine.json",
                     help="freshly produced benchmark json")
     ap.add_argument("--baseline", default=str(BASELINE))
+    ap.add_argument("--wallclock", action="store_true",
+                    help="gate BENCH_wallclock.json time-to-target instead "
+                         "of the engine round/s")
     ap.add_argument("--max-slowdown", type=float, default=2.5,
                     help="fail beyond this rounds/s slowdown factor")
     ap.add_argument("--warn-slowdown", type=float, default=1.5,
@@ -102,10 +181,19 @@ def main() -> int:
     ap.add_argument("--update-baseline", action="store_true",
                     help="copy --current over --baseline instead of checking")
     args = ap.parse_args()
+    if args.wallclock:
+        if args.current == "BENCH_engine.json":
+            args.current = "BENCH_wallclock.json"
+        if args.baseline == str(BASELINE):
+            args.baseline = str(WALLCLOCK_BASELINE)
     if args.update_baseline:
         shutil.copyfile(args.current, args.baseline)
         print(f"baseline refreshed from {args.current} -> {args.baseline}")
         return 0
+    if args.wallclock:
+        return check_wallclock(load_wallclock_rows(Path(args.current)),
+                               load_wallclock_rows(Path(args.baseline)),
+                               args.max_slowdown, args.warn_slowdown)
     current = load_engine_section(Path(args.current))
     baseline = load_engine_section(Path(args.baseline))
     return check(current, baseline, args.max_slowdown, args.warn_slowdown)
