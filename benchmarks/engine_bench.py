@@ -22,9 +22,21 @@ ratio of the two per-path medians. On the single-leaf linreg model the flat win 
 moderate (ravel is a no-op reshape, the gain is fewer HLO ops per round);
 multi-leaf models widen it.
 
+`active_1m` is the active-set store at the regime the dense store cannot
+represent: m = 10^6 clients, alpha = 10^-4 (100 participants per round,
+FedAvg — the frozen-client family the store accelerates). The round's
+trajectories and gradient evaluations are (100, N) tiles instead of
+(10^6, N) buffers; what remains O(m) per round is the mask draw and the
+one streaming eq.-11 reduction (scattered back to the dense layout so
+results stay bitwise the dense store's — api.flat_round_aggregate_active).
+The batch is built directly (one sample per client) because the paper's
+heterogeneous-size splitter is O(m^2) at this scale.
+
 `run()` returns the machine-readable dict that `benchmarks/run.py` dumps
 to BENCH_engine.json (round/s per path). Env knobs for CI budgets:
-ENGINE_BENCH_ROUNDS (default 200), ENGINE_BENCH_REPEATS (default 3).
+ENGINE_BENCH_ROUNDS (default 200), ENGINE_BENCH_REPEATS (default 3),
+ENGINE_BENCH_1M_ROUNDS (default 3), ENGINE_BENCH_1M_CLIENTS (default
+1_000_000 — shrink for smoke runs).
 """
 from __future__ import annotations
 
@@ -35,6 +47,7 @@ import sys
 import textwrap
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import M_CLIENTS, make_problem
@@ -44,6 +57,9 @@ from repro.core.selection import AvailabilityParticipation
 
 ROUNDS = int(os.environ.get("ENGINE_BENCH_ROUNDS", "200"))
 REPEATS = int(os.environ.get("ENGINE_BENCH_REPEATS", "3"))
+ROUNDS_1M = int(os.environ.get("ENGINE_BENCH_1M_ROUNDS", "3"))
+M_1M = int(os.environ.get("ENGINE_BENCH_1M_CLIENTS", "1000000"))
+ALPHA_1M = 1e-4
 
 _SHARDED_SCRIPT = textwrap.dedent(
     """
@@ -131,6 +147,7 @@ def run():
     assert int(res_async.history["staleness_max"].max()) <= 2
 
     sharded_s = run_sharded()
+    active_1m = run_active_1m()
     r = {
         "rounds": ROUNDS,
         "clients": M_CLIENTS,
@@ -146,6 +163,7 @@ def run():
                         "note": "8 fake CPU devices, one physical socket"},
             "async": {"wall_s": async_s, "rounds_per_s": ROUNDS / async_s,
                       "max_staleness": 2},
+            "active_1m": active_1m,
         },
         "speedup_scan_vs_legacy": loop_s / scan_s,
         "speedup_flat_vs_pytree": pytree_s / scan_s,
@@ -157,6 +175,44 @@ def run():
         "overhead_async_vs_scan": async_s / scan_s,
     }
     return r
+
+
+def run_active_1m() -> dict:
+    """Million-client active-store rounds: FedAvg, m=M_1M, alpha=1e-4.
+
+    Uses the `LeastSquares` model on a directly-built one-sample-per-
+    client batch (n=32 features; the resident batch is the only (m, ...)
+    input). Dense has no twin row here — its per-round working set would
+    be k0 (m, N) trajectory buffers plus m gradient evaluations."""
+    from repro.core import make_policy
+    from repro.models import LeastSquares
+
+    n = 32
+    rng = np.random.default_rng(0)
+    A = rng.standard_normal((M_1M, 1, n)).astype(np.float32)
+    x_star = rng.standard_normal(n).astype(np.float32)
+    b = (A @ x_star + 0.1 * rng.standard_normal((M_1M, 1))).astype(np.float32)
+    batch = {"A": jnp.asarray(A), "b": jnp.asarray(b),
+             "mask": jnp.ones((M_1M, 1), jnp.float32)}
+    model = LeastSquares(n)
+    fed = FedConfig(algorithm="fedavg", num_clients=M_1M, k0=5, lr=0.01)
+    algo = make_algorithm(fed, model.loss, model=model)
+    state = algo.init(model.init(jax.random.PRNGKey(0)),
+                      jax.random.PRNGKey(1), init_batch=batch)
+    pol = make_policy("uniform", M_1M, ALPHA_1M, seed=0)
+    res = run_rounds(algo, state, batch, ROUNDS_1M, participation=pol,
+                     store="active")
+    assert res.rounds_run == ROUNDS_1M
+    assert int(res.history["selected"][0]) == pol.n_selected
+    return {
+        "wall_s": res.wall_s,
+        "rounds_per_s": ROUNDS_1M / res.wall_s,
+        "clients": M_1M,
+        "alpha": ALPHA_1M,
+        "participants_per_round": pol.n_selected,
+        "rounds": ROUNDS_1M,
+        "note": "active-set store, FedAvg: (|C|, N) tile rounds at m=1e6",
+    }
 
 
 def run_sharded() -> float:

@@ -56,8 +56,31 @@ class FederatedAlgorithm(Protocol):
     # top-level state keys whose leaves carry the leading client axis —
     # the engine shards exactly these (plus the batch) over the mesh.
     client_state_keys: Tuple[str, ...]
+    # Active-store tile shape (``run_rounds(store="active")``):
+    #   "participants" — the round reads/writes ONLY the rows of this
+    #     round's mask; frozen clients are untouched, so the engine packs
+    #     the round down to a (capacity, N) tile (the four baselines).
+    #   "population" — the round rewrites every client's state each round
+    #     (FedGiA's gradient-descent branch, eqs. (15)-(17), touches every
+    #     non-selected client), so the tile is statically the whole
+    #     population and the store degenerates to the dense layout with
+    #     bitwise-identical results.
+    active_tile: str
 
     def init(self, params0, rng, init_batch=None) -> Dict[str, Any]: ...
+
+    def round_flat_active(
+        self, state, batch, spec, active, stale=None
+    ) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
+        """Packed-tile round (``store="active"``): like ``round_flat`` under
+        an engine mask, but the round body gathers the (capacity, N) tile
+        of ``active.idx`` rows from the resident (m, N) flat client
+        buffers, computes on the tile, and scatters the updated rows back,
+        so state results are BITWISE the dense masked round's. Population
+        diagnostics (``f_xbar``, ``grad_sq_norm``) are redefined as
+        participant quantities: the server cannot observe clients it never
+        contacted this round (see docs/engine.md#active-set-client-store)."""
+        ...
 
     def round(
         self, state, batch, mask: Optional[jax.Array] = None, stale=None
@@ -317,6 +340,129 @@ def flat_round_aggregate(contrib, grads, losses, sel_vec, spec,
     return out
 
 
+def flat_grad_sq_norm_active(grads_tile: jax.Array, active,
+                             spec) -> jax.Array:
+    """Participant-gradient diagnostic ||(1/|C|) Σ_{i∈C} ∇f_i||² over the
+    packed (capacity, N) gradient tile.
+
+    This is the active-store reading of ``grad_sq_norm``: the server never
+    contacted the frozen clients this round, so the population gradient of
+    the dense path is unobservable — the tol stopping rule gates on the
+    participants' mean gradient instead (documented in docs/engine.md).
+    Padding rows are zeroed (exact identities of the sum). Under client
+    sharding the participant count rides the existing scalar psum next to
+    the reduce-scattered chunk norm, so the round still issues no second
+    model-size all-reduce."""
+    g_masked = active.zero_invalid(grads_tile)
+    if _CLIENT_AXIS is None:
+        g_mean = jnp.sum(g_masked, axis=0) / active.count.astype(
+            g_masked.dtype
+        )
+        return pt.tree_sq_norm(spec.unravel(g_mean))
+    name, _ = _CLIENT_AXIS
+    g_sum = jnp.sum(g_masked, axis=0)
+    if g_sum.shape[-1] % _CLIENT_AXIS[1] == 0:
+        chunk = jax.lax.psum_scatter(g_sum, name, scatter_dimension=0,
+                                     tiled=True)
+        sq, cnt = jax.lax.psum((jnp.vdot(chunk, chunk), active.count), name)
+    else:
+        total, cnt = jax.lax.psum((g_sum, active.count), name)
+        sq = jnp.vdot(total, total)
+    return sq / cnt.astype(jnp.float32) ** 2
+
+
+def flat_round_aggregate_active(contrib_tile, grads_tile, losses_tile,
+                                active, spec,
+                                weights: Optional[jax.Array] = None,
+                                extra_mean_tile: Optional[jax.Array] = None):
+    """Eq. (11) + diagnostics over the PACKED participant tile, in ONE
+    collective — the active-store twin of :func:`flat_round_aggregate`.
+
+    All tile arguments are (capacity, ...) with ``active.idx`` row order.
+    The aggregate ``agg`` and the ``extra`` rider are BITWISE the dense
+    masked path's. Packed-order sums cannot deliver that on their own —
+    XLA reduces an m-row and a capacity-row buffer with different
+    accumulator associations (strided multi-accumulator loops), so the
+    two differ by ~1 ulp — hence on a single device the tile is first
+    SCATTERED back to the dense (m, N) layout (zeros at frozen rows,
+    exactly the dense path's masked values, bit for bit) and the dense
+    reduction expressions run on it unchanged: same input bits + same
+    compiled reduce = same output bits. Eq. (11) therefore remains one
+    O(m·N) streaming reduction per round; the active store's saving is
+    the per-client WORK (trajectories, gradient evaluations: O(capacity)
+    instead of O(m)), not the final aggregation pass. The diagnostics
+    differ by construction: ``f_mean`` is the participant loss mean and
+    ``grad_sq_norm`` the participant gradient norm
+    (:func:`flat_grad_sq_norm_active`), because the dense versions
+    average over clients the active round never touches. ``weights`` are
+    the DENSE (m_local,) staleness weights (:func:`stale_weights`);
+    ``extra_mean_tile`` rides as a plain all-client mean (SCAFFOLD's
+    control-variate delta, exact zeros on frozen clients). Under client
+    sharding the local tuple keeps the packed O(capacity) sums and rides
+    a single `jax.lax.psum` — exactly ONE model-size all-reduce
+    (HLO-asserted in tests/test_flat.py), fp-equal to the dense sharded
+    round (which is itself only fp-equal to unsharded, same caveat as
+    :func:`flat_round_aggregate`)."""
+    gsq = flat_grad_sq_norm_active(grads_tile, active, spec)
+    losses_z = active.zero_invalid(losses_tile)
+    n_sel = active.count
+    loss_sum = jnp.sum(losses_z)
+    if _CLIENT_AXIS is None:
+        m = active.num_clients
+        zeros = jnp.zeros((m,) + contrib_tile.shape[1:], contrib_tile.dtype)
+        contrib_d = active.scatter(zeros, contrib_tile)
+        mask = active.mask
+        if weights is not None:
+            w = jnp.where(mask, weights.astype(jnp.float32), 0.0)
+            num = jnp.sum(
+                w[:, None].astype(contrib_d.dtype) * contrib_d, axis=0
+            )
+            den = jnp.sum(w)
+        else:
+            num = jnp.sum(jnp.where(mask[:, None], contrib_d, 0), axis=0)
+            den = active.count
+        agg = num / den.astype(num.dtype)
+        out = (agg, gsq, loss_sum / n_sel, n_sel)
+        if extra_mean_tile is not None:
+            extra_d = active.scatter(
+                jnp.zeros_like(contrib_d), extra_mean_tile
+            )
+            out = out + (jnp.mean(extra_d, axis=0),)
+        return out
+    name, shards = _CLIENT_AXIS
+    m_global = active.num_clients * shards
+    contrib_z = active.zero_invalid(contrib_tile)
+    if weights is not None:
+        w_t = jnp.where(
+            active.valid,
+            active.gather(jnp.where(active.mask, weights, 0.0)).astype(
+                jnp.float32
+            ),
+            0.0,
+        )
+        num = jnp.sum(w_t[:, None].astype(contrib_z.dtype) * contrib_z,
+                      axis=0)
+        den = jnp.sum(w_t)
+    else:
+        num = jnp.sum(contrib_z, axis=0)
+        den = active.count
+    n_buf = num.shape[0]
+    if extra_mean_tile is not None:
+        num = jnp.concatenate([
+            num,
+            jnp.sum(active.zero_invalid(extra_mean_tile), axis=0).astype(
+                num.dtype
+            ),
+        ])
+    local = (num, loss_sum, n_sel, den)
+    red = jax.lax.psum(local, name)  # the round's ONE all-reduce
+    agg = red[0][:n_buf] / red[3].astype(red[0].dtype)
+    out = (agg, gsq, red[1] / red[2], red[2])
+    if extra_mean_tile is not None:
+        out = out + (red[0][n_buf:] / m_global,)
+    return out
+
+
 def per_client_value_and_grad(loss_fn: LossFn):
     """vmap(value_and_grad) over the stacked client batch, shared params."""
     vg = jax.value_and_grad(lambda p, b: loss_fn(p, b)[0])
@@ -509,6 +655,55 @@ def stale_xbar_view(stale: StaleXbar, xbar, mask):
     )
     age = jnp.where(refresh, 1, s_used + 1).astype(jnp.int32)
     return anchor_c, StaleXbar(buf, age, s_used, stale.max_staleness,
+                               stale.weighting, stale.decay)
+
+
+def stale_xbar_view_active(stale: StaleXbar, xbar, active):
+    """Active-store twin of :func:`stale_xbar_view`: the anchor view is
+    gathered for the packed tile only.
+
+    The per-client SCALARS (age, last_used) stay dense (m,) — they are the
+    "compact per-client riders" of the active store and advance bitwise
+    like the dense path's. The resident (m, ...) anchor buffer is updated
+    with one dense row-select per round (refresh rows take the fresh x̄):
+    a bandwidth-only pass with NO per-client compute, which is what the
+    active store actually eliminates. Returns ``(anchor_tile, stale')``
+    where ``anchor_tile`` has (capacity, ...) leaves; padding rows carry a
+    clamped duplicate row and are masked downstream like any tile row."""
+    if stale.always_fresh:
+        cap = active.capacity
+        anchor_t = jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (cap,) + l.shape), xbar
+        )
+        # the buffered view is never read while max_staleness == 0, so the
+        # dense broadcast write is skipped (the dense path pays it only
+        # because its round reads anchors for all m clients anyway)
+        return anchor_t, StaleXbar(
+            stale.anchor,
+            jnp.ones_like(stale.age),
+            jnp.zeros_like(stale.last_used),
+            0,
+            stale.weighting,
+            stale.decay,
+        )
+    force = stale.age > stale.max_staleness
+    force_t = active.gather(force)
+    anchor_t = jax.tree.map(
+        lambda buf, fresh: jnp.where(
+            _mask_bcast(force_t, active.gather(buf)), fresh, active.gather(buf)
+        ),
+        stale.anchor,
+        xbar,
+    )
+    s_used = jnp.where(force, 0, stale.age).astype(jnp.int32)
+    refresh = jnp.logical_or(active.mask, force)
+    buf = jax.tree.map(
+        lambda a, fresh: jnp.where(_mask_bcast(refresh, a), fresh, a),
+        stale.anchor,
+        xbar,
+    )
+    age = jnp.where(refresh, 1, s_used + 1).astype(jnp.int32)
+    return anchor_t, StaleXbar(buf, age, s_used, stale.max_staleness,
                                stale.weighting, stale.decay)
 
 

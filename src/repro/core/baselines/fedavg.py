@@ -28,6 +28,7 @@ class FedAvg:
     client_state_keys = ()
     flat_client_keys = ()
     flat_global_keys = ("x",)
+    active_tile = "participants"  # frozen clients are never read or written
 
     def __init__(self, fed: FedConfig, loss_fn: LossFn, model=None):
         self.fed = fed
@@ -127,6 +128,55 @@ class FedAvg:
         x_new, gsq, f_mean, n_sel = api.flat_round_aggregate(
             xc_new, grads0, losses0, participation_vec(losses0, mask), spec,
             mask=mask, weights=api.stale_weights(stale),
+        )
+
+        new_state = dict(state)
+        new_state.update(
+            x=x_new, round=state["round"] + 1, step=state["step"] + fed.k0
+        )
+        metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
+        metrics["local_grad_evals"] = jnp.float32(fed.k0)
+        if stale is not None:
+            return new_state, stale, metrics
+        return new_state, metrics
+
+    # ----------------------------------------------------- active-set round
+    def round_flat_active(self, state, batch, spec, active, stale=None):
+        """`round_flat` on the packed participant tile (store="active"):
+        the k0 local trajectories exist only for the (capacity,) gathered
+        clients, so the round's working set is (capacity, N) instead of
+        (m, N) — FedAvg has no per-client carry, so nothing is scattered
+        back. State results are bitwise the dense masked round's; the
+        loss/grad diagnostics are participant means (the dense path's
+        population means would require contacting every client)."""
+        fed = self.fed
+        cap = active.capacity
+        batch_t = active.gather_tree(batch)
+        if stale is None:
+            xc = broadcast_clients(state["x"], cap)
+        else:
+            xc, stale = api.stale_xbar_view_active(stale, state["x"], active)
+        fvg = flat_value_and_grad(self._vg_stacked, spec)
+
+        def local_step(carry, j):
+            x, first = carry
+            losses, grads = fvg(x, batch_t)
+            lr = lr_schedule(fed.lr, state["step"] + j)
+            x_new = x - lr * grads.astype(x.dtype)
+            first = jax.tree.map(
+                lambda f, new: jnp.where(j == 0, new, f), first,
+                (losses, grads)
+            )
+            return (x_new, first), None
+
+        first0 = (jnp.zeros((cap,), jnp.float32), jnp.zeros_like(xc))
+        (xc_new, (losses0, grads0)), _ = jax.lax.scan(
+            local_step, (xc, first0), jnp.arange(fed.k0)
+        )
+        w = api.stale_weights(stale)
+        x_new, gsq, f_mean, n_sel = api.flat_round_aggregate_active(
+            xc_new, grads0, losses0, active, spec,
+            weights=w,
         )
 
         new_state = dict(state)

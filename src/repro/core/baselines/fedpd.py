@@ -31,6 +31,7 @@ class FedPD:
     client_state_keys = ("lam",)
     flat_client_keys = ("lam",)
     flat_global_keys = ("x",)
+    active_tile = "participants"  # frozen clients keep their duals untouched
 
     def __init__(self, fed: FedConfig, loss_fn: LossFn, model=None):
         self.fed = fed
@@ -169,6 +170,73 @@ class FedPD:
         x_new, gsq, f_mean, n_sel = api.flat_round_aggregate(
             anchors_new, grads0, losses0, participation_vec(losses0, mask),
             spec, mask=mask, weights=api.stale_weights(stale),
+        )
+
+        new_state = dict(state)
+        new_state.update(
+            x=x_new,
+            lam=lam_new,
+            round=state["round"] + 1,
+            step=state["step"] + fed.k0,
+        )
+        metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
+        metrics["local_grad_evals"] = jnp.float32(fed.k0 * fed.inner_steps)
+        if stale is not None:
+            return new_state, stale, metrics
+        return new_state, metrics
+
+    # ----------------------------------------------------- active-set round
+    def round_flat_active(self, state, batch, spec, active, stale=None):
+        """`round_flat` on the packed participant tile (store="active"):
+        the duals of the round's participants are GATHERED from the resident
+        (m, N) `lam` buffer, advanced on the (capacity, N) tile, and
+        SCATTERED back — frozen clients' rows are never touched, which is
+        exactly the dense path's `masked_update` freeze, row for row. The
+        padded tail of the tile is dropped at the scatter (sentinel index),
+        so no masking of the dual update is needed."""
+        fed = self.fed
+        cap = active.capacity
+        eta = fed.fedpd_eta
+        batch_t = active.gather_tree(batch)
+        if stale is None:
+            anchors = broadcast_clients(state["x"], cap)
+        else:
+            anchors, stale = api.stale_xbar_view_active(stale, state["x"],
+                                                        active)
+        lam_t = active.gather(state["lam"])
+        fvg = flat_value_and_grad(self._vg_stacked, spec)
+
+        def local_step(carry, j):
+            anchor, lam, first = carry
+            lr = lr_schedule(fed.lr, state["step"] + j)
+
+            def inner(x, _):
+                losses, grads = fvg(x, batch_t)
+                g = grads + lam + (x - anchor) / eta
+                x_new = x - lr * g.astype(x.dtype)
+                return x_new, (losses, grads)
+
+            xi, (losses, grads) = jax.lax.scan(
+                inner, anchor, None, length=fed.inner_steps
+            )
+            lam_new = lam + (xi - anchor) / eta
+            anchor_new = xi + eta * lam_new
+            first = jax.tree.map(
+                lambda f, new: jnp.where(j == 0, new, f),
+                first,
+                (losses[0], grads[0]),
+            )
+            return (anchor_new, lam_new, first), None
+
+        first0 = (jnp.zeros((cap,), jnp.float32), jnp.zeros_like(anchors))
+        (anchors_new, lam_new_t, (losses0, grads0)), _ = jax.lax.scan(
+            local_step, (anchors, lam_t, first0), jnp.arange(fed.k0)
+        )
+        lam_new = active.scatter(state["lam"], lam_new_t)
+        w = api.stale_weights(stale)
+        x_new, gsq, f_mean, n_sel = api.flat_round_aggregate_active(
+            anchors_new, grads0, losses0, active, spec,
+            weights=w,
         )
 
         new_state = dict(state)

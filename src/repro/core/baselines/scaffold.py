@@ -28,6 +28,7 @@ class Scaffold:
     client_state_keys = ("ci",)
     flat_client_keys = ("ci",)
     flat_global_keys = ("x", "c")
+    active_tile = "participants"  # frozen clients keep their control variates
 
     def __init__(self, fed: FedConfig, loss_fn: LossFn, model=None):
         self.fed = fed
@@ -167,6 +168,69 @@ class Scaffold:
             y, grads0, losses0, participation_vec(losses0, mask), spec,
             mask=mask, weights=api.stale_weights(stale),
             extra_mean=ci_new - state["ci"],
+        )
+        c_new = state["c"] + dci
+
+        new_state = dict(state)
+        new_state.update(
+            x=x_new,
+            c=c_new,
+            ci=ci_new,
+            round=state["round"] + 1,
+            step=state["step"] + fed.k0,
+        )
+        metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
+        metrics["local_grad_evals"] = jnp.float32(fed.k0)
+        if stale is not None:
+            return new_state, stale, metrics
+        return new_state, metrics
+
+    # ----------------------------------------------------- active-set round
+    def round_flat_active(self, state, batch, spec, active, stale=None):
+        """`round_flat` on the packed participant tile (store="active"):
+        participant control variates are GATHERED from the resident (m, N)
+        `ci` buffer, advanced on the (capacity, N) tile, and SCATTERED back
+        (frozen rows untouched == the dense `masked_update` freeze). The
+        server variate keeps the paper's all-client 1/N denominator: the
+        tile's delta sum equals the dense delta sum because frozen clients'
+        deltas are exactly zero, so dividing the packed sum by the GLOBAL
+        client count (`extra_mean_tile=`) reproduces the |S|/N scaling
+        bitwise."""
+        fed = self.fed
+        cap = active.capacity
+        batch_t = active.gather_tree(batch)
+        if stale is None:
+            xc = broadcast_clients(state["x"], cap)
+        else:
+            xc, stale = api.stale_xbar_view_active(stale, state["x"], active)
+        lr = lr_schedule(fed.lr, state["step"])
+        ci_t = active.gather(state["ci"])
+        fvg = flat_value_and_grad(self._vg_stacked, spec)
+
+        def local_step(carry, j):
+            y, first = carry
+            losses, grads = fvg(y, batch_t)
+            lr_j = lr_schedule(fed.lr, state["step"] + j)
+            y_new = y - lr_j * (grads + state["c"][None] - ci_t).astype(y.dtype)
+            first = jax.tree.map(
+                lambda f, new: jnp.where(j == 0, new, f), first,
+                (losses, grads)
+            )
+            return (y_new, first), None
+
+        first0 = (jnp.zeros((cap,), jnp.float32), jnp.zeros_like(xc))
+        (y, (losses0, grads0)), _ = jax.lax.scan(
+            local_step, (xc, first0), jnp.arange(fed.k0)
+        )
+
+        denom = fed.k0 * lr
+        ci_new_t = ci_t - state["c"][None] + (xc - y) / denom
+        ci_new = active.scatter(state["ci"], ci_new_t)
+        w = api.stale_weights(stale)
+        x_new, gsq, f_mean, n_sel, dci = api.flat_round_aggregate_active(
+            y, grads0, losses0, active, spec,
+            weights=w,
+            extra_mean_tile=ci_new_t - ci_t,
         )
         c_new = state["c"] + dci
 

@@ -149,7 +149,7 @@ def unflatten_state(algo, state, spec):
 
 def make_round_fn(algo, mesh=None, client_axis: str = "data",
                   masked: bool = False, stale: bool = False,
-                  flat_spec=None):
+                  flat_spec=None, active_capacity: Optional[int] = None):
     """`algo.round`, optionally wrapped in `shard_map` over the client axis.
 
     `masked=True` returns a `(state, batch, mask) -> (state, metrics)`
@@ -168,8 +168,29 @@ def make_round_fn(algo, mesh=None, client_axis: str = "data",
     has the same signature but `state` carries the raveled (m, N) /
     (N,) buffers (`flatten_state`) and dispatch goes to
     `algo.round_flat(state, batch, spec, ...)` instead of `algo.round`.
+
+    `active_capacity` (with `flat_spec`, implies masked) selects the
+    ACTIVE-SET round (`run_rounds(store="active")`): the round's (m,)
+    mask is packed into a `pt.ActiveSet` of that static capacity INSIDE
+    the round body and dispatch goes to `algo.round_flat_active`. The
+    callable's signature is unchanged — the pack happens downstream of
+    the mask draw, so the scan carry, the chunked drivers and the legacy
+    loop are identical between stores. Under a mesh the pack runs inside
+    `shard_map` on the shard-local (m_local,) mask, so the capacity is
+    clamped to m_local (a shard can never host more participants than it
+    has clients).
     """
-    if flat_spec is not None:
+    if flat_spec is not None and active_capacity is not None:
+        cap = active_capacity
+        if mesh is not None:
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            cap = min(cap, algo.fed.num_clients // max(sizes.get(client_axis, 1), 1))
+
+        def base_round(state, batch, mask, *extra):
+            aset = pt.make_active_set(mask, cap)
+            return algo.round_flat_active(state, batch, flat_spec, aset,
+                                          *extra)
+    elif flat_spec is not None:
         base_round = lambda state, batch, *extra: algo.round_flat(
             state, batch, flat_spec, *extra)
     else:
@@ -261,6 +282,7 @@ def run_rounds(
     stale_weighting: str = "uniform",
     stale_decay: float = 1.0,
     flat: bool = True,
+    store: str = "dense",
 ) -> RoundResult:
     """Run up to `num_rounds` communication rounds of `algo`.
 
@@ -275,7 +297,12 @@ def run_rounds(
     fastest per-round candidate drives the remainder. The rounds executed
     are identical whatever the timings, so with tol <= 0 results are
     bitwise deterministic; with tol > 0 only the stop GRANULARITY (which
-    is already chunk-dependent) can differ between machines.
+    is already chunk-dependent) can differ between machines. The tuner
+    composes with store="active": the tile gather/scatter runs inside
+    every round whatever the chunk length, so candidate timings stay
+    comparable and the winning chunk is store-independent
+    (tests/test_store.py pins auto-chunk == fixed-chunk under the active
+    store).
 
     flat=True (default) runs the FLAT round path when the algorithm
     provides it (`round_flat`): the model-shaped state is raveled ONCE
@@ -319,6 +346,26 @@ def run_rounds(
     eq. (11) (`api.stale_weights`): "uniform" (default, today's
     unweighted path — bitwise), "poly" ((1+s)^-decay) or "exp"
     (e^(-decay*s)). Requires async_rounds (or clock).
+
+    store: client-state execution strategy for the flat path. "dense"
+    (default) keeps every round's working set (m, N) — trajectories and
+    gradients are computed for all m clients and non-participants are
+    masked out, the only shape-stable formulation when every client runs
+    a branch (FedGiA's GD rewrite). "active" packs the round down to the
+    participants: the resident (m, N) client buffers stay in the donated
+    scan carry, but each round GATHERS a (capacity, N) tile of the
+    selected clients (capacity = `participation.active_capacity`, or m
+    under a clock), runs the algorithm's `round_flat_active` on the
+    tile, and SCATTERS per-client state back — the round's broadcasts,
+    trajectories and gradient evaluations shrink from m rows to
+    capacity, which is what makes m=10^6, alpha=10^-4 rounds tractable
+    (benchmarks/engine_bench.py `active_1m`). States are bitwise equal
+    between stores (tests/test_store.py); loss/gradient diagnostics
+    become PARTICIPANT means — the server cannot observe clients it
+    never contacted. Requires flat=True and a participation policy or
+    clock; FedGiA declares `active_tile="population"` (every client is
+    rewritten every round by eqs. 15-17) and falls back to the dense
+    round internally.
     """
     if num_rounds <= 0:
         return RoundResult(state, {}, 0, False, 0.0)
@@ -378,13 +425,37 @@ def run_rounds(
                 "(FederatedAlgorithm state contract)"
             )
     flat = flat and hasattr(algo, "round_flat")
+    if store not in ("dense", "active"):
+        raise ValueError(f"unknown store {store!r}: ('dense', 'active')")
+    active_capacity = None
+    if store == "active":
+        if not flat:
+            raise ValueError(
+                "store='active' packs the flat (m, N) client buffers — it "
+                "requires the flat round path (flat=True on an algorithm "
+                "providing round_flat; drop --no-flat)"
+            )
+        if not masked:
+            raise ValueError(
+                "store='active' needs a per-round participant set to pack "
+                "the tile from — pass participation= (core.selection) or "
+                "clock= (core.clock)"
+            )
+        if not hasattr(algo, "round_flat_active"):
+            raise ValueError(
+                f"algorithm {getattr(algo, 'name', algo)!r} does not "
+                "implement round_flat_active"
+            )
+        active_capacity = (algo.fed.num_clients if clock is not None
+                           else participation.active_capacity)
     spec = pt.ravel_spec(state["x"]) if flat else None
     if flat:
         # the ONE ravel of the run: everything downstream carries the
         # contiguous buffers; the inverse runs at the return boundary.
         state = flatten_state(algo, state, spec)
     round_fn = make_round_fn(algo, mesh, client_axis, masked=masked,
-                             stale=async_rounds, flat_spec=spec)
+                             stale=async_rounds, flat_spec=spec,
+                             active_capacity=active_capacity)
     if mesh is not None:
         state, batch = shard_inputs(algo, state, batch, mesh, client_axis)
     if donate is None:

@@ -47,6 +47,11 @@ class FedGiA:
     # (m, n, n) factor either way)
     flat_client_keys = ("z", "pi", "h")
     flat_global_keys = ("x",)
+    # FedGiA's GD branch (eqs. 15-17) rewrites EVERY non-selected client's
+    # state from its fresh gradient each round, so the round's working set
+    # is the whole population by construction — the active tile is (m, N)
+    # and the store degenerates to dense (see round_flat_active).
+    active_tile = "population"
 
     def __init__(self, fed: FedConfig, loss_fn: LossFn, model=None):
         self.fed = fed
@@ -442,3 +447,19 @@ class FedGiA:
     def _vg_values(self, xc_stacked, batch):
         loss = jax.vmap(lambda p, b: self.loss_fn(p, b)[0])(xc_stacked, batch)
         return loss, None
+
+    # ----------------------------------------------------- active-set round
+    def round_flat_active(self, state, batch, spec, active, stale=None):
+        """Active-store round (``run_rounds(store="active")``).
+
+        FedGiA cannot shrink the round's working set: the GD branch
+        (eqs. 15-17) recomputes EVERY non-selected client's (z, pi, h)
+        from its fresh local gradient each round, so every client is
+        read AND written regardless of the §V.B draw — `active_tile =
+        "population"`. Packing m rows into an m-row tile is a pure
+        permutation with no memory or compute win, so this delegates to
+        the dense masked round (bitwise identical by construction). The
+        active store's million-client payoff applies to the frozen-client
+        family (FedAvg/FedProx/FedPD/SCAFFOLD), where non-participants
+        are genuinely untouched."""
+        return self.round_flat(state, batch, spec, active.mask, stale)

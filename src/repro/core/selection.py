@@ -76,11 +76,36 @@ class ParticipationPolicy:
     def n_selected(self) -> int:
         return num_selected(self.m, self.alpha)
 
+    @property
+    def active_capacity(self) -> int:
+        """Static upper bound on the round's participant count — the packed
+        tile size of the active-set store (``run_rounds(store="active")``).
+
+        Fixed-cardinality policies (uniform / weighted / cyclic) emit
+        exactly ``n_selected`` participants every round, so the store packs
+        to a (n_selected, N) tile. Variable-cardinality sources
+        (availability traces, wall-clock arrivals) can select anyone, so
+        their bound is m: correct, but no smaller than dense — the active
+        store's memory win needs a fixed-cardinality policy.
+        """
+        return self.m
+
     def init(self) -> Any:
         return ()
 
     def mask(self, pstate, round_idx) -> MaskAndState:
         return jnp.ones((self.m,), bool), pstate
+
+    def indices(self, pstate, round_idx, capacity: Optional[int] = None):
+        """Active-set form of :meth:`mask`: the round's participants as a
+        packed, padded index set (``pt.ActiveSet``) instead of a dense
+        (m,) mask. Derived from the SAME mask draw, so the participant
+        sequence is identical between the dense and active stores."""
+        from repro.utils import pytree as pt
+
+        mask, pstate = self.mask(pstate, round_idx)
+        cap = self.active_capacity if capacity is None else capacity
+        return pt.make_active_set(mask, cap), pstate
 
 
 class UniformParticipation(ParticipationPolicy):
@@ -92,6 +117,10 @@ class UniformParticipation(ParticipationPolicy):
     """
 
     name = "uniform"
+
+    @property
+    def active_capacity(self) -> int:
+        return self.n_selected  # exact cardinality every round
 
     def __init__(self, m: int, alpha: float, seed: int = 0):
         super().__init__(m, alpha)
@@ -115,6 +144,10 @@ class WeightedParticipation(ParticipationPolicy):
     """
 
     name = "weighted"
+
+    @property
+    def active_capacity(self) -> int:
+        return self.n_selected  # exact cardinality every round
 
     def __init__(self, m: int, alpha: float, weights, seed: int = 0):
         super().__init__(m, alpha)
@@ -143,6 +176,10 @@ class CyclicParticipation(ParticipationPolicy):
     a variance-free scenario and for reproducible stragglers."""
 
     name = "cyclic"
+
+    @property
+    def active_capacity(self) -> int:
+        return self.n_selected  # exact cardinality every round
 
     def init(self):
         return ()

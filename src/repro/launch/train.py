@@ -28,6 +28,13 @@ staleness-aware overlapped rounds: a straggler works against the x̄ it
 last downloaded, at most `--max-staleness` rounds old (see docs/async.md).
 `--max-staleness 0` is bitwise identical to the synchronous masked run.
 
+`--store active` swaps the dense (m, N) round working set for a packed
+participant tile: each round gathers the selected clients' rows, runs
+the local work at O(|C|) instead of O(m), and scatters per-client state
+back into the resident buffers. States are bitwise-equal to the dense
+store; loss/gradient diagnostics become participant means. This is what
+makes m=10^6 clients at alpha=10^-4 tractable (engine_bench `active_1m`).
+
 `--clock` replaces the sampled arrival process with a WALL-CLOCK
 simulation (core/clock.py): per-client compute times (`--client-speeds`)
 drive event-driven rounds whose arrival mask is derived from simulated
@@ -122,7 +129,10 @@ def validate_flags(args) -> dict:
     `--clock trace` (library-level — needs a duration table); a
     non-positive `--stale-decay` with a decaying weighting; a `--chunk`
     that is neither an int nor "auto"; `--chunk auto` with `--no-scan`
-    (the legacy loop has no chunks).
+    (the legacy loop has no chunks); `--store active` with `--no-flat`
+    (the active store packs the FLAT buffers) or without a participant
+    source (`--participation` or `--clock` — there is nothing to pack
+    a tile from under legacy full participation).
 
     Returns the resolved engine knobs: participation kind, clock kind,
     whether async rounds are on (a clock implies them), the parsed
@@ -157,6 +167,18 @@ def validate_flags(args) -> dict:
         raise SystemExit(
             "--kernel on/interpret requires the flat round path "
             "(drop --no-flat)")
+    store = getattr(args, "store", "dense")
+    if store == "active":
+        if getattr(args, "no_flat", False):
+            raise SystemExit(
+                "--store active packs the flat (m, N) client buffers and "
+                "requires the flat round path (drop --no-flat)")
+        if kind == "full" and clock_kind == "none":
+            raise SystemExit(
+                "--store active needs a per-round participant set to pack "
+                "the tile from: pass --participation (uniform/weighted/"
+                "cyclic give the fixed-size tile; others bound it by m) "
+                "or --clock")
     if clock_kind != "none" and kind != "full":
         raise SystemExit(
             "--clock derives the arrival mask from simulated finish times "
@@ -200,6 +222,7 @@ def validate_flags(args) -> dict:
         "speeds": speeds,
         "chunk": chunk,
         "flat": not getattr(args, "no_flat", False),
+        "store": store,
         "use_kernel": use_kernel,
         "kernel_interpret": kernel_interpret,
     }
@@ -277,6 +300,10 @@ def train(args) -> dict:
                  "weighting=%s", max_staleness, stale_weighting)
     if clock is not None:
         log.info("wall-clock rounds: %s clock, m=%d", clock.name, args.clients)
+    if parsed["store"] == "active":
+        cap = args.clients if clock is not None else policy.active_capacity
+        log.info("active-set store: (%d, N) participant tile gathered/"
+                 "scattered per round (m=%d resident)", cap, args.clients)
 
     res = run_rounds(
         algo, state, batch, args.rounds,
@@ -287,6 +314,7 @@ def train(args) -> dict:
         stale_weighting=stale_weighting,
         stale_decay=getattr(args, "stale_decay", 1.0),
         flat=parsed["flat"],
+        store=parsed["store"],
     )
     history = [
         {"round": r, "f": float(res.history["f_xbar"][r]),
@@ -368,6 +396,19 @@ def build_parser() -> argparse.ArgumentParser:
                          "(kernel on TPU, fused jnp elsewhere), on, off, "
                          "or interpret (Pallas interpret mode — CPU "
                          "validation). Requires the flat path")
+    ap.add_argument("--store", default="dense", choices=["dense", "active"],
+                    help="client-state execution strategy for the flat "
+                         "path: dense (default, every round's working set "
+                         "is (m, N) with non-participants masked out) or "
+                         "active (each round gathers the participants "
+                         "into a packed (capacity, N) tile, runs local "
+                         "work at O(capacity) instead of O(m), and "
+                         "scatters per-client state back — states bitwise-"
+                         "equal to dense, loss/grad diagnostics become "
+                         "participant means; the million-client regime, "
+                         "see docs/engine.md#active-set-client-store). "
+                         "Requires --participation or --clock; rejected "
+                         "with --no-flat")
     ap.add_argument("--shard-clients", type=int, default=0,
                     help="shard the client axis over an N-way data mesh")
     ap.add_argument("--participation", default="full", choices=POLICIES,

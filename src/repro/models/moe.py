@@ -2,12 +2,21 @@
 dispatch (TPU-classic "dropping" MoE, exact FLOPs accounting), optional
 shared experts (deepseek-v3) and dense residual branch (arctic).
 
-Dispatch uses gather (`jnp.take`) and scatter-add (`segment_sum`) rather
-than one-hot einsums, so HLO FLOPs reflect real expert compute:
-  E * C * (3 d f) per layer, with E*C ≈ capacity_factor * T * k.
-Expert weights are sharded over the `model` mesh axis (expert parallelism);
-GSPMD inserts the token all-to-all/all-reduce around the sharded expert
-matmuls.
+Capacity competition is scoped PER SEQUENCE POSITION: the group of B
+tokens at position s competes for its own (E, C) slots, which is exactly
+the group the serving path routes together at decode step s. That makes
+the drop pattern causal — prefill+decode reproduce the train-mode
+forward bit-for-bit at the routing level (tests/test_serve.py), where
+a flattened (T*k,) group would let batch-0's late tokens steal capacity
+from batch-1's early ones.
+
+Dispatch uses gather (`jnp.take`) and scatter-add rather than one-hot
+einsums, so HLO FLOPs reflect real expert compute:
+  S * E * C * (3 d f) per layer, with C ≈ max(8, capacity_factor * B * k / E)
+(the per-group capacity floor makes small-batch dispatch pay for at most
+8 slots per expert per position). Expert weights are sharded over the
+`model` mesh axis (expert parallelism); GSPMD inserts the token
+all-to-all/all-reduce around the sharded expert matmuls.
 """
 from __future__ import annotations
 
@@ -43,7 +52,12 @@ def expert_capacity(num_tokens: int, num_experts: int, k: int) -> int:
 
 
 def moe_apply(params, cfg: ModelConfig, x, *, router_dtype=jnp.float32):
-    """x: (B,S,d). Returns (out (B,S,d), aux_loss scalar)."""
+    """x: (B,S,d). Returns (out (B,S,d), aux_loss scalar).
+
+    Routing (top-k, gates, aux loss) is per-token; capacity competition
+    is per position group — the B tokens at sequence position s share one
+    (E, C) slot budget, matching the decode path's step-s routing group.
+    """
     B, S, d = x.shape
     E, k = cfg.num_experts, cfg.experts_per_token
     T = B * S
@@ -54,56 +68,67 @@ def moe_apply(params, cfg: ModelConfig, x, *, router_dtype=jnp.float32):
     gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (T,k)
     gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
 
-    # ---- load-balance auxiliary loss (Switch-style) ----
+    # ---- load-balance auxiliary loss (Switch-style, whole batch) ----
     me = probs.mean(axis=0)  # (E,)
     ce = jnp.zeros((E,), jnp.float32)
     ce = ce.at[expert_idx.reshape(-1)].add(1.0) / (T * k)
     aux = E * jnp.sum(me * ce)
 
-    # ---- capacity-based dispatch (sort-based positions: O(Tk log Tk)
-    # memory O(Tk), instead of the classic (Tk, E) one-hot cumsum) ----
-    C = expert_capacity(T, E, k)
-    flat_expert = expert_idx.reshape(-1)  # (T*k,)
-    Tk = flat_expert.shape[0]
-    order = jnp.argsort(flat_expert, stable=True)
-    sorted_e = flat_expert[order]
-    starts = jnp.searchsorted(sorted_e, jnp.arange(E))  # (E,)
-    pos_sorted = jnp.arange(Tk) - starts[sorted_e]
-    pos = jnp.zeros((Tk,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
-    keep = pos < C
-    slot = flat_expert * C + jnp.where(keep, pos, 0)  # (T*k,) flat (E*C) slot
-    token_of = jnp.repeat(jnp.arange(T), k)
+    # ---- capacity-based dispatch, one causal group per position
+    # (sort-based positions: O(Bk log Bk) per group, memory O(Bk),
+    # instead of the classic (Bk, E) one-hot cumsum) ----
+    C = expert_capacity(B, E, k)
+    xg = x.transpose(1, 0, 2)  # (S,B,d) — group s = batch column at pos s
+    eg = expert_idx.reshape(B, S, k).transpose(1, 0, 2)  # (S,B,k)
+    gg = gate_vals.reshape(B, S, k).transpose(1, 0, 2)
 
-    # scatter tokens into (E*C, d) expert buffers
-    buf = jnp.zeros((E * C, d), x.dtype)
-    buf = buf.at[jnp.where(keep, slot, E * C)].set(
-        jnp.take(xt, token_of, axis=0), mode="drop"
-    )
-    buf = buf.reshape(E, C, d)
+    def dispatch(xs, es, gs):
+        """One capacity group: xs (B,d), es/gs (B,k)."""
+        flat_e = es.reshape(-1)  # (B*k,)
+        Bk = flat_e.shape[0]
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        starts = jnp.searchsorted(sorted_e, jnp.arange(E))  # (E,)
+        pos_sorted = jnp.arange(Bk) - starts[sorted_e]
+        pos = jnp.zeros((Bk,), jnp.int32).at[order].set(
+            pos_sorted.astype(jnp.int32)
+        )
+        keep = pos < C
+        slot = jnp.where(keep, flat_e * C + pos, E * C)  # E*C = drop sentinel
+        token_of = jnp.repeat(jnp.arange(B), k)
+        buf = jnp.zeros((E * C, d), x.dtype).at[slot].set(
+            jnp.take(xs, token_of, axis=0), mode="drop"
+        )
+        tok_of_slot = jnp.full((E * C,), B, jnp.int32).at[slot].set(
+            token_of.astype(jnp.int32), mode="drop"
+        )
+        gate_of_slot = jnp.zeros((E * C,), jnp.float32).at[slot].set(
+            gs.reshape(-1), mode="drop"
+        )
+        return buf.reshape(E, C, d), tok_of_slot, gate_of_slot
 
-    # expert FFN (E parallel matmuls; E sharded over `model` axis)
+    buf, tok_of_slot, gate_of_slot = jax.vmap(dispatch)(xg, eg, gg)
+
+    # expert FFN (E parallel matmuls per group; E sharded over `model` axis)
     w = params["experts"]
-    h = silu(jnp.einsum("ecd,edf->ecf", buf, w["w1"])) * jnp.einsum(
-        "ecd,edf->ecf", buf, w["w3"]
+    h = silu(jnp.einsum("secd,edf->secf", buf, w["w1"])) * jnp.einsum(
+        "secd,edf->secf", buf, w["w3"]
     )
-    out_buf = jnp.einsum("ecf,efd->ecd", h, w["w2"]).reshape(E * C, d)
+    out_buf = jnp.einsum("secf,efd->secd", h, w["w2"]).reshape(S, E * C, d)
 
     # combine in SLOT space: scatter-add expert outputs to their tokens.
     # With out_buf sharded on E (expert parallelism) each shard scatters
-    # only its own experts' slots and GSPMD finishes with ONE (T, d)
+    # only its own experts' slots and GSPMD finishes with ONE (S, B, d)
     # all-reduce — a token-indexed gather here would instead all-gather
-    # the entire (E*C, d) buffer (measured 30x more collective traffic,
+    # the entire (S, E*C, d) buffer (measured 30x more collective traffic,
     # see EXPERIMENTS.md §Perf H3).
-    tok_of_slot = jnp.full((E * C,), T, jnp.int32).at[
-        jnp.where(keep, slot, E * C)
-    ].set(token_of.astype(jnp.int32), mode="drop")
-    gate_of_slot = jnp.zeros((E * C,), jnp.float32).at[
-        jnp.where(keep, slot, E * C)
-    ].set(gate_vals.reshape(-1), mode="drop")
-    combined = jnp.zeros((T, d), jnp.float32).at[tok_of_slot].add(
-        out_buf.astype(jnp.float32) * gate_of_slot[:, None], mode="drop"
-    )
-    out = combined.astype(x.dtype).reshape(B, S, d)
+    def combine(ob, tos, gos):
+        return jnp.zeros((B, d), jnp.float32).at[tos].add(
+            ob.astype(jnp.float32) * gos[:, None], mode="drop"
+        )
+
+    combined = jax.vmap(combine)(out_buf, tok_of_slot, gate_of_slot)  # (S,B,d)
+    out = combined.transpose(1, 0, 2).astype(x.dtype)
 
     if "shared" in params:
         out = out + mlp_apply(params["shared"], x)

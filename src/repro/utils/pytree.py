@@ -17,12 +17,19 @@ docs/engine.md#flat-buffer-round-state.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 Pytree = object
+
+# Debug-mode invariant checking: with REPRO_DEBUG_TAIL=1, every unravel
+# asserts the lane-padded tail of the flat buffer is still exactly zero
+# (the invariant eq. (11)'s norms and the Pallas kernel rely on). Off by
+# default — the check inserts a host callback per unravel.
+DEBUG_TAIL = os.environ.get("REPRO_DEBUG_TAIL", "0") not in ("", "0")
 
 
 def tree_add(a: Pytree, b: Pytree) -> Pytree:
@@ -161,6 +168,8 @@ class RavelSpec:
 
     def unravel(self, flat: jax.Array) -> Pytree:
         """(padded_size,) vector -> pytree (inverse of :meth:`ravel`)."""
+        if DEBUG_TAIL:
+            flat = self.check_zero_tail(flat)
         leaves = [
             jax.lax.slice_in_dim(flat, o, o + _size_of(s), axis=-1)
             .reshape(flat.shape[:-1] + s)
@@ -173,12 +182,41 @@ class RavelSpec:
         """(m, padded_size) buffer -> client-stacked pytree."""
         return self.unravel(flat)
 
+    def check_zero_tail(self, flat: jax.Array) -> jax.Array:
+        """Debug assertion: the lane-padded tail of `flat` is exactly zero.
+
+        Returns `flat` unchanged (so it can be spliced into traced code);
+        the check itself runs as a host callback and raises on violation.
+        Only called when REPRO_DEBUG_TAIL=1 — the default path never pays
+        for it.
+        """
+        if self.padded_size == self.size or flat.shape[-1] != self.padded_size:
+            return flat
+        tail = jax.lax.slice_in_dim(
+            flat, self.size, self.padded_size, axis=-1
+        )
+        jax.debug.callback(
+            _raise_on_nonzero_tail, jnp.max(jnp.abs(tail)), self.size,
+            self.padded_size,
+        )
+        return flat
+
 
 def _size_of(shape) -> int:
     n = 1
     for s in shape:
         n *= s
     return n
+
+
+def _raise_on_nonzero_tail(maxabs, size, padded_size):
+    if float(maxabs) != 0.0:
+        raise AssertionError(
+            f"RavelSpec zero-tail invariant violated: |tail|_max = "
+            f"{float(maxabs)!r} in pad region [{int(size)}, "
+            f"{int(padded_size)}) — an in-place flat-buffer write leaked "
+            f"into the lane padding (this silently skews eq. (11) norms)"
+        )
 
 
 _SPEC_CACHE: dict = {}
@@ -213,3 +251,97 @@ def ravel_spec(tree: Pytree) -> RavelSpec:
         )
         _SPEC_CACHE[key] = spec
     return spec
+
+
+# --------------------------------------------------------------------------
+# Active-set client store: a round touches only the packed tile of the
+# clients the participation mask selected, gathered from / scattered back
+# to the resident (m, padded_size) flat buffers at the round's boundaries.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ActiveSet:
+    """The round's packed participant tile, derived from a dense mask.
+
+    ``idx`` holds the (sorted) resident-store row ids of this round's
+    participants, padded to the static ``capacity`` with the sentinel
+    ``num_clients`` (one past the last row). Padding rows gather a
+    clamped duplicate of the last resident row (finite garbage — never
+    NaN), are zeroed out of every reduction via ``valid``, and are
+    dropped on scatter. Because ``idx`` is ascending and zero rows are
+    exact identities of a sum, packed reductions over the tile are
+    BITWISE equal to the dense masked reductions over all m rows.
+
+    ``capacity`` is static per run: a fixed-cardinality policy (uniform /
+    weighted / cyclic) packs to exactly |C| rows; variable-cardinality
+    sources (availability, wall-clock arrivals) pack to m rows — correct,
+    but no smaller than dense (see docs/engine.md#active-set-client-store).
+    """
+
+    idx: jax.Array  # (capacity,) int32 rows into the resident store
+    valid: jax.Array  # (capacity,) bool — False on padding rows
+    count: jax.Array  # () float32 — number of participants (== mask sum)
+    mask: jax.Array  # (m_local,) bool — the round's dense mask
+    capacity: int = dataclasses.field(metadata=dict(static=True))
+    num_clients: int = dataclasses.field(metadata=dict(static=True))
+
+    def gather(self, buf: jax.Array) -> jax.Array:
+        """Resident (m, ...) buffer -> packed (capacity, ...) tile."""
+        return gather_rows(buf, self.idx)
+
+    def scatter(self, buf: jax.Array, tile: jax.Array) -> jax.Array:
+        """Write the packed tile back into its resident rows (padding
+        rows carry the sentinel index and are dropped)."""
+        return scatter_rows(buf, self.idx, tile)
+
+    def gather_tree(self, tree: Pytree) -> Pytree:
+        """Gather every leaf's active rows (e.g. the per-client batch)."""
+        return jax.tree.map(self.gather, tree)
+
+    def zero_invalid(self, tile: jax.Array) -> jax.Array:
+        """Zero the padding rows of a (capacity, ...) tile so reductions
+        over the tile match the dense masked reductions bitwise."""
+        v = self.valid.reshape(self.valid.shape + (1,) * (tile.ndim - 1))
+        return jnp.where(v, tile, jnp.zeros_like(tile))
+
+
+jax.tree_util.register_dataclass(
+    ActiveSet,
+    data_fields=["idx", "valid", "count", "mask"],
+    meta_fields=["capacity", "num_clients"],
+)
+
+
+def make_active_set(mask: jax.Array, capacity: int) -> ActiveSet:
+    """Pack a dense (m,) participation mask into an :class:`ActiveSet`.
+
+    ``capacity`` must upper-bound the mask's population count (the engine
+    derives it from the policy's fixed cardinality, or uses m); overflow
+    would silently drop participants, so callers own that invariant.
+    """
+    m = mask.shape[0]
+    (idx,) = jnp.nonzero(mask, size=capacity, fill_value=m)
+    idx = idx.astype(jnp.int32)
+    return ActiveSet(
+        idx=idx,
+        valid=idx < m,
+        count=jnp.sum(mask.astype(jnp.float32)),
+        mask=mask,
+        capacity=capacity,
+        num_clients=m,
+    )
+
+
+def gather_rows(buf: jax.Array, idx: jax.Array) -> jax.Array:
+    """Row gather with clamped out-of-range indices: padding rows read a
+    duplicate of the last resident row (finite, deterministic) instead of
+    producing NaN, and are masked/dropped downstream."""
+    return jnp.take(buf, idx, axis=0, mode="clip")
+
+
+def scatter_rows(buf: jax.Array, idx: jax.Array, rows: jax.Array) -> jax.Array:
+    """Inverse of :func:`gather_rows`: write packed rows back into the
+    resident buffer; sentinel (out-of-range) indices are dropped. Under
+    buffer donation XLA updates the resident store in place."""
+    return buf.at[idx].set(rows, mode="drop")

@@ -14,14 +14,9 @@ B = 2
 
 @pytest.mark.parametrize("arch", [
     "tinyllama-1.1b", "qwen1.5-0.5b", "rwkv6-3b", "hymba-1.5b",
-    # capacity-dropping MoE is not causal across the flattened batch: in the
-    # full forward, batch-0 tokens 8..11 precede batch-1 tokens 0..7 in the
-    # (T*k,) dispatch order and compete for the same expert capacity slots,
-    # so teacher-forced prefill/decode parity does not hold for MoE archs.
-    pytest.param("deepseek-v3-671b",
-                 marks=pytest.mark.xfail(
-                     reason="dropping MoE: cross-batch capacity competition "
-                            "breaks teacher-forced parity", strict=False)),
+    # dropping MoE routes capacity per position group (the decode-step
+    # group), so the drop pattern is causal and parity holds (moe.py).
+    "deepseek-v3-671b",
 ])
 def test_decode_matches_forward(arch):
     """logits from [prefill(t<8) + decode steps 8..11] == full forward."""

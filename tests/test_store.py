@@ -1,0 +1,386 @@
+"""Active-set client store equivalence (engine `store="active"`).
+
+The active store swaps the dense (m, N) round working set for a packed
+(capacity, N) tile of the round's participants: gathered from the
+resident flat buffers at the round start, scattered back at the end.
+STATE must be BITWISE the dense store's on every single-device path —
+the tile rows are the same trajectories (row-position-independent math)
+and the aggregation scatters back to the dense layout before reducing,
+so eq. (11) sees bit-identical inputs through the same compiled reduce
+(api.flat_round_aggregate_active). The loss/gradient DIAGNOSTICS differ
+by construction: the server never contacts frozen clients, so `f_xbar`
+and `grad_sq_norm` become participant means (docs/engine.md). FedGiA
+declares `active_tile="population"` (its GD branch rewrites every
+client every round) and falls back to the dense round — for it the
+whole history is bitwise too.
+
+Also covers: ActiveSet packing/gather/scatter units, the engine's
+store validation, auto-chunk composition, and (subprocess) the zero-tail
+debug assertion (REPRO_DEBUG_TAIL=1) plus the sharded active round's
+ONE model-size all-reduce.
+"""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import fake_device_env
+from repro.config import FedConfig
+from repro.core import make_algorithm, make_policy, run_rounds
+from repro.core.clock import ComputeClock
+from repro.data import linreg_noniid
+from repro.models import LeastSquares
+from repro.utils import pytree as pt
+
+M, N, D = 8, 20, 400
+ROUNDS = 10
+
+ALGO_SETUPS = {
+    "fedgia": dict(sigma_t=0.2, h_policy="diag_ema", alpha=0.5),
+    "fedavg": dict(lr=0.01),
+    "fedprox": dict(lr=0.002, prox_mu=1e-4, inner_steps=3),
+    "fedpd": dict(lr=0.05, fedpd_eta=1.0, inner_steps=3),
+    "scaffold": dict(lr=0.01),
+}
+FIVE = sorted(ALGO_SETUPS)
+
+# metrics that must match bitwise between stores for EVERY algorithm;
+# f_xbar / grad_sq_norm are participant means under the active store and
+# only match for population-tile algorithms (fedgia)
+COMPARABLE = ("selected", "cr", "local_grad_evals", "staleness",
+              "staleness_max", "sim_time")
+
+
+@pytest.fixture(scope="module")
+def problem():
+    batch = {k: jnp.asarray(v) for k, v in linreg_noniid(0, D, N, M).items()}
+    return LeastSquares(N), batch
+
+
+def _make(problem, key, **overrides):
+    model, batch = problem
+    kwargs = dict(algorithm=key, num_clients=M, k0=3)
+    kwargs.update(ALGO_SETUPS[key])
+    kwargs.update(overrides)
+    fed = FedConfig(**kwargs)
+    algo = make_algorithm(fed, model.loss, model=model)
+    state = algo.init(model.init(jax.random.PRNGKey(0)),
+                      jax.random.PRNGKey(1), init_batch=batch)
+    return algo, state
+
+
+def _assert_store_equiv(res, ref, algo):
+    """Active (res) vs dense (ref): bitwise state, bitwise comparable
+    metrics; the full history bitwise for population-tile algorithms."""
+    assert res.rounds_run == ref.rounds_run
+    assert set(res.history) == set(ref.history)
+    full = getattr(algo, "active_tile", "participants") == "population"
+    for k in ref.history:
+        if full or k in COMPARABLE:
+            np.testing.assert_array_equal(res.history[k], ref.history[k],
+                                          err_msg=k)
+    for key in ref.state:
+        ok = jax.tree.map(lambda a, b: bool(jnp.array_equal(a, b)),
+                          res.state[key], ref.state[key])
+        assert all(jax.tree.leaves(ok)), f"state[{key!r}] diverged"
+
+
+def _run_pair(algo, state, batch, **kw):
+    ref = run_rounds(algo, state, batch, ROUNDS, store="dense", **kw)
+    res = run_rounds(algo, state, batch, ROUNDS, store="active", **kw)
+    return res, ref
+
+
+# ------------------------------------------------- ActiveSet pack/gather
+def test_make_active_set_packs_ascending_with_sentinel_padding():
+    mask = jnp.asarray([0, 1, 0, 1, 1, 0, 0, 1], bool)
+    aset = pt.make_active_set(mask, capacity=6)
+    np.testing.assert_array_equal(np.asarray(aset.idx),
+                                  [1, 3, 4, 7, 8, 8])  # sentinel = m
+    np.testing.assert_array_equal(np.asarray(aset.valid),
+                                  [1, 1, 1, 1, 0, 0])
+    assert float(aset.count) == 4.0
+    assert aset.capacity == 6 and aset.num_clients == 8
+
+
+def test_gather_scatter_roundtrip_leaves_frozen_rows():
+    mask = jnp.asarray([0, 1, 0, 1], bool)
+    aset = pt.make_active_set(mask, capacity=2)
+    buf = jnp.arange(12, dtype=jnp.float32).reshape(4, 3)
+    tile = aset.gather(buf)
+    np.testing.assert_array_equal(np.asarray(tile), np.asarray(buf)[[1, 3]])
+    out = aset.scatter(buf, tile * 10.0)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(buf[0]))
+    np.testing.assert_array_equal(np.asarray(out[2]), np.asarray(buf[2]))
+    np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(buf[1]) * 10)
+    # padding rows (sentinel index) are DROPPED at the scatter
+    aset1 = pt.make_active_set(jnp.asarray([0, 1, 0, 0], bool), capacity=3)
+    out = aset1.scatter(buf, jnp.full((3, 3), -1.0))
+    np.testing.assert_array_equal(np.asarray(out[1]), -np.ones(3))
+    for r in (0, 2, 3):
+        np.testing.assert_array_equal(np.asarray(out[r]), np.asarray(buf[r]))
+
+
+def test_zero_invalid_zeroes_padding_rows_only():
+    aset = pt.make_active_set(jnp.asarray([1, 0, 0, 1], bool), capacity=3)
+    tile = jnp.ones((3, 5))
+    z = np.asarray(aset.zero_invalid(tile))
+    np.testing.assert_array_equal(z[:2], np.ones((2, 5)))
+    np.testing.assert_array_equal(z[2], np.zeros(5))
+
+
+def test_policy_active_capacity_and_indices():
+    pol = make_policy("uniform", M, 0.5, seed=0)
+    assert pol.active_capacity == pol.n_selected == M // 2
+    aset, _ = pol.indices(pol.init(), 0)
+    assert aset.capacity == M // 2
+    assert bool(jnp.all(aset.valid))  # uniform fills the tile exactly
+    # variable-cardinality policies bound the tile by m
+    strag = make_policy("straggler", M, seed=0, drop_prob=0.3, horizon=8)
+    assert strag.active_capacity == M
+
+
+# ------------------------------------------------ active == dense, masked
+@pytest.mark.parametrize("algo_key", FIVE)
+def test_active_matches_dense_masked_scan(problem, algo_key):
+    algo, state = _make(problem, algo_key)
+    _, batch = problem
+    res, ref = _run_pair(algo, state, batch,
+                         participation=make_policy("uniform", M, 0.5, seed=3))
+    _assert_store_equiv(res, ref, algo)
+
+
+@pytest.mark.parametrize("algo_key", FIVE)
+def test_active_matches_dense_masked_legacy(problem, algo_key):
+    algo, state = _make(problem, algo_key)
+    _, batch = problem
+    res, ref = _run_pair(algo, state, batch, scan=False,
+                         participation=make_policy("uniform", M, 0.5, seed=3))
+    _assert_store_equiv(res, ref, algo)
+
+
+@pytest.mark.parametrize("kind", ["cyclic", "weighted", "straggler"])
+def test_active_matches_dense_other_policies(problem, kind):
+    """Fixed-cardinality tiles (cyclic/weighted) and the variable-
+    cardinality m-bound tile (straggler) all stay bitwise."""
+    algo, state = _make(problem, "scaffold")
+    _, batch = problem
+    res, ref = _run_pair(
+        algo, state, batch,
+        participation=make_policy(kind, M, 0.5, seed=1, drop_prob=0.3,
+                                  horizon=ROUNDS))
+    _assert_store_equiv(res, ref, algo)
+
+
+# --------------------------------------------------- async / clocked paths
+@pytest.mark.parametrize("algo_key", ["fedavg", "scaffold", "fedgia"])
+def test_active_matches_dense_async(problem, algo_key):
+    """Stale-x̄ rounds: ages stay dense (m,) scalars, the anchor tile is
+    gathered with force-refresh, and the resident anchor buffer takes one
+    dense row-select per round — bitwise the dense async engine,
+    including the per-round `staleness` history."""
+    algo, state = _make(problem, algo_key)
+    _, batch = problem
+    pol = make_policy("periodic", M)
+    res, ref = _run_pair(algo, state, batch, participation=pol,
+                         async_rounds=True, max_staleness=2)
+    _assert_store_equiv(res, ref, algo)
+
+
+def test_active_matches_dense_async_zero_staleness(problem):
+    algo, state = _make(problem, "fedpd")
+    _, batch = problem
+    res, ref = _run_pair(algo, state, batch,
+                         participation=make_policy("periodic", M),
+                         async_rounds=True, max_staleness=0)
+    _assert_store_equiv(res, ref, algo)
+
+
+@pytest.mark.parametrize("algo_key", ["fedavg", "scaffold"])
+def test_active_matches_dense_clocked_weighted(problem, algo_key):
+    """Wall-clock arrivals (tile capacity = m) with staleness-weighted
+    aggregation: the dense weights enter the aggregate as the same
+    masked (m,) vector, so the weighted eq. (11) stays bitwise."""
+    algo, state = _make(problem, algo_key)
+    _, batch = problem
+    clk = ComputeClock(M, 1.0 + (np.arange(M) % 3))
+    res, ref = _run_pair(algo, state, batch, clock=clk, max_staleness=3,
+                         stale_weighting="poly", stale_decay=0.5)
+    _assert_store_equiv(res, ref, algo)
+
+
+# --------------------------------------------------- engine knob composure
+def test_active_chunk_auto_matches_fixed(problem):
+    """`--chunk auto` composes with the active store: the tile
+    gather/scatter runs inside every round whatever the chunk length, so
+    the autotuned run is bitwise the fixed-chunk active run."""
+    algo, state = _make(problem, "fedavg")
+    _, batch = problem
+    pol = lambda: make_policy("uniform", M, 0.5, seed=3)
+    ref = run_rounds(algo, state, batch, 60, chunk_size=7,
+                     participation=pol(), store="active")
+    res = run_rounds(algo, state, batch, 60, chunk_size="auto",
+                     participation=pol(), store="active")
+    assert res.rounds_run == ref.rounds_run == 60
+    for k in ref.history:
+        np.testing.assert_array_equal(res.history[k], ref.history[k],
+                                      err_msg=k)
+
+
+def test_active_early_stop_scan_matches_legacy(problem):
+    """Under the active store the tol rule gates on the PARTICIPANT
+    gradient norm (the population one is unobservable) — scan and legacy
+    still stop on the same round with the same state."""
+    algo, state = _make(problem, "fedgia", k0=5)
+    _, batch = problem
+    kw = dict(tol=1e-9, participation=make_policy("uniform", M, 0.5, seed=3),
+              store="active")
+    ref = run_rounds(algo, state, batch, 300, chunk_size=13, scan=False, **kw)
+    res = run_rounds(algo, state, batch, 300, chunk_size=13, **kw)
+    assert ref.stopped_early and res.stopped_early
+    assert res.rounds_run == ref.rounds_run
+    for key in ref.state:
+        ok = jax.tree.map(lambda a, b: bool(jnp.array_equal(a, b)),
+                          res.state[key], ref.state[key])
+        assert all(jax.tree.leaves(ok)), key
+
+
+def test_store_validation(problem):
+    algo, state = _make(problem, "fedavg")
+    _, batch = problem
+    pol = make_policy("uniform", M, 0.5, seed=0)
+    with pytest.raises(ValueError, match="unknown store"):
+        run_rounds(algo, state, batch, 2, store="sparse", participation=pol)
+    with pytest.raises(ValueError, match="flat"):
+        run_rounds(algo, state, batch, 2, store="active", participation=pol,
+                   flat=False)
+    with pytest.raises(ValueError, match="participant"):
+        run_rounds(algo, state, batch, 2, store="active")
+
+
+# --------------------------------------------- zero-tail debug assertion
+_TAIL_SCRIPT = textwrap.dedent(
+    """
+    import jax, jax.numpy as jnp
+    from repro.utils import pytree as pt
+    assert pt.DEBUG_TAIL, "REPRO_DEBUG_TAIL not picked up"
+    tree = {"w": jnp.ones((5,)), "b": jnp.zeros(())}
+    spec = pt.ravel_spec(tree)
+    assert spec.padded_size > spec.size  # lane padding present
+    flat = spec.ravel(tree)
+    spec.unravel(flat)  # clean tail passes
+    jax.block_until_ready(jax.tree.leaves(spec.unravel(flat)))
+    print("CLEAN_OK")
+    bad = flat.at[spec.padded_size - 1].set(3.0)  # corrupt the pad lane
+    try:
+        jax.block_until_ready(jax.tree.leaves(spec.unravel(bad)))
+        print("CORRUPTION_MISSED")
+    except Exception:
+        print("CORRUPTION_CAUGHT")
+    """
+)
+
+
+def test_debug_tail_assertion_catches_corruption():
+    """REPRO_DEBUG_TAIL=1 turns every unravel into a zero-tail audit: a
+    clean flat buffer passes, a corrupted pad lane raises. Subprocess —
+    the flag is read at import and must not leak into this session."""
+    import os
+
+    env = dict(os.environ, REPRO_DEBUG_TAIL="1")
+    env.setdefault("PYTHONPATH", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", _TAIL_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=300,
+    )
+    assert "CLEAN_OK" in out.stdout, out.stdout + out.stderr
+    assert "CORRUPTION_CAUGHT" in out.stdout, out.stdout + out.stderr
+
+
+def test_round_flat_active_keeps_zero_tail(problem):
+    """The scatter path preserves the RavelSpec zero-tail invariant: after
+    active rounds every resident flat buffer still has an exactly-zero
+    pad tail (gathered tiles inherit it, local steps keep padded lanes at
+    +0.0, and the scatter writes only participant rows)."""
+    from repro.core.engine import flatten_state
+
+    algo, state = _make(problem, "scaffold")
+    _, batch = problem
+    res = run_rounds(algo, state, batch, ROUNDS, store="active",
+                     participation=make_policy("uniform", M, 0.5, seed=3))
+    spec = pt.ravel_spec(state["x"])
+    flat = flatten_state(algo, res.state, spec)
+    for k in ("x", "c"):
+        assert float(jnp.abs(flat[k][spec.size:]).max()) == 0.0, k
+    assert float(jnp.abs(flat["ci"][:, spec.size:]).max()) == 0.0
+
+
+# ------------------------------------- sharded: ONE model-size all-reduce
+_SHARDED_ACTIVE_SCRIPT = textwrap.dedent(
+    """
+    import re
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.config import FedConfig
+    from repro.core import api, engine, make_algorithm, make_policy, run_rounds
+    from repro.data import linreg_noniid
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import LeastSquares
+    from repro.utils import pytree as pt
+
+    m, n, d = 8, 24, 320
+    batch = {k: jnp.asarray(v) for k, v in linreg_noniid(0, d, n, m).items()}
+    model = LeastSquares(n)
+    mesh = make_host_mesh(data=8)
+
+    def model_size_all_reduces(algo_name):
+        fed = FedConfig(algorithm=algo_name, num_clients=m, k0=3, alpha=0.5,
+                        sigma_t=0.3, h_policy="diag_ema", lr=0.01)
+        algo = make_algorithm(fed, model.loss, model=model)
+        s0 = algo.init(model.init(jax.random.PRNGKey(0)),
+                       jax.random.PRNGKey(1), init_batch=batch)
+        spec = pt.ravel_spec(s0["x"])
+        s0f = engine.flatten_state(algo, s0, spec)
+        cap = make_policy("uniform", m, 0.5).active_capacity
+        rf = engine.make_round_fn(algo, mesh, masked=True, flat_spec=spec,
+                                  active_capacity=cap)
+        st, b = engine.shard_inputs(algo, s0f, batch, mesh)
+        txt = jax.jit(rf).lower(st, b, jnp.ones((m,), bool)
+                                ).compile().as_text()
+        shapes = re.findall(r"= (\\S+) all-reduce\\(", txt)
+        return sum(1 for s in shapes if re.search(r"\\[\\d", s))
+
+    for name in ("fedgia", "fedavg", "fedprox", "fedpd", "scaffold"):
+        cnt = model_size_all_reduces(name)
+        assert cnt == 1, (name, cnt)
+
+    # and the sharded active RUN matches the single-device active run
+    fed = FedConfig(algorithm="scaffold", num_clients=m, k0=3, lr=0.01)
+    algo = make_algorithm(fed, model.loss, model=model)
+    s0 = algo.init(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(1),
+                   init_batch=batch)
+    kw = dict(participation=make_policy("uniform", m, 0.5, seed=3),
+              store="active")
+    ref = run_rounds(algo, s0, batch, 10, **kw)
+    res = run_rounds(algo, s0, batch, 10, mesh=mesh, **kw)
+    for k in ref.history:
+        np.testing.assert_allclose(res.history[k], ref.history[k],
+                                   rtol=1e-4, atol=1e-6, err_msg=k)
+    print("ACTIVE_SHARDED_OK one model-size all-reduce for all five")
+    """
+)
+
+
+def test_active_sharded_one_all_reduce_and_parity():
+    """The sharded active round packs per shard (capacity clamped to
+    m_local) and still lowers to exactly ONE model-size all-reduce for
+    all five algorithms; the sharded active run matches the single-device
+    active run to fp tolerance."""
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARDED_ACTIVE_SCRIPT],
+        env=fake_device_env(8), capture_output=True, text=True, timeout=900,
+    )
+    assert "ACTIVE_SHARDED_OK" in out.stdout, out.stdout + out.stderr

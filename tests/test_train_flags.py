@@ -52,6 +52,11 @@ def _args(*extra):
     # the kernel lives on the flat round path
     (["--kernel", "on", "--no-flat"], "requires the flat round path"),
     (["--kernel", "interpret", "--no-flat"], "requires the flat round path"),
+    # the active-set store packs the FLAT buffers of the round's
+    # participants — it needs the flat path and a participant source
+    (["--store", "active", "--no-flat"],
+     "--store active packs the flat"),
+    (["--store", "active"], "--store active needs a per-round participant"),
 ])
 def test_rejected_flag_combinations(argv, match):
     with pytest.raises(SystemExit, match=match):
@@ -96,6 +101,21 @@ def test_chunk_parsed_int_and_auto():
     # auto composes with the legacy loop only through --no-scan rejection,
     # not with an int chunk
     assert validate_flags(_args("--chunk", "16", "--no-scan"))["chunk"] == 16
+
+
+def test_store_resolved():
+    assert validate_flags(_args())["store"] == "dense"
+    parsed = validate_flags(_args("--participation", "uniform",
+                                  "--store", "active"))
+    assert parsed["store"] == "active" and parsed["flat"]
+    # a clock is a participant source too (capacity bound m)
+    assert validate_flags(_args("--clock", "constant", "--store",
+                                "active"))["store"] == "active"
+    # auto chunking composes with the active store (the tile
+    # gather/scatter runs inside every round, chunk-length independent)
+    parsed = validate_flags(_args("--participation", "uniform",
+                                  "--store", "active", "--chunk", "auto"))
+    assert parsed["store"] == "active" and parsed["chunk"] == "auto"
 
 
 def test_flat_and_kernel_knobs_resolved():
