@@ -28,6 +28,17 @@ dual mean (Σπ_i/m ≈ 0), and any reweighting re-introduces a dual bias
 of order decay·std(π) — which is why "uniform" is the default
 (docs/async.md discusses this).
 
+The COMPRESSION section asks the follow-up question the byte-accurate
+clock (PR-7, `bandwidth_bps=`) makes answerable: with the wire priced in
+bytes — uplink through the codec, fp32 downlink — does compressing
+eq. (11)'s uplink buy TIME-TO-TARGET, not just fewer bits? A homogeneous
+fleet with a small compute share (COMPRESS_COMPUTE_S) and a constrained
+link (BANDWIDTH_BPS, wire-dominated rounds) runs FedGiA under each codec
+(`none` / `bf16` / `int8`+EF / `topk`+EF); rows carry a `codec` field and
+the distinct algo name `fedgia_d_bw` so the gate keys stay unique.
+main() asserts at least one lossy codec beats `none` on sim_time — the
+codec's extra rounds (if any) must cost less than the bytes it saves.
+
 `main()` writes BENCH_wallclock.json (path: WALLCLOCK_BENCH_JSON) and
 returns the rows for benchmarks/run.py. Env knobs for CI budgets:
 WALLCLOCK_MAX_ROUNDS (default 400).
@@ -57,6 +68,27 @@ ALGOS = {
     "scaffold": dict(algorithm="scaffold", lr=0.01),
     "fedavg": dict(algorithm="fedavg", lr=0.01),
 }
+
+# Compression section: a wire-dominated regime. At n=100 the raw fp32
+# round moves 408 B up + 408 B down per client — ~0.2 s at BANDWIDTH_BPS
+# against 0.05 s of compute, so codec savings translate almost 1:1 into
+# round duration. The target is a LOSS level, not the paper's gradient
+# rule: lossy codecs orbit a quantization noise floor that keeps
+# grad_sq_norm above eq. (35)'s tol forever, while f(x̄) still reaches
+# the converged objective (~0.00492 on this problem) to within a few
+# percent. 0.0052 sits above every convergent codec's floor (int8+EF
+# floors at ~0.00515) and none of the divergent ones (top-k
+# sparsification of FedGiA's dense consensus z-uploads diverges here
+# even WITH error feedback — the row records that honestly).
+COMPRESS_COMPUTE_S = 0.05
+BANDWIDTH_BPS = 4000.0  # bytes/s per client link
+COMPRESS_TARGET_F = 0.0052
+CODECS = [
+    ("none", dict(compression="none")),
+    ("bf16", dict(compression="bf16")),
+    ("int8", dict(compression="int8", error_feedback=True)),
+    ("topk", dict(compression="topk", topk_frac=0.25, error_feedback=True)),
+]
 
 
 def straggler_speeds(m: int, spread: float) -> np.ndarray:
@@ -94,11 +126,46 @@ def run():
     return rows
 
 
+def run_compression():
+    """Time-to-target per codec under the byte-accurate clock (the
+    uplink priced by the codec's exact wire size, fp32 downlink);
+    target = f(x̄) <= COMPRESS_TARGET_F, see the constant's comment."""
+    rows = []
+    model, batch, _ = make_problem("linreg", 0)
+    fed = FedConfig(num_clients=M_CLIENTS, k0=K0, **ALGOS["fedgia_d"])
+    algo = make_algorithm(fed, model.loss, model=model)
+    state = algo.init(model.init(jax.random.PRNGKey(0)),
+                      jax.random.PRNGKey(1), init_batch=batch)
+    for codec, kw in CODECS:
+        clk = ComputeClock(M_CLIENTS, compute_s=COMPRESS_COMPUTE_S,
+                           bandwidth_bps=BANDWIDTH_BPS)
+        res = run_rounds(algo, state, batch, MAX_ROUNDS,
+                         tol=COMPRESS_TARGET_F, tol_metric="f_xbar",
+                         clock=clk, max_staleness=MAX_STALENESS,
+                         stale_weighting="uniform", **kw)
+        rows.append({
+            "algo": "fedgia_d_bw",
+            "spread": 1.0,
+            "weighting": "uniform",
+            "codec": codec,
+            "cr": 2 * res.rounds_run,
+            "sim_time_s": float(res.history["sim_time"][-1]),
+            "bytes_up_total": float(np.sum(res.history["bytes_up"])),
+            "bytes_down_total": float(np.sum(res.history["bytes_down"])),
+            "staleness_seen": int(res.history["staleness_max"].max()),
+            "obj": float(res.history["f_xbar"][-1]),
+            "converged": res.stopped_early,
+        })
+    return rows
+
+
 def main():
-    rows = run()
-    print("algo,spread,weighting,CR,sim_time_s,staleness_seen,obj,converged")
+    rows = run() + run_compression()
+    print("algo,spread,weighting,codec,CR,sim_time_s,staleness_seen,obj,"
+          "converged")
     for r in rows:
-        print(f"{r['algo']},{r['spread']:g},{r['weighting']},{r['cr']},"
+        print(f"{r['algo']},{r['spread']:g},{r['weighting']},"
+              f"{r.get('codec', 'none')},{r['cr']},"
               f"{r['sim_time_s']:.2f},{r['staleness_seen']},"
               f"{r['obj']:.6f},{r['converged']}")
     # invariants the sweep must satisfy regardless of hardware: bounded
@@ -107,17 +174,27 @@ def main():
     # weights only differ where staleness differs across clients
     for r in rows:
         assert r["staleness_seen"] <= MAX_STALENESS, r
-    by_key = {(r["algo"], r["spread"], r["weighting"]): r for r in rows}
+    by_key = {(r["algo"], r["spread"], r["weighting"],
+               r.get("codec", "none")): r for r in rows}
     for algo_key in ALGOS:
-        u = by_key[(algo_key, 1.0, "uniform")]
+        u = by_key[(algo_key, 1.0, "uniform", "none")]
         assert u["staleness_seen"] <= 1, u  # homogeneous: pipeline delay only
     if MAX_ROUNDS >= 400:
         # deterministic sweep: FedGiA under uniform weighting reaches the
         # paper's stopping rule at EVERY straggler severity (the CR edge
         # over the baselines survives the event-driven regime)
         for spread in SPREADS:
-            assert by_key[("fedgia_d", spread, "uniform")]["converged"], (
-                by_key[("fedgia_d", spread, "uniform")])
+            assert by_key[("fedgia_d", spread, "uniform", "none")][
+                "converged"], by_key[("fedgia_d", spread, "uniform", "none")]
+        # byte-accurate clock: at least one lossy codec converts its wire
+        # savings into strictly less simulated time-to-target than the
+        # uncompressed round (fewer bits AND less time, the PR-7 claim)
+        raw = by_key[("fedgia_d_bw", 1.0, "uniform", "none")]
+        assert raw["converged"], raw
+        lossy = [by_key[("fedgia_d_bw", 1.0, "uniform", c)]
+                 for c, _ in CODECS if c != "none"]
+        assert any(r["converged"] and r["sim_time_s"] < raw["sim_time_s"]
+                   for r in lossy), (raw, lossy)
     out = {
         "max_rounds": MAX_ROUNDS,
         "clients": M_CLIENTS,

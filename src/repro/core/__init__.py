@@ -12,6 +12,12 @@ from repro.core.clock import (
     TraceClock,
     make_clock,
 )
+from repro.core.compress import (
+    Compressor,
+    downlink_bytes,
+    make_compressor,
+    uplink_bytes,
+)
 from repro.core.engine import RoundResult, run_rounds, scan_steps
 from repro.core.selection import (
     AvailabilityParticipation,

@@ -18,6 +18,7 @@ from typing import Any, Callable, Dict, Optional, Protocol, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import compress
 from repro.utils import pytree as pt
 
 LossFn = Callable[[Any, Any], Tuple[jax.Array, Dict[str, jax.Array]]]
@@ -461,6 +462,97 @@ def flat_round_aggregate_active(contrib_tile, grads_tile, losses_tile,
     if extra_mean_tile is not None:
         out = out + (red[0][n_buf:] / m_global,)
     return out
+
+
+def _compress_row_ids(m_local: int) -> jax.Array:
+    """GLOBAL client row ids for this shard's (m_local,) block — the
+    stochastic-rounding key of client i must be the same whether the
+    round runs unsharded or inside `shard_map` (sharded rounds would
+    otherwise draw identical noise for different clients)."""
+    ids = jnp.arange(m_local, dtype=jnp.uint32)
+    if _CLIENT_AXIS is not None:
+        name, _ = _CLIENT_AXIS
+        ids = ids + jax.lax.axis_index(name).astype(jnp.uint32) * m_local
+    return ids
+
+
+def compress_upload(compressor, contrib: jax.Array,
+                    ef: Optional[jax.Array], spec, *,
+                    key: Optional[jax.Array] = None,
+                    mask: Optional[jax.Array] = None,
+                    row_ids: Optional[jax.Array] = None):
+    """The round's uplink through a codec (core/compress.py): returns
+    ``(decoded, ef')`` where ``decoded`` is the server-visible fp32
+    decode of each client's upload and ``ef'`` the advanced per-client
+    error-feedback residual (None when ``ef`` is None).
+
+    Semantics per client i: the upload is u_i = contrib_i + e_i (the
+    residual folds the PREVIOUS rounds' compression error back in), the
+    server sees C(u_i), and the new residual is e_i' = u_i - C(u_i) — so
+    decoded uploads + final residual telescope to the raw uploads
+    exactly (tests/test_compress.py). With ``mask``, masked-out clients
+    did not upload this round: their residual is frozen (their decoded
+    row is computed but never enters the masked aggregation).
+
+    This is DECOMPRESS-BEFORE-REDUCE: encode+decode are shard-local
+    elementwise/per-row ops (no collectives), the fp32 ``decoded`` is
+    what flows into eq. (11)'s psum, so the round still lowers to
+    exactly ONE model-size all-reduce under client sharding. The decode
+    of the lane-padded tail is forced back to exact zero (the wire
+    carries only the ``spec.size`` logical lanes), preserving the
+    RavelSpec zero-tail invariant under affine codecs.
+
+    ``key`` (stochastic codecs): the round-replicated base key
+    (`compress.round_key`); per-client keys are derived from GLOBAL row
+    ids (``row_ids`` overrides, e.g. the active store's ``active.idx``),
+    so sharded and unsharded rounds quantize with identical noise.
+    """
+    u = contrib if ef is None else contrib + ef
+    keys = None
+    if compressor.stochastic:
+        assert key is not None, (
+            f"{compressor.name} uses stochastic rounding and needs the "
+            "round key (compress.round_key)")
+        ids = row_ids if row_ids is not None else _compress_row_ids(
+            u.shape[0])
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+            ids.astype(jnp.uint32))
+    dec = compressor.encode_decode(u, keys=keys, n=spec.size)
+    if spec.padded_size != spec.size:
+        lane = jnp.arange(u.shape[-1]) < spec.size
+        dec = jnp.where(lane, dec, jnp.zeros_like(dec))
+    if ef is None:
+        return dec, None
+    ef_new = u - dec
+    if mask is not None:
+        ef_new = jnp.where(_mask_bcast(mask, ef_new), ef_new, ef)
+    return dec, ef_new
+
+
+def compress_upload_active(compressor, contrib_tile: jax.Array,
+                           ef: Optional[jax.Array], active, spec, *,
+                           key: Optional[jax.Array] = None):
+    """Active-store twin of :func:`compress_upload`: the codec runs on
+    the packed (capacity, N) participant tile only — exactly the
+    clients that upload this round. The residual rows of the
+    participants are GATHERED from the dense resident ``ef`` buffer,
+    advanced on the tile, and SCATTERED back (padding rows carry the
+    sentinel index and are dropped, so frozen clients' residuals are
+    untouched — the dense path's mask freeze, row for row). Per-client
+    stochastic keys come from the tile's resident row ids, so tile and
+    dense rounds quantize each client identically. Returns
+    ``(decoded_tile, ef')`` with ``ef'`` the full dense residual."""
+    ef_t = None if ef is None else active.gather(ef)
+    ids = active.idx.astype(jnp.uint32)
+    if _CLIENT_AXIS is not None:
+        name, _ = _CLIENT_AXIS
+        m_local = active.num_clients
+        ids = ids + jax.lax.axis_index(name).astype(jnp.uint32) * m_local
+    dec_t, ef_new_t = compress_upload(
+        compressor, contrib_tile, ef_t, spec, key=key, row_ids=ids)
+    if ef is None:
+        return dec_t, None
+    return dec_t, active.scatter(ef, ef_new_t)
 
 
 def per_client_value_and_grad(loss_fn: LossFn):

@@ -13,7 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import api
+from repro.core import api, compress
 from repro.core.api import broadcast_clients, per_client_value_and_grad
 from repro.utils import pytree as pt
 
@@ -73,3 +73,34 @@ def round_metrics_flat(gsq, f_mean, n_sel, round_idx):
         "selected": n_sel,
         "cr": 2.0 * (round_idx + 1).astype(jnp.float32),
     }
+
+
+# ------------------------------------------------------------- compression
+def compress_contrib(compressor, state, contrib, spec, mask=None):
+    """The baselines' uplink hook (core/compress.py): the (m, N) round
+    contribution through the codec, just before `api.flat_round_aggregate`
+    — returns ``(decoded, ef')``, ``(contrib, None)`` when uncompressed.
+    Error-feedback residuals come from/advance ``state["ef"]`` (created
+    by the engine); the stochastic-rounding key folds the round counter
+    into the algorithm's rng WITHOUT advancing its stream, so selection
+    stays bitwise whatever the codec. With ``mask``, frozen clients keep
+    their residual (they did not upload this round)."""
+    if compressor is None:
+        return contrib, None
+    ef = state.get("ef") if compressor.error_feedback else None
+    key = compress.round_key(state["rng"], state["round"])
+    return api.compress_upload(compressor, contrib, ef, spec,
+                               key=key, mask=mask)
+
+
+def compress_contrib_active(compressor, state, contrib_tile, spec, active):
+    """Active-store twin of `compress_contrib`: the codec runs on the
+    packed (capacity, N) participant tile (`api.compress_upload_active`);
+    the returned ``ef'`` is the full dense residual with non-participant
+    rows untouched."""
+    if compressor is None:
+        return contrib_tile, None
+    ef = state.get("ef") if compressor.error_feedback else None
+    key = compress.round_key(state["rng"], state["round"])
+    return api.compress_upload_active(compressor, contrib_tile, ef,
+                                      active, spec, key=key)

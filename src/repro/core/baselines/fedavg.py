@@ -14,6 +14,8 @@ from repro.config import FedConfig
 from repro.core import api
 from repro.core.api import LossFn, broadcast_clients
 from repro.core.baselines.common import (
+    compress_contrib,
+    compress_contrib_active,
     flat_value_and_grad,
     lr_schedule,
     participation_vec,
@@ -25,8 +27,10 @@ from repro.utils import pytree as pt
 
 class FedAvg:
     name = "fedavg"
-    client_state_keys = ()
-    flat_client_keys = ()
+    # "ef" = compression error-feedback residual (core/compress.py);
+    # present only when the engine enables it — absent keys cost nothing
+    client_state_keys = ("ef",)
+    flat_client_keys = ("ef",)
     flat_global_keys = ("x",)
     active_tile = "participants"  # frozen clients are never read or written
 
@@ -95,13 +99,16 @@ class FedAvg:
         return new_state, metrics
 
     # ------------------------------------------------------------ flat round
-    def round_flat(self, state, batch, spec, mask=None, stale=None):
+    def round_flat(self, state, batch, spec, mask=None, stale=None,
+                   compressor=None):
         """`round` on the flat (m, N) trajectory buffer (engine flat=True):
         the k0 local steps update one contiguous array, the gradient
         evaluation is the only pytree boundary
         (`common.flat_value_and_grad`), and the aggregation + diagnostics
         ride ONE fused reduction (`api.flat_round_aggregate`) — eq. (11)
-        as the round's single model-size all-reduce under sharding."""
+        as the round's single model-size all-reduce under sharding.
+        `compressor` routes the uploaded trajectory through the codec
+        (decompress-before-reduce, `common.compress_contrib`)."""
         fed = self.fed
         m = api.local_client_count(fed.num_clients)
         if stale is None:
@@ -125,8 +132,10 @@ class FedAvg:
         (xc_new, (losses0, grads0)), _ = jax.lax.scan(
             local_step, (xc, first0), jnp.arange(fed.k0)
         )
+        xc_up, ef_new = compress_contrib(compressor, state, xc_new, spec,
+                                         mask=mask)
         x_new, gsq, f_mean, n_sel = api.flat_round_aggregate(
-            xc_new, grads0, losses0, participation_vec(losses0, mask), spec,
+            xc_up, grads0, losses0, participation_vec(losses0, mask), spec,
             mask=mask, weights=api.stale_weights(stale),
         )
 
@@ -134,6 +143,8 @@ class FedAvg:
         new_state.update(
             x=x_new, round=state["round"] + 1, step=state["step"] + fed.k0
         )
+        if ef_new is not None:
+            new_state["ef"] = ef_new
         metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
         metrics["local_grad_evals"] = jnp.float32(fed.k0)
         if stale is not None:
@@ -141,7 +152,8 @@ class FedAvg:
         return new_state, metrics
 
     # ----------------------------------------------------- active-set round
-    def round_flat_active(self, state, batch, spec, active, stale=None):
+    def round_flat_active(self, state, batch, spec, active, stale=None,
+                          compressor=None):
         """`round_flat` on the packed participant tile (store="active"):
         the k0 local trajectories exist only for the (capacity,) gathered
         clients, so the round's working set is (capacity, N) instead of
@@ -174,8 +186,10 @@ class FedAvg:
             local_step, (xc, first0), jnp.arange(fed.k0)
         )
         w = api.stale_weights(stale)
+        xc_up, ef_new = compress_contrib_active(compressor, state, xc_new,
+                                                spec, active)
         x_new, gsq, f_mean, n_sel = api.flat_round_aggregate_active(
-            xc_new, grads0, losses0, active, spec,
+            xc_up, grads0, losses0, active, spec,
             weights=w,
         )
 
@@ -183,6 +197,8 @@ class FedAvg:
         new_state.update(
             x=x_new, round=state["round"] + 1, step=state["step"] + fed.k0
         )
+        if ef_new is not None:
+            new_state["ef"] = ef_new
         metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
         metrics["local_grad_evals"] = jnp.float32(fed.k0)
         if stale is not None:

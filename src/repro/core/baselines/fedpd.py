@@ -17,6 +17,8 @@ from repro.config import FedConfig
 from repro.core import api
 from repro.core.api import LossFn, broadcast_clients
 from repro.core.baselines.common import (
+    compress_contrib,
+    compress_contrib_active,
     flat_value_and_grad,
     lr_schedule,
     participation_vec,
@@ -28,8 +30,10 @@ from repro.utils import pytree as pt
 
 class FedPD:
     name = "fedpd"
-    client_state_keys = ("lam",)
-    flat_client_keys = ("lam",)
+    # "ef" = compression error-feedback residual (core/compress.py);
+    # present only when the engine enables it — absent keys cost nothing
+    client_state_keys = ("lam", "ef")
+    flat_client_keys = ("lam", "ef")
     flat_global_keys = ("x",)
     active_tile = "participants"  # frozen clients keep their duals untouched
 
@@ -125,11 +129,14 @@ class FedPD:
         return new_state, metrics
 
     # ------------------------------------------------------------ flat round
-    def round_flat(self, state, batch, spec, mask=None, stale=None):
+    def round_flat(self, state, batch, spec, mask=None, stale=None,
+                   compressor=None):
         """`round` on the flat (m, N) buffers: per-client primal-dual
         anchors and duals are contiguous arrays, the gradient evaluation
         the only pytree boundary, and eq. (11) + diagnostics one fused
-        reduction (see FedAvg.round_flat)."""
+        reduction (see FedAvg.round_flat, incl. the compressor hook —
+        the uploaded anchor x̄_i is what goes through the codec, the
+        duals stay client-resident)."""
         fed = self.fed
         m = api.local_client_count(fed.num_clients)
         eta = fed.fedpd_eta
@@ -167,8 +174,10 @@ class FedPD:
         )
         if mask is not None:
             lam_new = api.masked_update(mask, lam_new, state["lam"])
+        anchors_up, ef_new = compress_contrib(compressor, state, anchors_new,
+                                              spec, mask=mask)
         x_new, gsq, f_mean, n_sel = api.flat_round_aggregate(
-            anchors_new, grads0, losses0, participation_vec(losses0, mask),
+            anchors_up, grads0, losses0, participation_vec(losses0, mask),
             spec, mask=mask, weights=api.stale_weights(stale),
         )
 
@@ -179,6 +188,8 @@ class FedPD:
             round=state["round"] + 1,
             step=state["step"] + fed.k0,
         )
+        if ef_new is not None:
+            new_state["ef"] = ef_new
         metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
         metrics["local_grad_evals"] = jnp.float32(fed.k0 * fed.inner_steps)
         if stale is not None:
@@ -186,7 +197,8 @@ class FedPD:
         return new_state, metrics
 
     # ----------------------------------------------------- active-set round
-    def round_flat_active(self, state, batch, spec, active, stale=None):
+    def round_flat_active(self, state, batch, spec, active, stale=None,
+                          compressor=None):
         """`round_flat` on the packed participant tile (store="active"):
         the duals of the round's participants are GATHERED from the resident
         (m, N) `lam` buffer, advanced on the (capacity, N) tile, and
@@ -234,8 +246,11 @@ class FedPD:
         )
         lam_new = active.scatter(state["lam"], lam_new_t)
         w = api.stale_weights(stale)
+        anchors_up, ef_new = compress_contrib_active(compressor, state,
+                                                     anchors_new, spec,
+                                                     active)
         x_new, gsq, f_mean, n_sel = api.flat_round_aggregate_active(
-            anchors_new, grads0, losses0, active, spec,
+            anchors_up, grads0, losses0, active, spec,
             weights=w,
         )
 
@@ -246,6 +261,8 @@ class FedPD:
             round=state["round"] + 1,
             step=state["step"] + fed.k0,
         )
+        if ef_new is not None:
+            new_state["ef"] = ef_new
         metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
         metrics["local_grad_evals"] = jnp.float32(fed.k0 * fed.inner_steps)
         if stale is not None:

@@ -10,6 +10,8 @@ from repro.config import FedConfig
 from repro.core import api
 from repro.core.api import LossFn, broadcast_clients
 from repro.core.baselines.common import (
+    compress_contrib,
+    compress_contrib_active,
     flat_value_and_grad,
     lr_schedule,
     participation_vec,
@@ -21,8 +23,10 @@ from repro.utils import pytree as pt
 
 class FedProx:
     name = "fedprox"
-    client_state_keys = ()
-    flat_client_keys = ()
+    # "ef" = compression error-feedback residual (core/compress.py);
+    # present only when the engine enables it — absent keys cost nothing
+    client_state_keys = ("ef",)
+    flat_client_keys = ("ef",)
     flat_global_keys = ("x",)
     active_tile = "participants"  # frozen clients are never read or written
 
@@ -101,11 +105,12 @@ class FedProx:
         return new_state, metrics
 
     # ------------------------------------------------------------ flat round
-    def round_flat(self, state, batch, spec, mask=None, stale=None):
+    def round_flat(self, state, batch, spec, mask=None, stale=None,
+                   compressor=None):
         """`round` on the flat (m, N) trajectory buffer: the proximal GD
         loop is contiguous elementwise math, the gradient evaluation the
         only pytree boundary, and eq. (11) + diagnostics one fused
-        reduction (see FedAvg.round_flat)."""
+        reduction (see FedAvg.round_flat, incl. the compressor hook)."""
         fed = self.fed
         m = api.local_client_count(fed.num_clients)
         if stale is None:
@@ -137,8 +142,10 @@ class FedProx:
         (xc_new, (losses0, grads0)), _ = jax.lax.scan(
             local_step, (xc, first0), jnp.arange(fed.k0)
         )
+        xc_up, ef_new = compress_contrib(compressor, state, xc_new, spec,
+                                         mask=mask)
         x_new, gsq, f_mean, n_sel = api.flat_round_aggregate(
-            xc_new, grads0, losses0, participation_vec(losses0, mask), spec,
+            xc_up, grads0, losses0, participation_vec(losses0, mask), spec,
             mask=mask, weights=api.stale_weights(stale),
         )
 
@@ -146,6 +153,8 @@ class FedProx:
         new_state.update(
             x=x_new, round=state["round"] + 1, step=state["step"] + fed.k0
         )
+        if ef_new is not None:
+            new_state["ef"] = ef_new
         metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
         metrics["local_grad_evals"] = jnp.float32(fed.k0 * fed.inner_steps)
         if stale is not None:
@@ -153,7 +162,8 @@ class FedProx:
         return new_state, metrics
 
     # ----------------------------------------------------- active-set round
-    def round_flat_active(self, state, batch, spec, active, stale=None):
+    def round_flat_active(self, state, batch, spec, active, stale=None,
+                          compressor=None):
         """`round_flat` on the packed participant tile (store="active"):
         proximal GD trajectories exist only for the gathered clients (the
         prox center is each participant's own anchor view). See
@@ -191,8 +201,10 @@ class FedProx:
             local_step, (xc, first0), jnp.arange(fed.k0)
         )
         w = api.stale_weights(stale)
+        xc_up, ef_new = compress_contrib_active(compressor, state, xc_new,
+                                                spec, active)
         x_new, gsq, f_mean, n_sel = api.flat_round_aggregate_active(
-            xc_new, grads0, losses0, active, spec,
+            xc_up, grads0, losses0, active, spec,
             weights=w,
         )
 
@@ -200,6 +212,8 @@ class FedProx:
         new_state.update(
             x=x_new, round=state["round"] + 1, step=state["step"] + fed.k0
         )
+        if ef_new is not None:
+            new_state["ef"] = ef_new
         metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
         metrics["local_grad_evals"] = jnp.float32(fed.k0 * fed.inner_steps)
         if stale is not None:

@@ -14,6 +14,8 @@ from repro.config import FedConfig
 from repro.core import api
 from repro.core.api import LossFn, broadcast_clients
 from repro.core.baselines.common import (
+    compress_contrib,
+    compress_contrib_active,
     flat_value_and_grad,
     lr_schedule,
     participation_vec,
@@ -25,8 +27,10 @@ from repro.utils import pytree as pt
 
 class Scaffold:
     name = "scaffold"
-    client_state_keys = ("ci",)
-    flat_client_keys = ("ci",)
+    # "ef" = compression error-feedback residual (core/compress.py);
+    # present only when the engine enables it — absent keys cost nothing
+    client_state_keys = ("ci", "ef")
+    flat_client_keys = ("ci", "ef")
     flat_global_keys = ("x", "c")
     active_tile = "participants"  # frozen clients keep their control variates
 
@@ -127,13 +131,17 @@ class Scaffold:
         return new_state, metrics
 
     # ------------------------------------------------------------ flat round
-    def round_flat(self, state, batch, spec, mask=None, stale=None):
+    def round_flat(self, state, batch, spec, mask=None, stale=None,
+                   compressor=None):
         """`round` on the flat (m, N) buffers: trajectories and control
         variates are contiguous arrays, and the server-model mean, the
         control-variate delta mean AND the diagnostics all ride eq. (11)'s
         ONE fused reduction (`extra_mean=` in `api.flat_round_aggregate`)
         — the pytree round needs three model-size all-reduces for the
-        same quantities under sharding."""
+        same quantities under sharding. `compressor` encodes the uploaded
+        trajectory y only; the control-variate delta rides uncompressed
+        (the wire-byte model charges one model-size upload per client —
+        docs/compression.md spells out the approximation)."""
         fed = self.fed
         m = api.local_client_count(fed.num_clients)
         if stale is None:
@@ -164,8 +172,9 @@ class Scaffold:
         ci_new = state["ci"] - state["c"][None] + (xc - y) / denom
         if mask is not None:
             ci_new = api.masked_update(mask, ci_new, state["ci"])
+        y_up, ef_new = compress_contrib(compressor, state, y, spec, mask=mask)
         x_new, gsq, f_mean, n_sel, dci = api.flat_round_aggregate(
-            y, grads0, losses0, participation_vec(losses0, mask), spec,
+            y_up, grads0, losses0, participation_vec(losses0, mask), spec,
             mask=mask, weights=api.stale_weights(stale),
             extra_mean=ci_new - state["ci"],
         )
@@ -179,6 +188,8 @@ class Scaffold:
             round=state["round"] + 1,
             step=state["step"] + fed.k0,
         )
+        if ef_new is not None:
+            new_state["ef"] = ef_new
         metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
         metrics["local_grad_evals"] = jnp.float32(fed.k0)
         if stale is not None:
@@ -186,7 +197,8 @@ class Scaffold:
         return new_state, metrics
 
     # ----------------------------------------------------- active-set round
-    def round_flat_active(self, state, batch, spec, active, stale=None):
+    def round_flat_active(self, state, batch, spec, active, stale=None,
+                          compressor=None):
         """`round_flat` on the packed participant tile (store="active"):
         participant control variates are GATHERED from the resident (m, N)
         `ci` buffer, advanced on the (capacity, N) tile, and SCATTERED back
@@ -227,8 +239,10 @@ class Scaffold:
         ci_new_t = ci_t - state["c"][None] + (xc - y) / denom
         ci_new = active.scatter(state["ci"], ci_new_t)
         w = api.stale_weights(stale)
+        y_up, ef_new = compress_contrib_active(compressor, state, y, spec,
+                                               active)
         x_new, gsq, f_mean, n_sel, dci = api.flat_round_aggregate_active(
-            y, grads0, losses0, active, spec,
+            y_up, grads0, losses0, active, spec,
             weights=w,
             extra_mean_tile=ci_new_t - ci_t,
         )
@@ -242,6 +256,8 @@ class Scaffold:
             round=state["round"] + 1,
             step=state["step"] + fed.k0,
         )
+        if ef_new is not None:
+            new_state["ef"] = ef_new
         metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
         metrics["local_grad_evals"] = jnp.float32(fed.k0)
         if stale is not None:

@@ -42,6 +42,7 @@ Two degenerate identities pin the model (tests/test_wallclock.py):
 """
 from __future__ import annotations
 
+import copy
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -71,11 +72,24 @@ class ComputeClock:
     local work and one upload+download; a work item's duration is their
     sum. Durations must be strictly positive (a zero-duration client
     would arrive every round without ever advancing simulated time).
+
+    ``bandwidth_bps`` (scalar or per-client bytes/second) switches the
+    communication term to BYTE-ACCURATE accounting: the engine installs
+    the round's exact per-client wire size (the compressor's
+    ``wire_bytes`` + the fp32 downlink, core/compress.py) via
+    :meth:`with_wire`, and each work item pays
+    ``comm_s + (bytes_up + bytes_down) / bandwidth_bps`` of
+    communication on top of its compute. ``bandwidth_bps=None``
+    (default) keeps the constant-``comm_s`` model BITWISE — the
+    byte-time term is never materialised, so every PR-4/5 ``sim_time``
+    sequence is unchanged (tests/test_compress.py pins this against the
+    committed BENCH_wallclock baseline).
     """
 
     name = "constant"
 
-    def __init__(self, m: int, compute_s=1.0, comm_s=0.0):
+    def __init__(self, m: int, compute_s=1.0, comm_s=0.0,
+                 bandwidth_bps=None):
         if m < 1:
             raise ValueError("need at least one client")
         self.m = m
@@ -84,7 +98,46 @@ class ComputeClock:
         total = np.asarray(self.compute_s) + np.asarray(self.comm_s)
         if not (total > 0).all():
             raise ValueError(f"work-item durations must be > 0, got {total}")
-        self.durations_s = self.compute_s + self.comm_s
+        if bandwidth_bps is None:
+            self.bandwidth_bps = None
+        else:
+            self.bandwidth_bps = _per_client(bandwidth_bps, m,
+                                             "bandwidth_bps")
+            if not (np.asarray(self.bandwidth_bps) > 0).all():
+                raise ValueError(
+                    f"bandwidth_bps must be > 0, got {bandwidth_bps}")
+        self.bytes_up = 0
+        self.bytes_down = 0
+        self._recompute_durations()
+
+    def _recompute_durations(self):
+        if self.bandwidth_bps is None:
+            # bitwise escape: no byte-time term is ever added
+            self.wire_s = None
+            self.durations_s = self.compute_s + self.comm_s
+        else:
+            self.wire_s = (
+                jnp.float32(self.bytes_up + self.bytes_down)
+                / self.bandwidth_bps
+            )
+            self.durations_s = self.compute_s + self.comm_s + self.wire_s
+
+    def with_wire(self, bytes_up: int, bytes_down: int) -> "ComputeClock":
+        """A copy of this clock whose work items pay the byte time of
+        ``bytes_up`` + ``bytes_down`` per round at ``bandwidth_bps``.
+        The engine calls this once per `run_rounds` with the
+        compressor's exact per-client wire size; the caller's clock
+        object is never mutated (it can be reused across runs with
+        different codecs)."""
+        if self.bandwidth_bps is None:
+            raise ValueError(
+                "with_wire needs bandwidth_bps — construct the clock "
+                "with bandwidth_bps= to enable byte-accurate comm time")
+        clone = copy.copy(self)
+        clone.bytes_up = int(bytes_up)
+        clone.bytes_down = int(bytes_down)
+        clone._recompute_durations()
+        return clone
 
     def init(self) -> Dict[str, Any]:
         """Clock carry state: in-flight finish times + the server's simulated
@@ -128,8 +181,8 @@ class LognormalClock(ComputeClock):
     name = "lognormal"
 
     def __init__(self, m: int, compute_s=1.0, comm_s=0.0, sigma: float = 0.5,
-                 seed: int = 0):
-        super().__init__(m, compute_s, comm_s)
+                 seed: int = 0, bandwidth_bps=None):
+        super().__init__(m, compute_s, comm_s, bandwidth_bps)
         if sigma < 0:
             raise ValueError(f"sigma must be >= 0, got {sigma}")
         self.sigma = float(sigma)
@@ -145,7 +198,10 @@ class LognormalClock(ComputeClock):
         jitter = jnp.exp(self.sigma * jax.random.normal(sub, (self.m,)))
         cs2 = dict(cstate)
         cs2["key"] = key
-        return self.compute_s * jitter + self.comm_s, cs2
+        d = self.compute_s * jitter + self.comm_s
+        if self.wire_s is not None:
+            d = d + self.wire_s
+        return d, cs2
 
 
 class TraceClock(ComputeClock):
@@ -156,18 +212,22 @@ class TraceClock(ComputeClock):
 
     name = "trace"
 
-    def __init__(self, m: int, trace):
+    def __init__(self, m: int, trace, bandwidth_bps=None):
         tr = np.asarray(trace, np.float32)
         if tr.ndim != 2 or tr.shape[1] != m:
             raise ValueError(f"trace must be (T, m={m}), got {tr.shape}")
         if not (tr > 0).all():
             raise ValueError("trace durations must be > 0")
-        super().__init__(m, compute_s=tr[0], comm_s=0.0)
+        super().__init__(m, compute_s=tr[0], comm_s=0.0,
+                         bandwidth_bps=bandwidth_bps)
         self.trace = jnp.asarray(tr)
 
     def _draw(self, cstate, round_idx):
         t = jnp.asarray(round_idx, jnp.int32) % self.trace.shape[0]
-        return jnp.take(self.trace, t, axis=0), cstate
+        d = jnp.take(self.trace, t, axis=0)
+        if self.wire_s is not None:
+            d = d + self.wire_s
+        return d, cstate
 
 
 CLOCKS = ("constant", "lognormal", "trace")
@@ -189,20 +249,26 @@ def make_clock(
     sigma: float = 0.5,
     seed: int = 0,
     trace=None,
+    bandwidth_bps=None,
 ) -> Optional[ComputeClock]:
     """CLI-level factory (launch: --clock/--client-speeds). ``kind="none"``
     returns None — rounds stay trace- or policy-driven. ``compute_s``
-    defaults to `default_speeds` (per-client seconds cycling 1..4)."""
+    defaults to `default_speeds` (per-client seconds cycling 1..4).
+    ``bandwidth_bps`` enables byte-accurate comm time (the engine feeds
+    the codec's exact wire size per round; None keeps the constant
+    ``comm_s`` model bitwise)."""
     if kind == "none":
         return None
     if compute_s is None:
         compute_s = default_speeds(m)
     if kind == "constant":
-        return ComputeClock(m, compute_s, comm_s)
+        return ComputeClock(m, compute_s, comm_s,
+                            bandwidth_bps=bandwidth_bps)
     if kind == "lognormal":
-        return LognormalClock(m, compute_s, comm_s, sigma=sigma, seed=seed)
+        return LognormalClock(m, compute_s, comm_s, sigma=sigma, seed=seed,
+                              bandwidth_bps=bandwidth_bps)
     if kind == "trace":
         if trace is None:
             raise ValueError("trace clock needs a (T, m) duration table")
-        return TraceClock(m, trace)
+        return TraceClock(m, trace, bandwidth_bps=bandwidth_bps)
     raise KeyError(f"unknown clock {kind!r}: {CLOCKS} or 'none'")

@@ -1,0 +1,311 @@
+"""Uplink compression for eq. (11)'s flat communication buffer.
+
+FedGiA's headline claim is communication efficiency, but the engine's
+eq. (11) aggregation moves full-precision flat buffers: every round each
+participating client uploads its (N,) contribution (FedGiA: z_i, the
+baselines: their local trajectory) in fp32. This module adds the
+compressed-FL recipe of arXiv:2205.02719 on top of the PR-5 flat layout:
+the uplink is quantized (`bf16`, `int8` with stochastic rounding) or
+sparsified (`topk`), optionally with PER-CLIENT ERROR FEEDBACK — the
+residual e_i = u_i - C(u_i) of each round's codec error is carried
+client-side and added to the next upload, so the compression error
+telescopes instead of accumulating (the inexact-ADMM analysis of
+arXiv:2110.15318 is exactly the licence FedGiA already exploits for its
+inexact local solves).
+
+Design constraints, in order:
+
+* **decompress-before-reduce** — codecs are pure encode+decode round
+  trips on the (rows, N) buffer: the server-visible value C(u_i) is
+  computed CLIENT-SIDE (shard-local under client sharding) and the fp32
+  decode is what enters the round's ONE model-size psum. The collective
+  structure of the round is untouched, so the one-all-reduce HLO
+  invariant of the sharded flat round holds for every codec
+  (tests/test_compress.py asserts it).
+* **bitwise `none` escape** — the identity codec never touches the round
+  path at all: the engine resolves ``compression="none"`` (without error
+  feedback) to "no compressor", so the lowered round is THE SAME program,
+  not an equal one. The codec object still models the uncompressed wire
+  size for the byte-accurate clock.
+* **zero-tail preservation** — the wire format carries the ``n`` LOGICAL
+  lanes only; the lane-padded tail of the flat buffer never leaves the
+  client, and `api.compress_upload` re-zeros it after decode, so the
+  RavelSpec zero-tail invariant (norms, Pallas kernel) survives lossy
+  codecs whose decode of 0 is not exactly 0 (affine int8).
+
+Wire-byte model (`wire_bytes`): one upload = a fixed per-message
+``HEADER_BYTES`` (framing: client id, round, codec tag) + the payload.
+``none`` 4n, ``bf16`` 2n, ``int8`` n + 8 (per-row affine scale +
+zero-point, fp32 each), ``topk`` 8k (4-byte lane index + 4-byte fp32
+value per kept lane). The byte-accurate clock (core/clock.py,
+``bandwidth_bps``) turns these into per-client comm seconds so the
+wallclock bench can show compression buying time-to-target, not just
+fewer bits (BENCH_wallclock's compression section).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Fixed per-upload framing overhead (client id, round index, codec tag).
+HEADER_BYTES = 8
+
+COMPRESSORS = ("none", "bf16", "int8", "topk")
+
+
+def round_key(rng: jax.Array, round_idx: jax.Array) -> jax.Array:
+    """The round's stochastic-rounding base key: fold the round counter
+    into the algorithm's rng WITHOUT advancing its stream (the selection
+    split stays bitwise whatever the codec). Replicated across shards —
+    `api.compress_upload` derives per-client keys from global row ids, so
+    sharded and unsharded rounds draw identical per-client noise."""
+    return jax.random.fold_in(rng, round_idx)
+
+
+class Compressor:
+    """Base codec: a pure encode+decode round trip on a (rows, N) buffer.
+
+    ``error_feedback`` marks whether the engine should carry the
+    per-client residual buffer (``state["ef"]``, one extra (m, N) flat
+    `flat_client_keys` entry) and `api.compress_upload` should fold it
+    into the upload. ``stochastic`` codecs receive per-row PRNG keys.
+    """
+
+    name = "abstract"
+    stochastic = False
+
+    def __init__(self, error_feedback: bool = False):
+        self.error_feedback = bool(error_feedback)
+
+    @property
+    def identity(self) -> bool:
+        """True when decode(encode(u)) == u bitwise for every u — the
+        engine drops identity codecs (without error feedback) from the
+        round path entirely, keeping ``compression="none"`` the SAME
+        lowered program."""
+        return False
+
+    def encode_decode(self, u: jax.Array, *, keys: Optional[jax.Array] = None,
+                      n: Optional[int] = None) -> jax.Array:
+        """The server-visible decode of one upload per row of ``u``.
+
+        ``keys`` — (rows,) stacked PRNG keys (stochastic codecs only).
+        ``n`` — the LOGICAL lane count (``spec.size``); buffers arrive
+        lane-padded and codecs that size their payload from the model
+        dimension (top-k) must not count padding lanes.
+        """
+        raise NotImplementedError
+
+    def wire_bytes(self, n: int) -> int:
+        """Exact uplink bytes for one client's upload of n logical lanes
+        (header + payload — the padded tail is never transmitted)."""
+        raise NotImplementedError
+
+    def __repr__(self):
+        ef = ", error_feedback=True" if self.error_feedback else ""
+        return f"{type(self).__name__}({self.name!r}{ef})"
+
+
+class NoneCompressor(Compressor):
+    """Bitwise identity escape: full-precision fp32 uplink. Exists so the
+    byte clock can price the UNCOMPRESSED wire; the engine never routes
+    round math through it."""
+
+    name = "none"
+
+    @property
+    def identity(self) -> bool:
+        return True
+
+    def encode_decode(self, u, *, keys=None, n=None):
+        return u
+
+    def wire_bytes(self, n: int) -> int:
+        return HEADER_BYTES + 4 * n
+
+
+class Bf16Compressor(Compressor):
+    """bfloat16 quantization: keep fp32's 8-bit exponent, drop the
+    mantissa to 7 bits — 2 bytes/lane. ``rounding="nearest"`` is the
+    round-to-nearest-even cast; ``"stochastic"`` adds uniform noise in
+    the truncated 16 mantissa bits before truncating, making the decode
+    unbiased (E[C(u)] = u) at the cost of ~2x the nearest-rounding error.
+    Values already representable in bf16 (zeros included — the padded
+    tail) round-trip exactly under both modes."""
+
+    name = "bf16"
+
+    def __init__(self, error_feedback: bool = False,
+                 rounding: str = "nearest"):
+        super().__init__(error_feedback)
+        if rounding not in ("nearest", "stochastic"):
+            raise ValueError(
+                f"bf16 rounding must be 'nearest' or 'stochastic', "
+                f"got {rounding!r}")
+        self.rounding = rounding
+
+    @property
+    def stochastic(self) -> bool:
+        return self.rounding == "stochastic"
+
+    def encode_decode(self, u, *, keys=None, n=None):
+        if self.rounding == "nearest":
+            return u.astype(jnp.bfloat16).astype(u.dtype)
+        # stochastic: add uniform bits in [0, 2^16) to the fp32 bit
+        # pattern, then truncate the low 16 bits — unbiased within the
+        # bf16 lattice. Exact bf16 values (bit pattern with a zero low
+        # half) stay exact: noise < 2^16 never carries into the kept bits
+        # ... unless the value already has nonzero low bits, which is the
+        # point. Requires an fp32 buffer (the flat spec dtype).
+        assert keys is not None, "stochastic bf16 needs per-row keys"
+        bits = jax.lax.bitcast_convert_type(u.astype(jnp.float32),
+                                            jnp.uint32)
+        noise = jax.vmap(
+            lambda k: jax.random.randint(
+                k, u.shape[1:], 0, 1 << 16, dtype=jnp.uint32)
+        )(keys)
+        out = jax.lax.bitcast_convert_type(
+            (bits + noise) & jnp.uint32(0xFFFF0000), jnp.float32)
+        return out.astype(u.dtype)
+
+    def wire_bytes(self, n: int) -> int:
+        return HEADER_BYTES + 2 * n
+
+
+class Int8Compressor(Compressor):
+    """Per-row affine 8-bit quantization: each client's upload is mapped
+    onto a 256-level grid between its row minimum (the zero-point) and
+    maximum, q = round((u - lo)/scale) in [0, 255], decode lo + q*scale
+    — 1 byte/lane + the two fp32 row constants on the wire. The decode
+    error is bounded by the grid: |u - C(u)| <= scale/2 under nearest
+    rounding, < scale under stochastic rounding (floor(t + U[0,1)),
+    which is unbiased: E[C(u)] = u). A constant row (scale 0) decodes
+    exactly."""
+
+    name = "int8"
+
+    def __init__(self, error_feedback: bool = False,
+                 rounding: str = "stochastic"):
+        super().__init__(error_feedback)
+        if rounding not in ("nearest", "stochastic"):
+            raise ValueError(
+                f"int8 rounding must be 'nearest' or 'stochastic', "
+                f"got {rounding!r}")
+        self.rounding = rounding
+
+    @property
+    def stochastic(self) -> bool:
+        return self.rounding == "stochastic"
+
+    def encode_decode(self, u, *, keys=None, n=None):
+        f = u.astype(jnp.float32)
+        lo = jnp.min(f, axis=-1, keepdims=True)
+        hi = jnp.max(f, axis=-1, keepdims=True)
+        scale = (hi - lo) / 255.0
+        safe = jnp.where(scale > 0, scale, 1.0)
+        t = (f - lo) / safe
+        if self.rounding == "stochastic":
+            assert keys is not None, "stochastic int8 needs per-row keys"
+            noise = jax.vmap(
+                lambda k: jax.random.uniform(k, u.shape[1:], jnp.float32)
+            )(keys)
+            q = jnp.floor(t + noise)
+        else:
+            q = jnp.round(t)
+        q = jnp.clip(q, 0.0, 255.0)
+        dec = lo + q * jnp.where(scale > 0, safe, 0.0)
+        return dec.astype(u.dtype)
+
+    def wire_bytes(self, n: int) -> int:
+        return HEADER_BYTES + 8 + n  # fp32 scale + zero-point, 1B/lane
+
+
+class TopKCompressor(Compressor):
+    """Magnitude top-k sparsification: each row keeps its k largest-|·|
+    lanes exactly (fp32) and zeroes the rest; the wire carries k
+    (index, value) pairs. k = max(1, round(frac * n)) over the LOGICAL
+    lane count — padding lanes are never counted (and a padded-tail zero
+    can only be "kept" when a row has fewer than k nonzeros, where it
+    decodes to exactly 0 anyway). Deterministic: ties break by lane
+    order (`jax.lax.top_k`). Top-k is the codec that NEEDS error
+    feedback — dropped lanes carry over instead of being lost."""
+
+    name = "topk"
+
+    def __init__(self, frac: float = 0.1, error_feedback: bool = False):
+        super().__init__(error_feedback)
+        if not (0.0 < frac <= 1.0):
+            raise ValueError(f"topk frac must be in (0, 1], got {frac}")
+        self.frac = float(frac)
+
+    def k_for(self, n: int) -> int:
+        return max(1, min(n, int(round(self.frac * n))))
+
+    def encode_decode(self, u, *, keys=None, n=None):
+        k = self.k_for(n if n is not None else u.shape[-1])
+        flat = u.reshape((-1, u.shape[-1]))
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        vals = jnp.take_along_axis(flat, idx, axis=-1)
+        rows = jnp.arange(flat.shape[0], dtype=idx.dtype)[:, None]
+        dec = jnp.zeros_like(flat).at[rows, idx].set(vals)
+        return dec.reshape(u.shape)
+
+    def wire_bytes(self, n: int) -> int:
+        return HEADER_BYTES + 8 * self.k_for(n)  # 4B index + 4B value
+
+
+def downlink_bytes(n: int) -> int:
+    """Per-client download of the fresh x̄: full-precision fp32 (the
+    server broadcast is NOT compressed — error feedback has no client-side
+    twin for the downlink in this recipe)."""
+    return HEADER_BYTES + 4 * n
+
+
+def uplink_bytes(compressor: Optional[Compressor], n: int) -> int:
+    """Per-client upload bytes under `compressor` (None = raw fp32)."""
+    if compressor is None:
+        return NoneCompressor().wire_bytes(n)
+    return compressor.wire_bytes(n)
+
+
+def make_compressor(name: str, *, error_feedback: bool = False,
+                    topk_frac: float = 0.1,
+                    rounding: Optional[str] = None) -> Compressor:
+    """CLI-level factory (`run_rounds(compression=...)`,
+    `train.py --compression`). ``rounding=None`` keeps each codec's
+    default (bf16: nearest, int8: stochastic)."""
+    if name == "none":
+        if error_feedback:
+            raise ValueError(
+                "error feedback with the identity codec is a residual "
+                "that is always zero — drop --error-feedback or pick a "
+                "lossy codec (bf16/int8/topk)")
+        return NoneCompressor()
+    if name == "bf16":
+        kw = {} if rounding is None else {"rounding": rounding}
+        return Bf16Compressor(error_feedback, **kw)
+    if name == "int8":
+        kw = {} if rounding is None else {"rounding": rounding}
+        return Int8Compressor(error_feedback, **kw)
+    if name == "topk":
+        return TopKCompressor(topk_frac, error_feedback)
+    raise KeyError(f"unknown compression {name!r}: {COMPRESSORS}")
+
+
+def as_compressor(compression, *, error_feedback: bool = False,
+                  topk_frac: float = 0.1) -> Optional[Compressor]:
+    """Engine-boundary resolution: None passes through, a string goes
+    through `make_compressor`, a `Compressor` instance is used as-is
+    (``error_feedback``/``topk_frac`` then live on the instance)."""
+    if compression is None:
+        if error_feedback:
+            raise ValueError(
+                "error_feedback=True needs a lossy compression codec "
+                "(bf16/int8/topk)")
+        return None
+    if isinstance(compression, Compressor):
+        return compression
+    return make_compressor(compression, error_feedback=error_feedback,
+                           topk_frac=topk_frac)

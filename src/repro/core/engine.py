@@ -82,7 +82,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import api
+from repro.core import api, compress
 from repro.utils import pytree as pt
 
 
@@ -149,7 +149,8 @@ def unflatten_state(algo, state, spec):
 
 def make_round_fn(algo, mesh=None, client_axis: str = "data",
                   masked: bool = False, stale: bool = False,
-                  flat_spec=None, active_capacity: Optional[int] = None):
+                  flat_spec=None, active_capacity: Optional[int] = None,
+                  compressor=None):
     """`algo.round`, optionally wrapped in `shard_map` over the client axis.
 
     `masked=True` returns a `(state, batch, mask) -> (state, metrics)`
@@ -179,6 +180,13 @@ def make_round_fn(algo, mesh=None, client_axis: str = "data",
     `shard_map` on the shard-local (m_local,) mask, so the capacity is
     clamped to m_local (a shard can never host more participants than it
     has clients).
+
+    `compressor` (a `core.compress.Compressor`, flat rounds only) is
+    threaded into `round_flat`/`round_flat_active` as a keyword: each
+    client's eq.-(11) contribution is encoded+decoded LOCALLY before it
+    enters the round's aggregation (decompress-before-reduce), so the
+    sharded round still lowers to its ONE model-size all-reduce. None
+    keeps the uncompressed round — structurally, not just numerically.
     """
     if flat_spec is not None and active_capacity is not None:
         cap = active_capacity
@@ -189,11 +197,15 @@ def make_round_fn(algo, mesh=None, client_axis: str = "data",
         def base_round(state, batch, mask, *extra):
             aset = pt.make_active_set(mask, cap)
             return algo.round_flat_active(state, batch, flat_spec, aset,
-                                          *extra)
+                                          *extra, compressor=compressor)
     elif flat_spec is not None:
         base_round = lambda state, batch, *extra: algo.round_flat(
-            state, batch, flat_spec, *extra)
+            state, batch, flat_spec, *extra, compressor=compressor)
     else:
+        if compressor is not None:
+            raise ValueError(
+                "compression operates on the flat (m, N) comm buffer — "
+                "the pytree round path (flat=False) does not support it")
         base_round = algo.round
     if mesh is None:
         if stale:
@@ -283,6 +295,9 @@ def run_rounds(
     stale_decay: float = 1.0,
     flat: bool = True,
     store: str = "dense",
+    compression=None,
+    error_feedback: bool = False,
+    topk_frac: float = 0.1,
 ) -> RoundResult:
     """Run up to `num_rounds` communication rounds of `algo`.
 
@@ -366,6 +381,32 @@ def run_rounds(
     clock; FedGiA declares `active_tile="population"` (every client is
     rewritten every round by eqs. 15-17) and falls back to the dense
     round internally.
+
+    compression: uplink codec for the flat comm buffer — "none"/None,
+    "bf16", "int8", "topk" or a `core.compress.Compressor` instance.
+    Each client's eq.-(11) contribution is encoded+decoded LOCALLY
+    before it enters the round's aggregation (decompress-before-reduce),
+    so the sharded round keeps its ONE model-size all-reduce and `none`
+    is BITWISE the uncompressed engine (the identity codec without
+    error feedback resolves to the very same lowered program —
+    tests/test_compress.py pins this for all five algorithms).
+    Requires the flat round path.
+
+    error_feedback: per-client error-feedback residuals (EF): each
+    client uploads C(contrib + ef) and keeps ef' = (contrib + ef) -
+    C(contrib + ef) in one extra (m, N) flat buffer `state["ef"]`
+    riding the scan carry like any other flat client key (dense and
+    active stores carry it for free; non-participants' residuals are
+    frozen). Requires a lossy compression codec.
+
+    topk_frac: fraction of lanes the "topk" codec keeps (largest-|·|
+    per client), 0 < topk_frac <= 1.
+
+    With a byte-accurate clock (`clock.bandwidth_bps` set) the codec's
+    exact wire size prices the simulated communication time: the engine
+    installs `compress.uplink_bytes`/`downlink_bytes` of the model on
+    the clock (`ComputeClock.with_wire`) and the history gains per-round
+    `bytes_up`/`bytes_down` totals (arrived clients × per-client wire).
     """
     if num_rounds <= 0:
         return RoundResult(state, {}, 0, False, 0.0)
@@ -448,14 +489,46 @@ def run_rounds(
             )
         active_capacity = (algo.fed.num_clients if clock is not None
                            else participation.active_capacity)
+    compressor = compress.as_compressor(
+        compression, error_feedback=error_feedback, topk_frac=topk_frac)
+    # the clock prices the wire the codec actually produces, even when
+    # the identity codec is resolved away below
+    wire_comp = compressor
+    if compressor is not None and compressor.identity \
+            and not compressor.error_feedback:
+        # bitwise escape: the identity codec without error feedback IS
+        # the uncompressed round — resolve to the same lowered program,
+        # not merely the same values
+        compressor = None
+    if compressor is not None and not flat:
+        raise ValueError(
+            "compression operates on the flat (m, N) comm buffer — it "
+            "requires the flat round path (flat=True on an algorithm "
+            "providing round_flat; drop --no-flat)"
+        )
+    byte_clock = (clock is not None
+                  and getattr(clock, "bandwidth_bps", None) is not None)
+    if byte_clock:
+        # logical model size BEFORE the lane-padding ravel: the wire
+        # never carries padding (core/compress.py)
+        model_size = pt.tree_size(state["x"])
+        clock = clock.with_wire(
+            compress.uplink_bytes(wire_comp, model_size),
+            compress.downlink_bytes(model_size),
+        )
     spec = pt.ravel_spec(state["x"]) if flat else None
     if flat:
         # the ONE ravel of the run: everything downstream carries the
         # contiguous buffers; the inverse runs at the return boundary.
         state = flatten_state(algo, state, spec)
+        if compressor is not None and compressor.error_feedback \
+                and "ef" not in state:
+            state["ef"] = jnp.zeros(
+                (algo.fed.num_clients, spec.padded_size), spec.dtype)
     round_fn = make_round_fn(algo, mesh, client_axis, masked=masked,
                              stale=async_rounds, flat_spec=spec,
-                             active_capacity=active_capacity)
+                             active_capacity=active_capacity,
+                             compressor=compressor)
     if mesh is not None:
         state, batch = shard_inputs(algo, state, batch, mesh, client_axis)
     if donate is None:
@@ -489,6 +562,8 @@ def run_rounds(
             s2, sl2, met = round_fn(st, b, mask, sl)
             met = _with_staleness_metrics(met, sl2)
             met["sim_time"] = now
+            if byte_clock:
+                met = _with_byte_metrics(met, mask, clock)
             return s2, ps, cs2, sl2, met
         if not masked:
             s2, met = round_fn(st, b)
@@ -634,6 +709,18 @@ def run_rounds(
     return RoundResult(state, history, rounds_run, stopped, wall)
 
 
+def _with_byte_metrics(met, mask, clock):
+    """Per-round wire totals under a byte-accurate clock: every ARRIVED
+    client paid one upload (the codec's wire) and one fp32 download this
+    round. Only emitted when `bandwidth_bps` is set — the metric key set
+    of plain clocked runs is unchanged."""
+    met = dict(met)
+    n_arr = jnp.sum(mask.astype(jnp.float32))
+    met["bytes_up"] = n_arr * jnp.float32(clock.bytes_up)
+    met["bytes_down"] = n_arr * jnp.float32(clock.bytes_down)
+    return met
+
+
 def _with_staleness_metrics(met, stale):
     """Append the async staleness diagnostics to a round's metric dict:
     `staleness` — the (m,) per-client staleness of the anchor each client
@@ -657,11 +744,15 @@ def _run_legacy_loop(round_fn, state, batch, num_rounds, tol, tol_metric,
     exactly as well.
     """
     if clock is not None:
+        byte_clock = getattr(clock, "bandwidth_bps", None) is not None
+
         def step(st, ps, cs, sl, b, n):
             mask, now, cs2 = clock.tick(cs, n)
             s2, sl2, met = round_fn(st, b, mask, sl)
             met = _with_staleness_metrics(met, sl2)
             met["sim_time"] = now
+            if byte_clock:
+                met = _with_byte_metrics(met, mask, clock)
             return s2, ps, cs2, sl2, met
         pstate, cstate = (), clock.init()
     elif participation is None:

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 import jax.scipy.linalg as jsl
 
 from repro.config import FedConfig
-from repro.core import api, hparams, selection
+from repro.core import api, compress, hparams, selection
 from repro.core.api import LossFn, broadcast_clients, per_client_value_and_grad
 from repro.kernels.fedgia_update import fedgia_update_flat, kernel_by_default
 from repro.utils import pytree as pt
@@ -41,11 +41,13 @@ from repro.utils import pytree as pt
 class FedGiA:
     name = "fedgia"
     # leaves with a leading client axis — what the engine shards over `data`
-    client_state_keys = ("z", "pi", "h", "gram_chol")
+    # ("ef" = the error-feedback residual buffer, present only under a
+    # lossy compressor with error_feedback — absent keys cost nothing)
+    client_state_keys = ("z", "pi", "h", "gram_chol", "ef")
     # model-shaped state the flat engine ravels into (m, N) / (N,) buffers
     # (gram_chol is client-stacked but not model-shaped: it stays a
     # (m, n, n) factor either way)
-    flat_client_keys = ("z", "pi", "h")
+    flat_client_keys = ("z", "pi", "h", "ef")
     flat_global_keys = ("x",)
     # FedGiA's GD branch (eqs. 15-17) rewrites EVERY non-selected client's
     # state from its fresh gradient each round, so the round's working set
@@ -234,7 +236,8 @@ class FedGiA:
         return fed.use_kernel
 
     # ------------------------------------------------------------ flat round
-    def round_flat(self, state, batch, spec, mask=None, stale=None):
+    def round_flat(self, state, batch, spec, mask=None, stale=None,
+                   compressor=None):
         """One communication round on the FLAT client-state buffer.
 
         Same contract as `round`, but `state["z"]` / `state["pi"]` /
@@ -248,6 +251,14 @@ class FedGiA:
         the pytree branch on the raveled layout. The pytree is
         reconstructed only for the per-client gradient evaluation and the
         `grad_sq_norm` metric boundary (docs/engine.md).
+
+        `compressor` (core/compress.py): eq. (11) aggregates the DECODED
+        uploads C(z_i [+ e_i]) instead of the raw z_i — FedGiA's uplink
+        is the whole population's z every round (every client's state is
+        rewritten, `active_tile="population"`), so the codec runs on all
+        m rows and, with error feedback, every residual advances every
+        round. Decompress-before-reduce: the fp32 decode enters the same
+        one-psum mean.
         """
         fed = self.fed
         m = fed.num_clients
@@ -260,7 +271,14 @@ class FedGiA:
 
         # (1) aggregation — eq. (11) as ONE contiguous model-size mean
         # (under client sharding: the round's single model-size psum).
-        xbar = api.client_mean(state["z"], weights=api.stale_weights(stale))
+        # Under a codec the mean is over the decoded uploads.
+        z_up, ef_new = state["z"], None
+        if compressor is not None:
+            ef = state.get("ef") if compressor.error_feedback else None
+            z_up, ef_new = api.compress_upload(
+                compressor, z_up, ef, spec,
+                key=compress.round_key(state["rng"], state["round"]))
+        xbar = api.client_mean(z_up, weights=api.stale_weights(stale))
 
         # (3) client selection — identical rng stream to the pytree round.
         rng, sel_key = jax.random.split(state["rng"])
@@ -314,6 +332,8 @@ class FedGiA:
         new_state.update(
             x=xbar, z=z_new, pi=pi_new, rng=rng, round=state["round"] + 1
         )
+        if ef_new is not None:
+            new_state["ef"] = ef_new
         if fed.h_policy == "diag_ema":
             new_state["h"] = hparams.update_diag_h(state["h"], gbar,
                                                    state["r"], m)
@@ -449,7 +469,8 @@ class FedGiA:
         return loss, None
 
     # ----------------------------------------------------- active-set round
-    def round_flat_active(self, state, batch, spec, active, stale=None):
+    def round_flat_active(self, state, batch, spec, active, stale=None,
+                          compressor=None):
         """Active-store round (``run_rounds(store="active")``).
 
         FedGiA cannot shrink the round's working set: the GD branch
@@ -461,5 +482,7 @@ class FedGiA:
         the dense masked round (bitwise identical by construction). The
         active store's million-client payoff applies to the frozen-client
         family (FedAvg/FedProx/FedPD/SCAFFOLD), where non-participants
-        are genuinely untouched."""
-        return self.round_flat(state, batch, spec, active.mask, stale)
+        are genuinely untouched. The same population argument routes the
+        codec through the dense upload path (all m rows)."""
+        return self.round_flat(state, batch, spec, active.mask, stale,
+                               compressor=compressor)

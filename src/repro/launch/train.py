@@ -42,6 +42,14 @@ finish times, and the run reports simulated seconds alongside CR.
 `--stale-weighting poly|exp` downweights stale contributions in the
 aggregation (eq. 11) by decay in anchor age (`--stale-decay`).
 
+`--compression bf16|int8|topk` quantizes/sparsifies the uplink on the
+flat comm buffer (core/compress.py, decompress-before-reduce — the round
+keeps its ONE model-size all-reduce); `--error-feedback` carries the
+per-client codec residual so the error telescopes; `--bandwidth-bps`
+makes the clock's comm time BYTE-ACCURATE (the codec's exact wire size
+prices each round), so compression shows up as simulated time-to-target,
+not just fewer bits (docs/compression.md).
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --problem linreg --algo fedgia \
       --clients 128 --k0 10 --rounds 200 --tol 1e-7
@@ -132,13 +140,20 @@ def validate_flags(args) -> dict:
     (the legacy loop has no chunks); `--store active` with `--no-flat`
     (the active store packs the FLAT buffers) or without a participant
     source (`--participation` or `--clock` — there is nothing to pack
-    a tile from under legacy full participation).
+    a tile from under legacy full participation); a lossy `--compression`
+    with `--no-flat` (codecs run on the flat comm buffer);
+    `--error-feedback` without a lossy codec (the identity residual is
+    always zero); `--topk-frac` without `--compression topk` or outside
+    (0, 1]; `--bandwidth-bps` without `--clock` (byte-accurate comm time
+    is a clock feature) or non-positive.
 
     Returns the resolved engine knobs: participation kind, clock kind,
     whether async rounds are on (a clock implies them), the parsed
     per-client lists (weights / periods / speeds, or None), the chunk
-    size (int or "auto"), whether the flat round path is on, and the
-    FedConfig kernel knobs resolved from `--kernel`.
+    size (int or "auto"), whether the flat round path is on, the
+    FedConfig kernel knobs resolved from `--kernel`, and the compression
+    knobs (codec name or None, error_feedback, topk_frac, bandwidth_bps
+    or None).
     """
     kind = getattr(args, "participation", "full")
     clock_kind = getattr(args, "clock", "none")
@@ -213,6 +228,32 @@ def validate_flags(args) -> dict:
         if clock_kind == "none":
             raise SystemExit("--client-speeds requires --clock")
         speeds = _parse_csv(speeds_arg, args.clients, "--client-speeds", float)
+    compression = getattr(args, "compression", "none")
+    error_feedback = getattr(args, "error_feedback", False)
+    topk_frac = getattr(args, "topk_frac", None)
+    bandwidth = getattr(args, "bandwidth_bps", 0.0)
+    if compression != "none" and getattr(args, "no_flat", False):
+        raise SystemExit(
+            "--compression runs on the flat (m, N) comm buffer and "
+            "requires the flat round path (drop --no-flat)")
+    if error_feedback and compression == "none":
+        raise SystemExit(
+            "--error-feedback carries the codec residual — it needs a "
+            "lossy --compression (bf16/int8/topk)")
+    if topk_frac is not None:
+        if compression != "topk":
+            raise SystemExit("--topk-frac requires --compression topk")
+        if not (0.0 < topk_frac <= 1.0):
+            raise SystemExit(
+                f"--topk-frac must be in (0, 1], got {topk_frac}")
+    if bandwidth:
+        if bandwidth < 0:
+            raise SystemExit(
+                f"--bandwidth-bps must be > 0, got {bandwidth}")
+        if clock_kind == "none":
+            raise SystemExit(
+                "--bandwidth-bps prices the wire inside the wall-clock "
+                "simulation — it requires --clock")
     return {
         "kind": kind,
         "clock_kind": clock_kind,
@@ -225,6 +266,10 @@ def validate_flags(args) -> dict:
         "store": store,
         "use_kernel": use_kernel,
         "kernel_interpret": kernel_interpret,
+        "compression": None if compression == "none" else compression,
+        "error_feedback": error_feedback,
+        "topk_frac": 0.1 if topk_frac is None else topk_frac,
+        "bandwidth_bps": bandwidth if bandwidth else None,
     }
 
 
@@ -285,7 +330,16 @@ def train(args) -> dict:
         compute_s=parsed["speeds"],
         sigma=getattr(args, "clock_sigma", 0.5),
         seed=args.seed,
+        bandwidth_bps=parsed["bandwidth_bps"],
     )
+    if parsed["compression"] is not None:
+        log.info("uplink compression: %s codec%s%s", parsed["compression"],
+                 " + error feedback" if parsed["error_feedback"] else "",
+                 (" (frac=%.2f)" % parsed["topk_frac"])
+                 if parsed["compression"] == "topk" else "")
+    if parsed["bandwidth_bps"] is not None:
+        log.info("byte-accurate comm clock: %.3g bytes/s per client",
+                 parsed["bandwidth_bps"])
     async_rounds = parsed["async_rounds"]
     max_staleness = getattr(args, "max_staleness", 0)
     stale_weighting = getattr(args, "stale_weighting", "uniform")
@@ -315,6 +369,9 @@ def train(args) -> dict:
         stale_decay=getattr(args, "stale_decay", 1.0),
         flat=parsed["flat"],
         store=parsed["store"],
+        compression=parsed["compression"],
+        error_feedback=parsed["error_feedback"],
+        topk_frac=parsed["topk_frac"],
     )
     history = [
         {"round": r, "f": float(res.history["f_xbar"][r]),
@@ -343,12 +400,21 @@ def train(args) -> dict:
         result["staleness_max_seen"] = int(res.history["staleness_max"].max())
         log.info("async: max staleness actually used = %d (bound %d)",
                  result["staleness_max_seen"], max_staleness)
+    if parsed["compression"] is not None:
+        result["compression"] = parsed["compression"]
+        result["error_feedback"] = parsed["error_feedback"]
     if clock is not None:
         result["clock"] = clock.name
         result["sim_time_s"] = float(res.history["sim_time"][-1])
         log.info("simulated wall-clock: %.3f s to round %d "
                  "(time-to-target when the tolerance stopped the run)",
                  result["sim_time_s"], res.rounds_run - 1)
+        if parsed["bandwidth_bps"] is not None:
+            result["bytes_up"] = float(res.history["bytes_up"].sum())
+            result["bytes_down"] = float(res.history["bytes_down"].sum())
+            log.info("wire totals: %.0f B up / %.0f B down over %d rounds",
+                     result["bytes_up"], result["bytes_down"],
+                     res.rounds_run)
     if args.checkpoint_dir:
         save_checkpoint(args.checkpoint_dir, res.rounds_run, res.state,
                         extra={"algo": args.algo})
@@ -460,6 +526,33 @@ def build_parser() -> argparse.ArgumentParser:
                          "exp (e^(-decay*s))")
     ap.add_argument("--stale-decay", type=float, default=1.0,
                     help="decay rate for --stale-weighting poly/exp")
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "bf16", "int8", "topk"],
+                    help="uplink codec on the flat comm buffer "
+                         "(core/compress.py): none (bitwise identity — "
+                         "the uncompressed engine), bf16 (2 B/lane), int8 "
+                         "(per-client affine, stochastic rounding, ~1 "
+                         "B/lane), topk (keep the --topk-frac largest-|.| "
+                         "lanes). Decompress-before-reduce: the round "
+                         "keeps its one model-size all-reduce. Requires "
+                         "the flat path")
+    ap.add_argument("--topk-frac", type=float, default=None,
+                    help="fraction of lanes kept by --compression topk "
+                         "(default 0.1)")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="carry per-client error-feedback residuals (one "
+                         "extra (m, N) flat buffer in the scan carry): "
+                         "each upload adds the previous rounds' codec "
+                         "error back in, so the compression error "
+                         "telescopes instead of accumulating. Requires a "
+                         "lossy --compression")
+    ap.add_argument("--bandwidth-bps", type=float, default=0.0,
+                    help="per-client uplink/downlink bandwidth in bytes/s "
+                         "for --clock: comm time becomes BYTE-ACCURATE "
+                         "(the codec's exact wire size per round, "
+                         "core/compress.py) and the run reports "
+                         "bytes_up/bytes_down; 0 keeps the constant "
+                         "comm-time model bitwise")
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--rounds", type=int, default=100)
     ap.add_argument("--tol", type=float, default=1e-7)

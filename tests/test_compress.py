@@ -1,0 +1,566 @@
+"""Compressed eq. (11) communication (core/compress.py + engine wiring).
+
+Acceptance contract of the compression subsystem:
+  * codec units: bf16 is exact on representable values, int8's decode
+    error is bounded by its per-row grid (and unbiased under stochastic
+    rounding), top-k keeps exactly the k largest-|·| lanes and preserves
+    the lane-padded zero tail, and the wire-byte model is exact.
+  * error feedback telescopes: Σ decoded uploads + final residual equals
+    Σ raw uploads to fp tolerance; masked-out clients' residuals freeze.
+  * `compression="none"` is BITWISE identical to the uncompressed engine
+    — all five algorithms, scan and legacy, dense and active stores: the
+    engine resolves the identity codec to "no compressor", so the
+    lowered round is THE SAME program.
+  * decompress-before-reduce: the compressed sharded round still lowers
+    to exactly ONE model-size all-reduce (HLO-asserted, subprocess), and
+    the sharded compressed run matches single-device — the stochastic
+    per-client keys are derived from GLOBAL row ids.
+  * byte-accurate clock: `bytes_up`/`bytes_down` and the wire term in
+    `sim_time` match hand-computed goldens; `bandwidth_bps=None` keeps
+    the PR-4/5 clock bitwise — asserted against a committed
+    BENCH_wallclock.baseline.json row.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import fake_device_env
+from repro.config import FedConfig
+from repro.core import api, compress, make_algorithm, make_policy, run_rounds
+from repro.core.clock import ComputeClock
+from repro.core.compress import (
+    HEADER_BYTES,
+    Bf16Compressor,
+    Int8Compressor,
+    NoneCompressor,
+    TopKCompressor,
+    downlink_bytes,
+    make_compressor,
+    uplink_bytes,
+)
+from repro.data import linreg_noniid
+from repro.models import LeastSquares
+from repro.utils import pytree as pt
+
+M, N, D = 8, 20, 400
+ROUNDS = 12
+CHUNK = 5
+
+ALGO_SETUPS = {
+    "fedgia_diag": dict(sigma_t=0.2, h_policy="diag_ema", alpha=0.5),
+    "fedavg": dict(lr=0.01),
+    "fedprox": dict(lr=0.002, prox_mu=1e-4, inner_steps=3),
+    "fedpd": dict(lr=0.05, fedpd_eta=1.0, inner_steps=3),
+    "scaffold": dict(lr=0.01),
+}
+FIVE = sorted(ALGO_SETUPS)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    batch = {k: jnp.asarray(v) for k, v in linreg_noniid(0, D, N, M).items()}
+    return LeastSquares(N), batch
+
+
+def _make(problem, key, **overrides):
+    model, batch = problem
+    name = "fedgia" if key.startswith("fedgia") else key
+    kwargs = dict(algorithm=name, num_clients=M, k0=3)
+    kwargs.update(ALGO_SETUPS[key])
+    kwargs.update(overrides)
+    fed = FedConfig(**kwargs)
+    algo = make_algorithm(fed, model.loss, model=model)
+    state = algo.init(model.init(jax.random.PRNGKey(0)),
+                      jax.random.PRNGKey(1), init_batch=batch)
+    return algo, state
+
+
+def _assert_bitwise(res, ref):
+    assert res.rounds_run == ref.rounds_run
+    assert set(res.history) == set(ref.history)
+    for k in ref.history:
+        np.testing.assert_array_equal(res.history[k], ref.history[k],
+                                      err_msg=k)
+    for key in ref.state:
+        ok = jax.tree.map(lambda a, b: bool(jnp.array_equal(a, b)),
+                          res.state[key], ref.state[key])
+        assert all(jax.tree.leaves(ok)), f"state[{key!r}] diverged"
+
+
+def _row_keys(base, rows):
+    return jax.vmap(lambda i: jax.random.fold_in(base, i))(
+        jnp.arange(rows, dtype=jnp.uint32))
+
+
+# ---------------------------------------------------------------- codec units
+def test_none_codec_is_identity():
+    comp = NoneCompressor()
+    assert comp.identity and not comp.stochastic
+    u = jnp.asarray(np.random.default_rng(0).normal(size=(3, 16)), jnp.float32)
+    assert comp.encode_decode(u) is u
+
+
+def test_bf16_nearest_exact_on_representable_values():
+    """Values with <= 8 significant mantissa bits (zeros included — the
+    padded tail) round-trip bitwise; everything else lands within half a
+    bf16 ulp (2^-8 relative)."""
+    comp = Bf16Compressor()
+    exact = jnp.asarray([[0.0, 1.0, -2.5, 0.375, 1024.0, 3.140625]],
+                        jnp.float32)
+    np.testing.assert_array_equal(np.asarray(comp.encode_decode(exact)),
+                                  np.asarray(exact))
+    u = jnp.asarray(
+        np.random.default_rng(1).normal(size=(4, 64)) * 37.1, jnp.float32)
+    err = np.abs(np.asarray(comp.encode_decode(u)) - np.asarray(u))
+    assert (err <= 2.0 ** -8 * np.abs(np.asarray(u)) + 1e-30).all()
+
+
+def test_bf16_stochastic_exact_on_lattice_and_bounded():
+    """Stochastic rounding never moves a value already on the bf16
+    lattice (its low 16 bits are zero — the noise cannot carry), and the
+    error stays within one bf16 ulp (2^-7 relative)."""
+    comp = Bf16Compressor(rounding="stochastic")
+    assert comp.stochastic
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    lattice = jnp.broadcast_to(
+        jnp.asarray([0.0, 1.0, -2.5, 1024.0], jnp.float32), (4, 4))
+    np.testing.assert_array_equal(
+        np.asarray(comp.encode_decode(lattice, keys=keys)),
+        np.asarray(lattice))
+    u = jnp.asarray(
+        np.random.default_rng(2).normal(size=(4, 64)) * 5.3, jnp.float32)
+    err = np.abs(np.asarray(comp.encode_decode(u, keys=keys)) - np.asarray(u))
+    assert (err <= 2.0 ** -7 * np.abs(np.asarray(u)) + 1e-30).all()
+
+
+@pytest.mark.parametrize("rounding,bound", [("nearest", 0.5),
+                                            ("stochastic", 1.0)])
+def test_int8_error_bounded_by_row_grid(rounding, bound):
+    """|u - C(u)| <= bound * scale with scale = (max - min)/255 per row;
+    a constant row (scale 0) decodes exactly."""
+    comp = Int8Compressor(rounding=rounding)
+    u = jnp.asarray(
+        np.random.default_rng(3).normal(size=(5, 96)) * 11.0, jnp.float32)
+    keys = _row_keys(jax.random.PRNGKey(1), 5) if comp.stochastic else None
+    dec = np.asarray(comp.encode_decode(u, keys=keys))
+    un = np.asarray(u)
+    scale = (un.max(-1, keepdims=True) - un.min(-1, keepdims=True)) / 255.0
+    assert (np.abs(dec - un) <= bound * scale * (1 + 1e-5)).all()
+    const = jnp.full((2, 16), -3.75, jnp.float32)
+    keys2 = _row_keys(jax.random.PRNGKey(2), 2) if comp.stochastic else None
+    np.testing.assert_array_equal(
+        np.asarray(comp.encode_decode(const, keys=keys2)), np.asarray(const))
+
+
+def test_int8_stochastic_rounding_is_unbiased():
+    """E[C(u)] = u: averaging decodes of the SAME row under many keys
+    converges to the raw row (floor(t + U[0,1)) is unbiased)."""
+    comp = Int8Compressor(rounding="stochastic")
+    row = np.random.default_rng(4).normal(size=16).astype(np.float32)
+    reps = 512
+    u = jnp.broadcast_to(jnp.asarray(row), (reps, 16))
+    keys = _row_keys(jax.random.PRNGKey(3), reps)
+    mean = np.asarray(comp.encode_decode(u, keys=keys)).mean(0)
+    scale = (row.max() - row.min()) / 255.0
+    # CLT: the per-lane sampling error of the mean is ~ scale/sqrt(reps)
+    assert np.abs(mean - row).max() < 5 * scale / np.sqrt(reps)
+
+
+def test_topk_keeps_exactly_k_largest_lanes():
+    comp = TopKCompressor(frac=0.25)
+    u = jnp.asarray([[0.0, 5.0, -3.0, 1.0, 0.5, -0.25, 8.0, 0.0]],
+                    jnp.float32)
+    assert comp.k_for(8) == 2
+    dec = np.asarray(comp.encode_decode(u, n=8))[0]
+    expect = np.zeros(8, np.float32)
+    expect[1], expect[6] = 5.0, 8.0  # the two largest-|.| lanes, exact
+    np.testing.assert_array_equal(dec, expect)
+    # k is computed on the LOGICAL lane count, floor 1, cap n
+    assert TopKCompressor(frac=1e-6).k_for(400) == 1
+    assert TopKCompressor(frac=1.0).k_for(400) == 400
+
+
+def test_codec_wire_byte_model_exact():
+    n = 400
+    assert NoneCompressor().wire_bytes(n) == HEADER_BYTES + 4 * n == 1608
+    assert Bf16Compressor().wire_bytes(n) == HEADER_BYTES + 2 * n == 808
+    assert Int8Compressor().wire_bytes(n) == HEADER_BYTES + 8 + n == 416
+    assert TopKCompressor(0.25).wire_bytes(n) == HEADER_BYTES + 8 * 100 == 808
+    assert downlink_bytes(n) == HEADER_BYTES + 4 * n
+    assert uplink_bytes(None, n) == NoneCompressor().wire_bytes(n)
+    assert uplink_bytes(Int8Compressor(), n) == 416
+
+
+def test_round_key_is_pure_and_round_dependent():
+    rng = jax.random.PRNGKey(9)
+    k3 = compress.round_key(rng, jnp.int32(3))
+    np.testing.assert_array_equal(
+        np.asarray(k3), np.asarray(compress.round_key(rng, jnp.int32(3))))
+    assert not np.array_equal(
+        np.asarray(k3), np.asarray(compress.round_key(rng, jnp.int32(4))))
+    # fold_in, not split: the algorithm's rng stream never advances
+    np.testing.assert_array_equal(np.asarray(rng),
+                                  np.asarray(jax.random.PRNGKey(9)))
+
+
+def test_factory_validation():
+    with pytest.raises(ValueError, match="identity"):
+        make_compressor("none", error_feedback=True)
+    with pytest.raises(KeyError, match="gzip"):
+        make_compressor("gzip")
+    with pytest.raises(ValueError, match="rounding"):
+        make_compressor("int8", rounding="truncate")
+    with pytest.raises(ValueError, match="frac"):
+        make_compressor("topk", topk_frac=0.0)
+    with pytest.raises(ValueError, match="lossy"):
+        compress.as_compressor(None, error_feedback=True)
+    inst = Int8Compressor(error_feedback=True)
+    assert compress.as_compressor(inst) is inst
+    assert compress.as_compressor(None) is None
+
+
+# ------------------------------------------------------- upload + EF residual
+def _padded_spec():
+    spec = pt.ravel_spec({"w": jnp.zeros((9,), jnp.float32)})
+    assert spec.padded_size > spec.size  # lane-padded
+    return spec
+
+
+def test_compress_upload_re_zeros_padded_tail():
+    """Affine int8 decodes 0 to lo + q*scale != 0; the upload hook forces
+    the padded tail back to exact zero (RavelSpec invariant)."""
+    spec = _padded_spec()
+    r = np.random.default_rng(5)
+    contrib = np.zeros((4, spec.padded_size), np.float32)
+    contrib[:, :spec.size] = r.normal(size=(4, spec.size)) + 2.0
+    dec, ef = api.compress_upload(Int8Compressor(rounding="nearest"),
+                                  jnp.asarray(contrib), None, spec)
+    assert ef is None
+    dec = np.asarray(dec)
+    assert (dec[:, spec.size:] == 0.0).all()
+    assert np.abs(dec[:, :spec.size] - contrib[:, :spec.size]).max() < 0.1
+
+
+@pytest.mark.parametrize("codec", [
+    Bf16Compressor(error_feedback=True),
+    Int8Compressor(error_feedback=True),
+    TopKCompressor(0.25, error_feedback=True),
+], ids=["bf16", "int8", "topk"])
+def test_error_feedback_telescopes(codec):
+    """Σ_r C(u_r) + e_R == Σ_r contrib_r: each round's codec error is
+    carried, not lost — whatever the codec."""
+    spec = _padded_spec()
+    r = np.random.default_rng(6)
+    base = jax.random.PRNGKey(11)
+    ef = jnp.zeros((4, spec.padded_size), jnp.float32)
+    total_dec = np.zeros((4, spec.padded_size), np.float64)
+    total_raw = np.zeros((4, spec.padded_size), np.float64)
+    for rnd in range(6):
+        c = np.zeros((4, spec.padded_size), np.float32)
+        c[:, :spec.size] = r.normal(size=(4, spec.size))
+        dec, ef = api.compress_upload(
+            codec, jnp.asarray(c), ef, spec,
+            key=compress.round_key(base, jnp.int32(rnd)))
+        total_dec += np.asarray(dec, np.float64)
+        total_raw += c.astype(np.float64)
+    np.testing.assert_allclose(total_dec + np.asarray(ef, np.float64),
+                               total_raw, rtol=1e-5, atol=1e-5)
+    # the residual's padded tail never becomes nonzero
+    assert (np.asarray(ef)[:, spec.size:] == 0.0).all()
+
+
+def test_error_feedback_freezes_masked_clients():
+    spec = _padded_spec()
+    r = np.random.default_rng(7)
+    ef0 = np.zeros((4, spec.padded_size), np.float32)
+    ef0[:, :spec.size] = r.normal(size=(4, spec.size))
+    c = np.zeros((4, spec.padded_size), np.float32)
+    c[:, :spec.size] = r.normal(size=(4, spec.size))
+    mask = jnp.asarray([True, False, True, False])
+    _, ef1 = api.compress_upload(
+        TopKCompressor(0.25, error_feedback=True), jnp.asarray(c),
+        jnp.asarray(ef0), spec, mask=mask)
+    ef1 = np.asarray(ef1)
+    np.testing.assert_array_equal(ef1[1], ef0[1])
+    np.testing.assert_array_equal(ef1[3], ef0[3])
+    assert not np.array_equal(ef1[0], ef0[0])
+
+
+# --------------------------------------- compression="none" == plain, bitwise
+@pytest.mark.parametrize("algo_key", FIVE)
+@pytest.mark.parametrize("scan", [True, False], ids=["scan", "legacy"])
+def test_none_bitwise_identical_dense(problem, algo_key, scan):
+    """The engine resolves the identity codec (no EF) to "no compressor"
+    before building the round fn — the same lowered program, so history
+    AND state are bitwise equal, not merely close."""
+    algo, state = _make(problem, algo_key)
+    _, batch = problem
+    ref = run_rounds(algo, state, batch, ROUNDS, scan=scan, chunk_size=CHUNK)
+    res = run_rounds(algo, state, batch, ROUNDS, scan=scan, chunk_size=CHUNK,
+                     compression="none")
+    _assert_bitwise(res, ref)
+
+
+@pytest.mark.parametrize("algo_key", FIVE)
+def test_none_bitwise_identical_active_store(problem, algo_key):
+    algo, state = _make(problem, algo_key)
+    _, batch = problem
+    kw = dict(participation=make_policy("uniform", M, 0.5, seed=3),
+              store="active")
+    ref = run_rounds(algo, state, batch, ROUNDS, **kw)
+    res = run_rounds(algo, state, batch, ROUNDS, compression="none", **kw)
+    _assert_bitwise(res, ref)
+
+
+# ------------------------------------------------------- compressed runs
+@pytest.mark.parametrize("kw", [
+    dict(compression="bf16"),
+    dict(compression="int8", error_feedback=True),
+    dict(compression="topk", topk_frac=0.25, error_feedback=True),
+], ids=["bf16", "int8+ef", "topk+ef"])
+def test_compressed_run_engages_codec(problem, kw):
+    """Lossy codecs actually change the trajectory (the plumbing is not
+    silently dropping the compressor), stay finite, and carry the EF
+    buffer in the returned state exactly when enabled."""
+    algo, state = _make(problem, "fedgia_diag")
+    _, batch = problem
+    ref = run_rounds(algo, state, batch, ROUNDS)
+    res = run_rounds(algo, state, batch, ROUNDS, **kw)
+    assert np.isfinite(res.history["f_xbar"]).all()
+    assert not np.array_equal(res.history["f_xbar"], ref.history["f_xbar"])
+    assert ("ef" in res.state) == bool(kw.get("error_feedback"))
+
+
+def test_compressed_legacy_matches_scan(problem):
+    algo, state = _make(problem, "fedavg")
+    _, batch = problem
+    kw = dict(compression="topk", topk_frac=0.25, error_feedback=True,
+              clock=ComputeClock(M, 1.0 + (np.arange(M) % 3),
+                                 bandwidth_bps=1e4),
+              max_staleness=2)
+    ref = run_rounds(algo, state, batch, ROUNDS, scan=True, chunk_size=CHUNK,
+                     **kw)
+    res = run_rounds(algo, state, batch, ROUNDS, scan=False, **kw)
+    _assert_bitwise(res, ref)
+
+
+@pytest.mark.parametrize("algo_key", ["fedgia_diag", "scaffold"])
+def test_compressed_active_matches_dense(problem, algo_key):
+    """Stochastic keys come from RESIDENT row ids, so the packed tile
+    quantizes each client exactly as the dense round does; the EF
+    gather/scatter is the dense mask freeze row for row."""
+    algo, state = _make(problem, algo_key)
+    _, batch = problem
+    kw = dict(participation=make_policy("uniform", M, 0.5, seed=3),
+              compression="int8", error_feedback=True)
+    ref = run_rounds(algo, state, batch, ROUNDS, store="dense", **kw)
+    res = run_rounds(algo, state, batch, ROUNDS, store="active", **kw)
+    assert res.rounds_run == ref.rounds_run
+    comparable = ("selected", "cr", "local_grad_evals")
+    full = getattr(algo, "active_tile", "participants") == "population"
+    for k in ref.history:
+        if full or k in comparable:
+            np.testing.assert_array_equal(res.history[k], ref.history[k],
+                                          err_msg=k)
+    for key in ref.state:
+        ok = jax.tree.map(lambda a, b: bool(jnp.array_equal(a, b)),
+                          res.state[key], ref.state[key])
+        assert all(jax.tree.leaves(ok)), f"state[{key!r}] diverged"
+
+
+def test_engine_compression_validation(problem):
+    algo, state = _make(problem, "fedavg")
+    _, batch = problem
+    with pytest.raises(ValueError, match="flat"):
+        run_rounds(algo, state, batch, 2, compression="int8", flat=False)
+    with pytest.raises(ValueError, match="identity"):
+        run_rounds(algo, state, batch, 2, compression="none",
+                   error_feedback=True)
+    with pytest.raises(ValueError, match="lossy"):
+        run_rounds(algo, state, batch, 2, error_feedback=True)
+
+
+# -------------------------------------------------------- byte-accurate clock
+def test_clock_bandwidth_validation():
+    with pytest.raises(ValueError, match="bandwidth"):
+        ComputeClock(4, bandwidth_bps=-1.0)
+    with pytest.raises(ValueError, match="bandwidth"):
+        ComputeClock(4).with_wire(10, 10)
+
+
+def test_byte_clock_goldens(problem):
+    """Hand-computed wire accounting for an equal-speed fleet: every
+    client arrives every round, so per round bytes_up = M * uplink,
+    bytes_down = M * downlink, and rounds fire every
+    compute_s + (uplink + downlink)/bandwidth simulated seconds."""
+    _, batch = problem
+    bw = 1.0e4
+    n = N  # LeastSquares(N): the model is one (N,) weight vector
+    for name, kw, wire_up in [
+        ("none", dict(compression="none"), HEADER_BYTES + 4 * n),
+        ("bf16", dict(compression="bf16"), HEADER_BYTES + 2 * n),
+        ("int8", dict(compression="int8", error_feedback=True),
+         HEADER_BYTES + 8 + n),
+        ("topk", dict(compression="topk", topk_frac=0.25,
+                      error_feedback=True), HEADER_BYTES + 8 * 5),
+    ]:
+        algo, state = _make(problem, "fedgia_diag")
+        res = run_rounds(algo, state, batch, 6,
+                         clock=ComputeClock(M, compute_s=1.0,
+                                            bandwidth_bps=bw),
+                         max_staleness=2, **kw)
+        wire_down = HEADER_BYTES + 4 * n
+        np.testing.assert_array_equal(
+            res.history["bytes_up"], np.full(6, M * wire_up, np.float32),
+            err_msg=name)
+        np.testing.assert_array_equal(
+            res.history["bytes_down"], np.full(6, M * wire_down, np.float32),
+            err_msg=name)
+        dur = 1.0 + (wire_up + wire_down) / bw
+        np.testing.assert_allclose(res.history["sim_time"],
+                                   dur * np.arange(6), rtol=1e-6,
+                                   err_msg=name)
+
+
+def test_byte_metrics_follow_arrivals(problem):
+    """Heterogeneous speeds: per-round bytes are n_arrived * wire — the
+    byte counters ride the same arrival mask as `selected`."""
+    algo, state = _make(problem, "fedgia_diag")
+    _, batch = problem
+    speeds = np.where(np.arange(M) % 2 == 0, 1.0, 3.0)
+    res = run_rounds(algo, state, batch, ROUNDS,
+                     clock=ComputeClock(M, compute_s=speeds,
+                                        bandwidth_bps=1.0e4),
+                     max_staleness=8, compression="int8", error_feedback=True)
+    up, down = HEADER_BYTES + 8 + N, HEADER_BYTES + 4 * N
+    np.testing.assert_array_equal(res.history["bytes_up"],
+                                  res.history["selected"] * up)
+    np.testing.assert_array_equal(res.history["bytes_down"],
+                                  res.history["selected"] * down)
+
+
+def test_no_bandwidth_means_no_byte_metrics_and_bitwise_clock(problem):
+    """`bandwidth_bps=None` (the default) is the PR-4/5 clock: no byte
+    keys in the history, and the run is bitwise the pre-compression
+    engine (the wire term is never materialized)."""
+    algo, state = _make(problem, "fedavg")
+    _, batch = problem
+    clk = lambda: ComputeClock(M, compute_s=1.0 + (np.arange(M) % 3))
+    ref = run_rounds(algo, state, batch, ROUNDS, clock=clk(), max_staleness=2)
+    res = run_rounds(algo, state, batch, ROUNDS, clock=clk(), max_staleness=2,
+                     compression="none")
+    assert "bytes_up" not in ref.history and "bytes_up" not in res.history
+    _assert_bitwise(res, ref)
+
+
+def test_wallclock_baseline_row_reproduced_bitwise():
+    """The committed BENCH_wallclock.baseline.json rows must not move:
+    re-running the benchmark's (fedgia_d, spread=4, uniform) cell with
+    the compression-era engine reproduces cr / sim_time_s / obj exactly
+    (simulated time is deterministic — any drift is an algorithmic
+    change to the uncompressed clocked round)."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    sys.path.insert(0, root)
+    try:
+        from benchmarks.common import M_CLIENTS, make_problem
+        from benchmarks.wallclock_bench import (ALGOS, K0, MAX_STALENESS,
+                                                straggler_speeds)
+    finally:
+        sys.path.remove(root)
+    with open(os.path.join(root, "benchmarks", "baselines",
+                           "BENCH_wallclock.baseline.json")) as f:
+        base = json.load(f)
+    row = next(r for r in base["rows"]
+               if r["algo"] == "fedgia_d" and r["spread"] == 4.0
+               and r["weighting"] == "uniform")
+    assert row["converged"], "baseline cell must be a converged run"
+    model, batch, tol = make_problem("linreg", 0)
+    fed = FedConfig(num_clients=M_CLIENTS, k0=K0, **ALGOS["fedgia_d"])
+    algo = make_algorithm(fed, model.loss, model=model)
+    state = algo.init(model.init(jax.random.PRNGKey(0)),
+                      jax.random.PRNGKey(1), init_batch=batch)
+    clk = ComputeClock(M_CLIENTS, straggler_speeds(M_CLIENTS, 4.0))
+    res = run_rounds(algo, state, batch, base["max_rounds"], tol=tol,
+                     clock=clk, max_staleness=MAX_STALENESS,
+                     stale_weighting="uniform")
+    assert res.stopped_early
+    assert 2 * res.rounds_run == row["cr"]
+    assert float(res.history["sim_time"][-1]) == row["sim_time_s"]
+    assert float(res.history["f_xbar"][-1]) == row["obj"]
+
+
+# ------------------------------------- sharded: ONE model-size all-reduce
+_SHARDED_COMPRESSED_SCRIPT = textwrap.dedent(
+    """
+    import re
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.config import FedConfig
+    from repro.core import api, compress, engine, make_algorithm, run_rounds
+    from repro.data import linreg_noniid
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import LeastSquares
+    from repro.utils import pytree as pt
+
+    m, n, d = 8, 24, 320
+    batch = {k: jnp.asarray(v) for k, v in linreg_noniid(0, d, n, m).items()}
+    model = LeastSquares(n)
+    mesh = make_host_mesh(data=8)
+    comp = compress.make_compressor("int8", error_feedback=True)
+
+    def model_size_all_reduces(algo_name):
+        fed = FedConfig(algorithm=algo_name, num_clients=m, k0=3, alpha=1.0,
+                        sigma_t=0.3, h_policy="diag_ema", lr=0.01)
+        algo = make_algorithm(fed, model.loss, model=model)
+        s0 = algo.init(model.init(jax.random.PRNGKey(0)),
+                       jax.random.PRNGKey(1), init_batch=batch)
+        spec = pt.ravel_spec(s0["x"])
+        s0f = engine.flatten_state(algo, s0, spec)
+        s0f["ef"] = jnp.zeros((m, spec.padded_size), spec.dtype)
+        rf = engine.make_round_fn(algo, mesh, masked=True, flat_spec=spec,
+                                  compressor=comp)
+        st, b = engine.shard_inputs(algo, s0f, batch, mesh)
+        args = (st, b, jnp.ones((m,), bool))
+        txt = jax.jit(rf).lower(*args).compile().as_text()
+        shapes = re.findall(r"= (\\S+) all-reduce\\(", txt)
+        return sum(1 for s in shapes if re.search(r"\\[\\d", s))
+
+    for name in ("fedgia", "fedavg", "fedprox", "fedpd", "scaffold"):
+        cnt = model_size_all_reduces(name)
+        assert cnt == 1, (name, cnt)
+
+    # the compressed sharded RUN matches the compressed single-device run:
+    # per-client stochastic keys derive from GLOBAL row ids, so each
+    # client draws the same rounding noise whatever the sharding
+    fed = FedConfig(algorithm="fedgia", num_clients=m, k0=3, alpha=1.0,
+                    sigma_t=0.3, h_policy="diag_ema")
+    algo = make_algorithm(fed, model.loss, model=model)
+    s0 = algo.init(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(1),
+                   init_batch=batch)
+    kw = dict(compression="int8", error_feedback=True)
+    ref = run_rounds(algo, s0, batch, 10, **kw)
+    res = run_rounds(algo, s0, batch, 10, mesh=mesh, **kw)
+    for k in ref.history:
+        np.testing.assert_allclose(res.history[k], ref.history[k],
+                                   rtol=1e-4, atol=1e-6, err_msg=k)
+    print("COMPRESSED_SHARDED_OK one model-size all-reduce for all five")
+    """
+)
+
+
+def test_compressed_sharded_one_all_reduce_and_parity():
+    """Decompress-before-reduce: the codec is shard-local encode+decode,
+    so the compressed round still lowers to exactly ONE model-size
+    all-reduce for ALL FIVE algorithms, and the sharded compressed run
+    matches single-device."""
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARDED_COMPRESSED_SCRIPT],
+        env=fake_device_env(8), capture_output=True, text=True, timeout=900,
+    )
+    assert "COMPRESSED_SHARDED_OK" in out.stdout, out.stdout + out.stderr

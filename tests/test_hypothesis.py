@@ -1,0 +1,181 @@
+"""Property tests for the flat round-state containers (utils/pytree.py).
+
+The flat engine rests on two data-layout contracts: `RavelSpec` (the
+lane-padded ravel of the model pytree PR-5 built the comm buffer on) and
+`ActiveSet` (the packed participant tile of the active client store).
+This suite drives both with randomized shapes, dtypes and masks —
+including the lane-boundary edges N % LANES in {0, 1, LANES-1} — where
+the deterministic tests in test_flat.py / test_store.py pin single
+examples.
+
+`hypothesis` is an optional dev dependency (requirements-dev.txt); the
+profiles (deadline=None, derandomized under HYPOTHESIS_PROFILE=ci) live
+in conftest.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.utils import pytree as pt
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+_DTYPES = [np.float32, np.float16, np.int32]
+
+
+@st.composite
+def leaf_specs(draw):
+    """1-4 leaves, each a 0-3 dim shape of small axes, mixed dtypes.
+    Values are small integers, exactly representable in every dtype the
+    spec's promotion can pick — so ravel->unravel must be EXACT."""
+    n_leaves = draw(st.integers(1, 4))
+    out = []
+    for i in range(n_leaves):
+        shape = tuple(draw(st.lists(st.integers(1, 7), min_size=0,
+                                    max_size=3)))
+        dtype = draw(st.sampled_from(_DTYPES))
+        out.append((f"leaf{i}", shape, dtype))
+    return out
+
+
+def _build_tree(specs, seed, stack=None):
+    r = np.random.default_rng(seed)
+    tree = {}
+    for name, shape, dtype in specs:
+        full = ((stack,) if stack else ()) + shape
+        tree[name] = jnp.asarray(
+            r.integers(-100, 100, size=full).astype(dtype))
+    return tree
+
+
+@given(specs=leaf_specs(), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_ravel_unravel_roundtrip(specs, seed):
+    tree = _build_tree(specs, seed)
+    spec = pt.ravel_spec(tree)
+    assert spec.size == sum(int(np.prod(s)) for _, s, _ in specs)
+    assert spec.padded_size % pt.LANES == 0
+    assert spec.padded_size >= spec.size > spec.padded_size - pt.LANES
+    flat = spec.ravel(tree)
+    assert flat.shape == (spec.padded_size,)
+    if spec.padded_size > spec.size:  # zero tail, exactly
+        assert float(jnp.abs(flat[spec.size:]).max()) == 0.0
+    back = spec.unravel(flat)
+    for k in tree:
+        assert back[k].dtype == tree[k].dtype
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]), err_msg=k)
+
+
+@given(specs=leaf_specs(), seed=st.integers(0, 2**16), m=st.integers(1, 5))
+@settings(**SETTINGS)
+def test_ravel_stacked_roundtrip(specs, seed, m):
+    stacked = _build_tree(specs, seed, stack=m)
+    spec = pt.ravel_spec({k: v[0] for k, v in stacked.items()})
+    flat = spec.ravel_stacked(stacked)
+    assert flat.shape == (m, spec.padded_size)
+    back = spec.unravel_stacked(flat)
+    for k in stacked:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(stacked[k]), err_msg=k)
+
+
+@given(q=st.integers(1, 3), r=st.sampled_from([0, 1, pt.LANES - 1]),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_ravel_lane_boundary_sizes(q, r, seed):
+    """N % LANES in {0, 1, LANES-1}: exact multiple (no padding), one
+    element past a boundary (maximal padding), one short of a boundary
+    (single padding lane)."""
+    n = q * pt.LANES + r
+    tree = {"w": jnp.asarray(
+        np.random.default_rng(seed).standard_normal(n), jnp.float32)}
+    spec = pt.ravel_spec(tree)
+    assert spec.size == n
+    assert spec.padded_size == (n if r == 0 else (q + 1) * pt.LANES)
+    flat = spec.ravel(tree)
+    if r:
+        assert float(jnp.abs(flat[n:]).max()) == 0.0
+    np.testing.assert_array_equal(np.asarray(spec.unravel(flat)["w"]),
+                                  np.asarray(tree["w"]))
+
+
+# ------------------------------------------------------------------ ActiveSet
+@st.composite
+def masks(draw):
+    m = draw(st.integers(1, 16))
+    bits = draw(st.lists(st.booleans(), min_size=m, max_size=m))
+    pop = sum(bits)
+    capacity = draw(st.integers(max(1, pop), m))
+    return np.asarray(bits, bool), capacity
+
+
+@given(mc=masks())
+@settings(**SETTINGS)
+def test_active_set_pack_invariants(mc):
+    mask, capacity = mc
+    m = mask.shape[0]
+    aset = pt.make_active_set(jnp.asarray(mask), capacity)
+    idx = np.asarray(aset.idx)
+    # packed ids: the mask's True rows in ascending order, sentinel-padded
+    np.testing.assert_array_equal(idx[: mask.sum()], np.nonzero(mask)[0])
+    assert (idx[mask.sum():] == m).all()
+    np.testing.assert_array_equal(np.asarray(aset.valid), idx < m)
+    assert float(aset.count) == float(mask.sum())
+    assert aset.capacity == capacity and aset.num_clients == m
+
+
+@given(mc=masks(), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_active_gather_scatter_identity(mc, seed):
+    """scatter(buf, gather(buf)) == buf bitwise: padding rows carry the
+    sentinel index and are dropped, resident rows rewrite themselves."""
+    mask, capacity = mc
+    m = mask.shape[0]
+    buf = jnp.asarray(
+        np.random.default_rng(seed).standard_normal((m, 5)), jnp.float32)
+    aset = pt.make_active_set(jnp.asarray(mask), capacity)
+    out = aset.scatter(buf, aset.gather(buf))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(buf))
+
+
+@given(mc=masks(), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_active_scatter_touches_exactly_masked_rows(mc, seed):
+    """Writing a modified tile back changes the participant rows and
+    NOTHING else — the dense masked_update freeze, row for row."""
+    mask, capacity = mc
+    m = mask.shape[0]
+    buf = jnp.asarray(
+        np.random.default_rng(seed).standard_normal((m, 4)), jnp.float32)
+    aset = pt.make_active_set(jnp.asarray(mask), capacity)
+    out = np.asarray(aset.scatter(buf, aset.gather(buf) + 1.0))
+    expect = np.asarray(buf) + mask[:, None].astype(np.float32)
+    np.testing.assert_array_equal(out, expect)
+
+
+@given(mc=masks(), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_active_zero_invalid_matches_dense_masked_sum(mc, seed):
+    """Reductions over the zeroed tile equal the dense masked reductions
+    BITWISE (ascending pack + exact-zero padding rows — the active
+    store's aggregation contract)."""
+    mask, capacity = mc
+    m = mask.shape[0]
+    buf = jnp.asarray(
+        np.random.default_rng(seed).standard_normal((m, 3)), jnp.float32)
+    aset = pt.make_active_set(jnp.asarray(mask), capacity)
+    tile = aset.zero_invalid(aset.gather(buf))
+    dense = jnp.where(jnp.asarray(mask)[:, None], buf, 0.0)
+    # pad the dense operand list to the tile's row count: summing zeros
+    # in a different order could differ bitwise, so compare via sorted
+    # nonzero rows instead — ascending pack preserves row order exactly
+    np.testing.assert_array_equal(
+        np.asarray(tile)[: mask.sum()], np.asarray(dense)[mask])
+    np.testing.assert_array_equal(
+        np.asarray(tile)[mask.sum():],
+        np.zeros((capacity - mask.sum(), 3), np.float32))

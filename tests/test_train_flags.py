@@ -57,6 +57,24 @@ def _args(*extra):
     (["--store", "active", "--no-flat"],
      "--store active packs the flat"),
     (["--store", "active"], "--store active needs a per-round participant"),
+    # codecs run on the flat comm buffer; EF needs a lossy codec to carry
+    # a residual for; topk-frac belongs to topk and must be a fraction
+    (["--compression", "int8", "--no-flat"],
+     "--compression runs on the flat"),
+    (["--error-feedback"], "needs a lossy --compression"),
+    (["--error-feedback", "--compression", "none"],
+     "needs a lossy --compression"),
+    (["--topk-frac", "0.5"], "--topk-frac requires --compression topk"),
+    (["--compression", "int8", "--topk-frac", "0.5"],
+     "--topk-frac requires --compression topk"),
+    (["--compression", "topk", "--topk-frac", "0.0"],
+     "--topk-frac must be in"),
+    (["--compression", "topk", "--topk-frac", "1.5"],
+     "--topk-frac must be in"),
+    # byte-accurate comm time needs a positive rate and a clock to price
+    (["--clock", "constant", "--bandwidth-bps", "-4000"],
+     "--bandwidth-bps must be > 0"),
+    (["--bandwidth-bps", "4000"], "--bandwidth-bps prices the wire"),
 ])
 def test_rejected_flag_combinations(argv, match):
     with pytest.raises(SystemExit, match=match):
@@ -116,6 +134,30 @@ def test_store_resolved():
     parsed = validate_flags(_args("--participation", "uniform",
                                   "--store", "active", "--chunk", "auto"))
     assert parsed["store"] == "active" and parsed["chunk"] == "auto"
+
+
+def test_compression_knobs_resolved():
+    # "none" resolves to no compressor (the bitwise escape) and no bytes
+    parsed = validate_flags(_args())
+    assert parsed["compression"] is None
+    assert parsed["bandwidth_bps"] is None
+    parsed = validate_flags(_args("--compression", "int8",
+                                  "--error-feedback"))
+    assert parsed["compression"] == "int8" and parsed["error_feedback"]
+    # topk default fraction applies only when the flag is omitted
+    parsed = validate_flags(_args("--compression", "topk"))
+    assert parsed["topk_frac"] == 0.1
+    parsed = validate_flags(_args("--compression", "topk",
+                                  "--topk-frac", "0.25"))
+    assert parsed["topk_frac"] == 0.25
+    # the byte clock composes with a codec and with the raw fp32 wire
+    parsed = validate_flags(_args("--clock", "constant",
+                                  "--bandwidth-bps", "4000"))
+    assert parsed["bandwidth_bps"] == 4000.0 and parsed["async_rounds"]
+    parsed = validate_flags(_args("--compression", "bf16", "--clock",
+                                  "constant", "--bandwidth-bps", "4000"))
+    assert parsed["compression"] == "bf16"
+    assert parsed["bandwidth_bps"] == 4000.0
 
 
 def test_flat_and_kernel_knobs_resolved():

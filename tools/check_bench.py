@@ -105,24 +105,27 @@ def check(current: dict, baseline: dict, max_slowdown: float,
 
 
 def load_wallclock_rows(path: Path) -> dict:
-    """Index a BENCH_wallclock.json dump by (algo, spread, weighting)."""
+    """Index a BENCH_wallclock.json dump by (algo, spread, weighting,
+    codec). Pre-compression dumps have no codec field — they key as
+    "none", so old baselines stay comparable."""
     with open(path) as f:
         data = json.load(f)
     rows = data.get("rows")
     if rows is None:
         raise SystemExit(f"{path}: no wall-clock benchmark rows found")
-    return {(r["algo"], float(r["spread"]), r["weighting"]): r for r in rows}
+    return {(r["algo"], float(r["spread"]), r["weighting"],
+             r.get("codec", "none")): r for r in rows}
 
 
 def check_wallclock(current: dict, baseline: dict, max_slowdown: float,
                     warn_slowdown: float) -> int:
     """Gate simulated time-to-target per (algo, spread, weighting) row."""
     failures = warnings = 0
-    print(f"{'algo':<10} {'spread':>6} {'weighting':>9} "
+    print(f"{'algo':<12} {'spread':>6} {'weighting':>9} {'codec':>5} "
           f"{'base t2t':>10} {'cur t2t':>10} {'slowdown':>10}  verdict")
     for key, base in sorted(baseline.items()):
-        algo, spread, weighting = key
-        label = f"{algo:<10} {spread:>6g} {weighting:>9}"
+        algo, spread, weighting, codec = key
+        label = f"{algo:<12} {spread:>6g} {weighting:>9} {codec:>5}"
         cur = current.get(key)
         if cur is None:
             print(f"{label} {'-':>10} {'MISSING':>10} {'-':>10}  "
@@ -150,7 +153,8 @@ def check_wallclock(current: dict, baseline: dict, max_slowdown: float,
         print(f"{label} {base['sim_time_s']:>10.2f} "
               f"{cur['sim_time_s']:>10.2f} {slowdown:>9.2f}x  {verdict}")
     for key in sorted(set(current) - set(baseline)):
-        print(f"{key[0]:<10} {key[1]:>6g} {key[2]:>9} new (not in baseline)")
+        print(f"{key[0]:<12} {key[1]:>6g} {key[2]:>9} {key[3]:>5} "
+              f"new (not in baseline)")
     if failures:
         print(f"\n{failures} wall-clock row(s) regressed — sim_time is "
               f"deterministic, so this is an algorithmic change; if "
