@@ -39,6 +39,17 @@ the distinct algo name `fedgia_d_bw` so the gate keys stay unique.
 main() asserts at least one lossy codec beats `none` on sim_time — the
 codec's extra rounds (if any) must cost less than the bytes it saves.
 
+The OVERLAP section prices the eq.-(11)-behind-compute claim
+(docs/engine.md#overlapped-collectives): the same wire-dominated regime
+run twice, `overlap="off"` (barrier pricing — compute then wire, in
+series) vs `overlap="scatter"`, under which the engine installs
+``clock.with_overlap()`` and each round costs ``max(compute, comm)``
+instead of their sum — i.e. the round is credited ``min(compute_s,
+comm_s)`` of hidden latency. Rows carry the distinct algo names
+`fedgia_d_ovl_off` / `fedgia_d_ovl_on` so the check_bench gate keys
+stay unique; main() asserts the scatter row reaches the target in
+strictly less simulated time than the barrier row.
+
 `main()` writes BENCH_wallclock.json (path: WALLCLOCK_BENCH_JSON) and
 returns the rows for benchmarks/run.py. Env knobs for CI budgets:
 WALLCLOCK_MAX_ROUNDS (default 400).
@@ -159,8 +170,48 @@ def run_compression():
     return rows
 
 
+def run_overlap():
+    """Time-to-target with eq. (11) hidden behind compute: the
+    compression section's wire-dominated regime (raw fp32 codec), run
+    with `overlap="off"` — barrier pricing, compute and wire in series
+    — and with `overlap="scatter"`, under which the engine installs
+    ``clock.with_overlap()`` and each round costs ``max(compute, comm)``
+    — crediting ``min(compute_s, comm_s)`` of hidden latency per round.
+    The trajectories agree to fp tolerance (tests/test_overlap.py), so
+    any sim_time gap is pure latency hiding, not an algorithmic edge."""
+    rows = []
+    model, batch, _ = make_problem("linreg", 0)
+    fed = FedConfig(num_clients=M_CLIENTS, k0=K0, **ALGOS["fedgia_d"])
+    algo = make_algorithm(fed, model.loss, model=model)
+    state = algo.init(model.init(jax.random.PRNGKey(0)),
+                      jax.random.PRNGKey(1), init_batch=batch)
+    for algo_key, overlap in (("fedgia_d_ovl_off", "off"),
+                              ("fedgia_d_ovl_on", "scatter")):
+        clk = ComputeClock(M_CLIENTS, compute_s=COMPRESS_COMPUTE_S,
+                           bandwidth_bps=BANDWIDTH_BPS)
+        res = run_rounds(algo, state, batch, MAX_ROUNDS,
+                         tol=COMPRESS_TARGET_F, tol_metric="f_xbar",
+                         clock=clk, max_staleness=MAX_STALENESS,
+                         stale_weighting="uniform", overlap=overlap)
+        rows.append({
+            "algo": algo_key,
+            "spread": 1.0,
+            "weighting": "uniform",
+            "codec": "none",
+            "overlap": overlap,
+            "cr": 2 * res.rounds_run,
+            "sim_time_s": float(res.history["sim_time"][-1]),
+            "bytes_up_total": float(np.sum(res.history["bytes_up"])),
+            "bytes_down_total": float(np.sum(res.history["bytes_down"])),
+            "staleness_seen": int(res.history["staleness_max"].max()),
+            "obj": float(res.history["f_xbar"][-1]),
+            "converged": res.stopped_early,
+        })
+    return rows
+
+
 def main():
-    rows = run() + run_compression()
+    rows = run() + run_compression() + run_overlap()
     print("algo,spread,weighting,codec,CR,sim_time_s,staleness_seen,obj,"
           "converged")
     for r in rows:
@@ -195,6 +246,13 @@ def main():
                  for c, _ in CODECS if c != "none"]
         assert any(r["converged"] and r["sim_time_s"] < raw["sim_time_s"]
                    for r in lossy), (raw, lossy)
+        # overlapped collectives: hiding eq. (11) behind compute must buy
+        # strictly less simulated time-to-target than the barrier round —
+        # the trajectories agree to fp tolerance, so the gap is latency
+        ovl_off = by_key[("fedgia_d_ovl_off", 1.0, "uniform", "none")]
+        ovl_on = by_key[("fedgia_d_ovl_on", 1.0, "uniform", "none")]
+        assert ovl_off["converged"] and ovl_on["converged"], (ovl_off, ovl_on)
+        assert ovl_on["sim_time_s"] < ovl_off["sim_time_s"], (ovl_off, ovl_on)
     out = {
         "max_rounds": MAX_ROUNDS,
         "clients": M_CLIENTS,

@@ -464,6 +464,171 @@ def flat_round_aggregate_active(contrib_tile, grads_tile, losses_tile,
     return out
 
 
+def flat_overlap_consensus(slot: jax.Array) -> jax.Array:
+    """Materialise the consensus from the overlap carry slot
+    (``run_rounds(overlap="scatter")``): the deferred half of eq. (11).
+
+    ``slot`` holds the PREVIOUS round's aggregation results as normalised
+    (rows, N) means — row 0 is x̄, extra rows are algorithm riders
+    (SCAFFOLD's control-variate delta). Under client sharding each shard
+    carries only its (rows, N/shards) column chunk (the output layout of
+    :func:`flat_overlap_aggregate`'s reduce-scatter), and this helper is
+    the round's one model-size `all_gather` — issued at the round TOP, so
+    XLA can overlap the previous round's reduce-scatter with the compute
+    between them. Unsharded the slot is already the full buffer and this
+    is the identity (the overlap pipeline is then a pure carry-layout
+    change: bitwise the barrier round, tests/test_overlap.py)."""
+    if _CLIENT_AXIS is None:
+        return slot
+    return jax.lax.all_gather(slot, _CLIENT_AXIS[0], axis=1, tiled=True)
+
+
+def flat_overlap_aggregate(contrib, grads, losses, sel_vec, spec,
+                           mask: Optional[jax.Array] = None,
+                           weights: Optional[jax.Array] = None,
+                           extra_mean: Optional[jax.Array] = None):
+    """Eq. (11) as the EARLY half of the split collective: reduce this
+    round's contributions into the next round's carry slot, in ONE
+    model-size `reduce-scatter` (`run_rounds(overlap="scatter")`).
+
+    The overlap twin of :func:`flat_round_aggregate`: same arguments, but
+    instead of returning the replicated aggregate it returns
+    ``(slot', grad_sq_norm, f_mean, n_sel)`` where ``slot'`` is the new
+    carry slot — row 0 the normalised contribution mean, optional
+    ``extra_mean`` rows next (all-client means). The NEXT round reads the
+    consensus back via :func:`flat_overlap_consensus`'s all-gather, so a
+    round issues exactly one reduce-scatter (here, at the round END) plus
+    one all-gather (at the round TOP) and ZERO model-size all-reduces —
+    the two halves of eq. (11)'s psum, pulled apart so the local compute
+    between them hides the wire (HLO-asserted in tests/test_overlap.py).
+
+    The gradient-norm diagnostic cannot call :func:`flat_grad_sq_norm`
+    here — its psum_scatter would be a SECOND model-size reduce-scatter —
+    so the raw gradient sum rides as one more stacked row: each shard
+    squares its column chunk of the scattered sum and a scalar psum
+    (riding with the loss/selected/weight scalars) yields ||Σ∇f_i/m||².
+
+    Unsharded this DELEGATES to :func:`flat_round_aggregate` and stacks
+    its outputs into the slot — the overlapped engine is then bitwise the
+    barrier engine (the slot is written at round end and read unchanged
+    at the next round top). Under sharding the reduce-scatter splits
+    eq. (11)'s sum across shards column-wise, which reassociates the
+    reduction exactly like the fused psum does — fp tolerance vs
+    unsharded, same caveat as :func:`flat_round_aggregate`."""
+    if _CLIENT_AXIS is None:
+        out = flat_round_aggregate(contrib, grads, losses, sel_vec, spec,
+                                   mask=mask, weights=weights,
+                                   extra_mean=extra_mean)
+        rows = [out[0]] if extra_mean is None else [out[0], out[4]]
+        return jnp.stack(rows), out[1], out[2], out[3]
+    name, shards = _CLIENT_AXIS
+    m_global = contrib.shape[0] * shards
+    n = contrib.shape[-1]
+    assert n % shards == 0, (
+        f"overlap reduce-scatter needs padded_size {n} divisible by "
+        f"{shards} shards (run_rounds validates this at setup)")
+    if weights is not None:
+        w = weights.astype(jnp.float32)
+        if mask is not None:
+            w = jnp.where(mask, w, 0.0)
+        num = jnp.sum(w[:, None].astype(contrib.dtype) * contrib, axis=0)
+        den = jnp.sum(w)
+    elif mask is not None:
+        num = jnp.sum(jnp.where(mask[:, None], contrib, 0), axis=0)
+        den = jnp.sum(mask.astype(jnp.float32))
+    else:
+        num = jnp.sum(contrib, axis=0)
+        den = None  # static m_global, no rider needed
+    rows = [num]
+    if extra_mean is not None:
+        rows.append(jnp.sum(extra_mean, axis=0).astype(num.dtype))
+    g_sum = jnp.sum(grads, axis=0)
+    stacked = jnp.stack(rows + [g_sum.astype(num.dtype)])
+    # the round's ONE model-size reduce-scatter: every shard receives its
+    # contiguous column chunk of the globally-summed rows
+    chunks = jax.lax.psum_scatter(stacked, name, scatter_dimension=1,
+                                  tiled=True)
+    g_chunk = chunks[-1]
+    scalars = (jnp.vdot(g_chunk, g_chunk), jnp.sum(losses),
+               jnp.sum(sel_vec))
+    if den is not None:
+        scalars = scalars + (den,)
+    red = jax.lax.psum(scalars, name)  # scalar riders, not model-size
+    den_red = (red[3].astype(chunks.dtype) if den is not None
+               else jnp.asarray(m_global, chunks.dtype))
+    slot_rows = [chunks[0] / den_red]
+    if extra_mean is not None:
+        slot_rows.append(chunks[1] / m_global)
+    gsq = red[0] / jnp.float32(m_global) ** 2
+    return jnp.stack(slot_rows), gsq, red[1] / m_global, red[2]
+
+
+def flat_overlap_aggregate_active(contrib_tile, grads_tile, losses_tile,
+                                  active, spec,
+                                  weights: Optional[jax.Array] = None,
+                                  extra_mean_tile: Optional[jax.Array] = None):
+    """Active-store twin of :func:`flat_overlap_aggregate`: the packed
+    (capacity, N) participant tile reduced into the next round's carry
+    slot with ONE model-size reduce-scatter.
+
+    Same argument contract as :func:`flat_round_aggregate_active` (tile
+    rows in ``active.idx`` order, dense ``weights``); returns
+    ``(slot', grad_sq_norm, f_mean, n_sel)`` with the participant
+    diagnostics of the active store (loss mean and gradient norm over the
+    clients the server actually contacted). Unsharded it DELEGATES to the
+    barrier aggregate — bitwise the active barrier round. Under sharding
+    the zeroed tile sums ride the stacked reduce-scatter and the
+    participant count/weight sum ride the scalar psum, so the round keeps
+    the one-RS + one-AG collective budget of the dense overlap round."""
+    if _CLIENT_AXIS is None:
+        out = flat_round_aggregate_active(contrib_tile, grads_tile,
+                                          losses_tile, active, spec,
+                                          weights=weights,
+                                          extra_mean_tile=extra_mean_tile)
+        rows = [out[0]] if extra_mean_tile is None else [out[0], out[4]]
+        return jnp.stack(rows), out[1], out[2], out[3]
+    name, shards = _CLIENT_AXIS
+    m_global = active.num_clients * shards
+    contrib_z = active.zero_invalid(contrib_tile)
+    n = contrib_z.shape[-1]
+    assert n % shards == 0, (
+        f"overlap reduce-scatter needs padded_size {n} divisible by "
+        f"{shards} shards (run_rounds validates this at setup)")
+    if weights is not None:
+        w_t = jnp.where(
+            active.valid,
+            active.gather(jnp.where(active.mask, weights, 0.0)).astype(
+                jnp.float32
+            ),
+            0.0,
+        )
+        num = jnp.sum(w_t[:, None].astype(contrib_z.dtype) * contrib_z,
+                      axis=0)
+        den = jnp.sum(w_t)
+    else:
+        num = jnp.sum(contrib_z, axis=0)
+        den = active.count
+    rows = [num]
+    if extra_mean_tile is not None:
+        rows.append(
+            jnp.sum(active.zero_invalid(extra_mean_tile), axis=0).astype(
+                num.dtype))
+    g_sum = jnp.sum(active.zero_invalid(grads_tile), axis=0)
+    stacked = jnp.stack(rows + [g_sum.astype(num.dtype)])
+    # the round's ONE model-size reduce-scatter
+    chunks = jax.lax.psum_scatter(stacked, name, scatter_dimension=1,
+                                  tiled=True)
+    g_chunk = chunks[-1]
+    loss_sum = jnp.sum(active.zero_invalid(losses_tile))
+    scalars = (jnp.vdot(g_chunk, g_chunk), loss_sum, active.count, den)
+    red = jax.lax.psum(scalars, name)  # scalar riders, not model-size
+    slot_rows = [chunks[0] / red[3].astype(chunks.dtype)]
+    if extra_mean_tile is not None:
+        slot_rows.append(chunks[1] / m_global)
+    gsq = red[0] / red[2].astype(jnp.float32) ** 2
+    return jnp.stack(slot_rows), gsq, red[1] / red[2], red[2]
+
+
 def _compress_row_ids(m_local: int) -> jax.Array:
     """GLOBAL client row ids for this shard's (m_local,) block — the
     stochastic-rounding key of client i must be the same whether the

@@ -100,7 +100,7 @@ class FedAvg:
 
     # ------------------------------------------------------------ flat round
     def round_flat(self, state, batch, spec, mask=None, stale=None,
-                   compressor=None):
+                   compressor=None, donate_kernel=False):
         """`round` on the flat (m, N) trajectory buffer (engine flat=True):
         the k0 local steps update one contiguous array, the gradient
         evaluation is the only pytree boundary
@@ -108,13 +108,27 @@ class FedAvg:
         ride ONE fused reduction (`api.flat_round_aggregate`) — eq. (11)
         as the round's single model-size all-reduce under sharding.
         `compressor` routes the uploaded trajectory through the codec
-        (decompress-before-reduce, `common.compress_contrib`)."""
+        (decompress-before-reduce, `common.compress_contrib`).
+
+        Overlap (engine-seeded `state["ovl_shard"]`): the round's anchor
+        is the all-gather of LAST round's reduce-scattered upload mean
+        (`api.flat_overlap_consensus`) — the exact value `state["x"]`
+        would hold at a barrier — and the round end reduce-scatters this
+        round's trajectories (`api.flat_overlap_aggregate`) instead of
+        all-reducing them, so the wire hides behind the next round's k0
+        local steps. `state["x"]` lags one round (the engine's
+        `overlap_finalize` default gathers the pending slot at run end).
+        `donate_kernel` is accepted for round-fn uniformity (FedAvg has
+        no Pallas hot path) and ignored."""
         fed = self.fed
         m = api.local_client_count(fed.num_clients)
+        ovl = state.get("ovl_shard")
+        anchor_x = (state["x"] if ovl is None
+                    else api.flat_overlap_consensus(ovl)[0])
         if stale is None:
-            xc = broadcast_clients(state["x"], m)
+            xc = broadcast_clients(anchor_x, m)
         else:
-            xc, stale = api.stale_xbar_view(stale, state["x"], mask)
+            xc, stale = api.stale_xbar_view(stale, anchor_x, mask)
         fvg = flat_value_and_grad(self._vg_stacked, spec)
 
         def local_step(carry, j):
@@ -134,15 +148,25 @@ class FedAvg:
         )
         xc_up, ef_new = compress_contrib(compressor, state, xc_new, spec,
                                          mask=mask)
-        x_new, gsq, f_mean, n_sel = api.flat_round_aggregate(
-            xc_up, grads0, losses0, participation_vec(losses0, mask), spec,
-            mask=mask, weights=api.stale_weights(stale),
-        )
+        if ovl is None:
+            x_new, gsq, f_mean, n_sel = api.flat_round_aggregate(
+                xc_up, grads0, losses0, participation_vec(losses0, mask),
+                spec, mask=mask, weights=api.stale_weights(stale),
+            )
+        else:
+            slot, gsq, f_mean, n_sel = api.flat_overlap_aggregate(
+                xc_up, grads0, losses0, participation_vec(losses0, mask),
+                spec, mask=mask, weights=api.stale_weights(stale),
+            )
+            x_new = anchor_x  # the consensus just consumed; next one is
+            # in flight in the slot until the next round's all-gather
 
         new_state = dict(state)
         new_state.update(
             x=x_new, round=state["round"] + 1, step=state["step"] + fed.k0
         )
+        if ovl is not None:
+            new_state["ovl_shard"] = slot
         if ef_new is not None:
             new_state["ef"] = ef_new
         metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
@@ -153,7 +177,7 @@ class FedAvg:
 
     # ----------------------------------------------------- active-set round
     def round_flat_active(self, state, batch, spec, active, stale=None,
-                          compressor=None):
+                          compressor=None, donate_kernel=False):
         """`round_flat` on the packed participant tile (store="active"):
         the k0 local trajectories exist only for the (capacity,) gathered
         clients, so the round's working set is (capacity, N) instead of
@@ -164,10 +188,13 @@ class FedAvg:
         fed = self.fed
         cap = active.capacity
         batch_t = active.gather_tree(batch)
+        ovl = state.get("ovl_shard")
+        anchor_x = (state["x"] if ovl is None
+                    else api.flat_overlap_consensus(ovl)[0])
         if stale is None:
-            xc = broadcast_clients(state["x"], cap)
+            xc = broadcast_clients(anchor_x, cap)
         else:
-            xc, stale = api.stale_xbar_view_active(stale, state["x"], active)
+            xc, stale = api.stale_xbar_view_active(stale, anchor_x, active)
         fvg = flat_value_and_grad(self._vg_stacked, spec)
 
         def local_step(carry, j):
@@ -188,15 +215,24 @@ class FedAvg:
         w = api.stale_weights(stale)
         xc_up, ef_new = compress_contrib_active(compressor, state, xc_new,
                                                 spec, active)
-        x_new, gsq, f_mean, n_sel = api.flat_round_aggregate_active(
-            xc_up, grads0, losses0, active, spec,
-            weights=w,
-        )
+        if ovl is None:
+            x_new, gsq, f_mean, n_sel = api.flat_round_aggregate_active(
+                xc_up, grads0, losses0, active, spec,
+                weights=w,
+            )
+        else:
+            slot, gsq, f_mean, n_sel = api.flat_overlap_aggregate_active(
+                xc_up, grads0, losses0, active, spec,
+                weights=w,
+            )
+            x_new = anchor_x
 
         new_state = dict(state)
         new_state.update(
             x=x_new, round=state["round"] + 1, step=state["step"] + fed.k0
         )
+        if ovl is not None:
+            new_state["ovl_shard"] = slot
         if ef_new is not None:
             new_state["ef"] = ef_new
         metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])

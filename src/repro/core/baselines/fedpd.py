@@ -130,20 +130,24 @@ class FedPD:
 
     # ------------------------------------------------------------ flat round
     def round_flat(self, state, batch, spec, mask=None, stale=None,
-                   compressor=None):
+                   compressor=None, donate_kernel=False):
         """`round` on the flat (m, N) buffers: per-client primal-dual
         anchors and duals are contiguous arrays, the gradient evaluation
         the only pytree boundary, and eq. (11) + diagnostics one fused
         reduction (see FedAvg.round_flat, incl. the compressor hook —
         the uploaded anchor x̄_i is what goes through the codec, the
-        duals stay client-resident)."""
+        duals stay client-resident — and the overlap /
+        ignored-`donate_kernel` contract)."""
         fed = self.fed
         m = api.local_client_count(fed.num_clients)
         eta = fed.fedpd_eta
+        ovl = state.get("ovl_shard")
+        anchor_x = (state["x"] if ovl is None
+                    else api.flat_overlap_consensus(ovl)[0])
         if stale is None:
-            anchors = broadcast_clients(state["x"], m)
+            anchors = broadcast_clients(anchor_x, m)
         else:
-            anchors, stale = api.stale_xbar_view(stale, state["x"], mask)
+            anchors, stale = api.stale_xbar_view(stale, anchor_x, mask)
         fvg = flat_value_and_grad(self._vg_stacked, spec)
 
         def local_step(carry, j):
@@ -176,10 +180,19 @@ class FedPD:
             lam_new = api.masked_update(mask, lam_new, state["lam"])
         anchors_up, ef_new = compress_contrib(compressor, state, anchors_new,
                                               spec, mask=mask)
-        x_new, gsq, f_mean, n_sel = api.flat_round_aggregate(
-            anchors_up, grads0, losses0, participation_vec(losses0, mask),
-            spec, mask=mask, weights=api.stale_weights(stale),
-        )
+        if ovl is None:
+            x_new, gsq, f_mean, n_sel = api.flat_round_aggregate(
+                anchors_up, grads0, losses0,
+                participation_vec(losses0, mask),
+                spec, mask=mask, weights=api.stale_weights(stale),
+            )
+        else:
+            slot, gsq, f_mean, n_sel = api.flat_overlap_aggregate(
+                anchors_up, grads0, losses0,
+                participation_vec(losses0, mask),
+                spec, mask=mask, weights=api.stale_weights(stale),
+            )
+            x_new = anchor_x
 
         new_state = dict(state)
         new_state.update(
@@ -188,6 +201,8 @@ class FedPD:
             round=state["round"] + 1,
             step=state["step"] + fed.k0,
         )
+        if ovl is not None:
+            new_state["ovl_shard"] = slot
         if ef_new is not None:
             new_state["ef"] = ef_new
         metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
@@ -198,7 +213,7 @@ class FedPD:
 
     # ----------------------------------------------------- active-set round
     def round_flat_active(self, state, batch, spec, active, stale=None,
-                          compressor=None):
+                          compressor=None, donate_kernel=False):
         """`round_flat` on the packed participant tile (store="active"):
         the duals of the round's participants are GATHERED from the resident
         (m, N) `lam` buffer, advanced on the (capacity, N) tile, and
@@ -210,10 +225,13 @@ class FedPD:
         cap = active.capacity
         eta = fed.fedpd_eta
         batch_t = active.gather_tree(batch)
+        ovl = state.get("ovl_shard")
+        anchor_x = (state["x"] if ovl is None
+                    else api.flat_overlap_consensus(ovl)[0])
         if stale is None:
-            anchors = broadcast_clients(state["x"], cap)
+            anchors = broadcast_clients(anchor_x, cap)
         else:
-            anchors, stale = api.stale_xbar_view_active(stale, state["x"],
+            anchors, stale = api.stale_xbar_view_active(stale, anchor_x,
                                                         active)
         lam_t = active.gather(state["lam"])
         fvg = flat_value_and_grad(self._vg_stacked, spec)
@@ -249,10 +267,17 @@ class FedPD:
         anchors_up, ef_new = compress_contrib_active(compressor, state,
                                                      anchors_new, spec,
                                                      active)
-        x_new, gsq, f_mean, n_sel = api.flat_round_aggregate_active(
-            anchors_up, grads0, losses0, active, spec,
-            weights=w,
-        )
+        if ovl is None:
+            x_new, gsq, f_mean, n_sel = api.flat_round_aggregate_active(
+                anchors_up, grads0, losses0, active, spec,
+                weights=w,
+            )
+        else:
+            slot, gsq, f_mean, n_sel = api.flat_overlap_aggregate_active(
+                anchors_up, grads0, losses0, active, spec,
+                weights=w,
+            )
+            x_new = anchor_x
 
         new_state = dict(state)
         new_state.update(
@@ -261,6 +286,8 @@ class FedPD:
             round=state["round"] + 1,
             step=state["step"] + fed.k0,
         )
+        if ovl is not None:
+            new_state["ovl_shard"] = slot
         if ef_new is not None:
             new_state["ef"] = ef_new
         metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])

@@ -106,17 +106,22 @@ class FedProx:
 
     # ------------------------------------------------------------ flat round
     def round_flat(self, state, batch, spec, mask=None, stale=None,
-                   compressor=None):
+                   compressor=None, donate_kernel=False):
         """`round` on the flat (m, N) trajectory buffer: the proximal GD
         loop is contiguous elementwise math, the gradient evaluation the
         only pytree boundary, and eq. (11) + diagnostics one fused
-        reduction (see FedAvg.round_flat, incl. the compressor hook)."""
+        reduction (see FedAvg.round_flat, incl. the compressor hook and
+        the overlap / ignored-`donate_kernel` contract — under overlap
+        the prox center is the all-gathered consensus shard)."""
         fed = self.fed
         m = api.local_client_count(fed.num_clients)
+        ovl = state.get("ovl_shard")
+        anchor_x = (state["x"] if ovl is None
+                    else api.flat_overlap_consensus(ovl)[0])
         if stale is None:
-            xc = broadcast_clients(state["x"], m)
+            xc = broadcast_clients(anchor_x, m)
         else:
-            xc, stale = api.stale_xbar_view(stale, state["x"], mask)
+            xc, stale = api.stale_xbar_view(stale, anchor_x, mask)
         fvg = flat_value_and_grad(self._vg_stacked, spec)
 
         def local_step(carry, j):
@@ -144,15 +149,24 @@ class FedProx:
         )
         xc_up, ef_new = compress_contrib(compressor, state, xc_new, spec,
                                          mask=mask)
-        x_new, gsq, f_mean, n_sel = api.flat_round_aggregate(
-            xc_up, grads0, losses0, participation_vec(losses0, mask), spec,
-            mask=mask, weights=api.stale_weights(stale),
-        )
+        if ovl is None:
+            x_new, gsq, f_mean, n_sel = api.flat_round_aggregate(
+                xc_up, grads0, losses0, participation_vec(losses0, mask),
+                spec, mask=mask, weights=api.stale_weights(stale),
+            )
+        else:
+            slot, gsq, f_mean, n_sel = api.flat_overlap_aggregate(
+                xc_up, grads0, losses0, participation_vec(losses0, mask),
+                spec, mask=mask, weights=api.stale_weights(stale),
+            )
+            x_new = anchor_x
 
         new_state = dict(state)
         new_state.update(
             x=x_new, round=state["round"] + 1, step=state["step"] + fed.k0
         )
+        if ovl is not None:
+            new_state["ovl_shard"] = slot
         if ef_new is not None:
             new_state["ef"] = ef_new
         metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
@@ -163,7 +177,7 @@ class FedProx:
 
     # ----------------------------------------------------- active-set round
     def round_flat_active(self, state, batch, spec, active, stale=None,
-                          compressor=None):
+                          compressor=None, donate_kernel=False):
         """`round_flat` on the packed participant tile (store="active"):
         proximal GD trajectories exist only for the gathered clients (the
         prox center is each participant's own anchor view). See
@@ -171,10 +185,13 @@ class FedProx:
         fed = self.fed
         cap = active.capacity
         batch_t = active.gather_tree(batch)
+        ovl = state.get("ovl_shard")
+        anchor_x = (state["x"] if ovl is None
+                    else api.flat_overlap_consensus(ovl)[0])
         if stale is None:
-            xc = broadcast_clients(state["x"], cap)
+            xc = broadcast_clients(anchor_x, cap)
         else:
-            xc, stale = api.stale_xbar_view_active(stale, state["x"], active)
+            xc, stale = api.stale_xbar_view_active(stale, anchor_x, active)
         fvg = flat_value_and_grad(self._vg_stacked, spec)
 
         def local_step(carry, j):
@@ -203,15 +220,24 @@ class FedProx:
         w = api.stale_weights(stale)
         xc_up, ef_new = compress_contrib_active(compressor, state, xc_new,
                                                 spec, active)
-        x_new, gsq, f_mean, n_sel = api.flat_round_aggregate_active(
-            xc_up, grads0, losses0, active, spec,
-            weights=w,
-        )
+        if ovl is None:
+            x_new, gsq, f_mean, n_sel = api.flat_round_aggregate_active(
+                xc_up, grads0, losses0, active, spec,
+                weights=w,
+            )
+        else:
+            slot, gsq, f_mean, n_sel = api.flat_overlap_aggregate_active(
+                xc_up, grads0, losses0, active, spec,
+                weights=w,
+            )
+            x_new = anchor_x
 
         new_state = dict(state)
         new_state.update(
             x=x_new, round=state["round"] + 1, step=state["step"] + fed.k0
         )
+        if ovl is not None:
+            new_state["ovl_shard"] = slot
         if ef_new is not None:
             new_state["ef"] = ef_new
         metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])

@@ -33,6 +33,10 @@ class Scaffold:
     flat_client_keys = ("ci", "ef")
     flat_global_keys = ("x", "c")
     active_tile = "participants"  # frozen clients keep their control variates
+    # overlapped rounds defer TWO means across the round boundary: the
+    # server model mean(y) and the control-variate delta mean(ci⁺ − ci) —
+    # both ride the one reduce-scatter as stacked rows (engine slot seed)
+    overlap_slot_rows = 2
 
     def __init__(self, fed: FedConfig, loss_fn: LossFn, model=None):
         self.fed = fed
@@ -132,7 +136,7 @@ class Scaffold:
 
     # ------------------------------------------------------------ flat round
     def round_flat(self, state, batch, spec, mask=None, stale=None,
-                   compressor=None):
+                   compressor=None, donate_kernel=False):
         """`round` on the flat (m, N) buffers: trajectories and control
         variates are contiguous arrays, and the server-model mean, the
         control-variate delta mean AND the diagnostics all ride eq. (11)'s
@@ -141,13 +145,31 @@ class Scaffold:
         same quantities under sharding. `compressor` encodes the uploaded
         trajectory y only; the control-variate delta rides uncompressed
         (the wire-byte model charges one model-size upload per client —
-        docs/compression.md spells out the approximation)."""
+        docs/compression.md spells out the approximation).
+
+        Overlap (engine-seeded 2-row `state["ovl_shard"]`): the round
+        all-gathers BOTH pending means at the top — row 0 the anchor
+        mean(y), row 1 the control-variate delta mean, so this round's
+        server variate is `c_used = state["c"] + cons[1]` (exactly the
+        barrier's c for the same round; row 1 seeds to zeros, matching
+        round 0's c) — and reduce-scatters this round's two means at the
+        end. `state["c"]` stores `c_used` (lagging one delta, like x; the
+        `overlap_finalize` hook folds the pending rows in at run end).
+        `donate_kernel` is accepted for round-fn uniformity and ignored.
+        """
         fed = self.fed
         m = api.local_client_count(fed.num_clients)
-        if stale is None:
-            xc = broadcast_clients(state["x"], m)
+        ovl = state.get("ovl_shard")
+        if ovl is None:
+            anchor_x, c_used = state["x"], state["c"]
         else:
-            xc, stale = api.stale_xbar_view(stale, state["x"], mask)
+            cons = api.flat_overlap_consensus(ovl)
+            anchor_x = cons[0]
+            c_used = state["c"] + cons[1]
+        if stale is None:
+            xc = broadcast_clients(anchor_x, m)
+        else:
+            xc, stale = api.stale_xbar_view(stale, anchor_x, mask)
         lr = lr_schedule(fed.lr, state["step"])
         fvg = flat_value_and_grad(self._vg_stacked, spec)
 
@@ -155,7 +177,7 @@ class Scaffold:
             y, first = carry
             losses, grads = fvg(y, batch)
             lr_j = lr_schedule(fed.lr, state["step"] + j)
-            y_new = y - lr_j * (grads + state["c"][None]
+            y_new = y - lr_j * (grads + c_used[None]
                                 - state["ci"]).astype(y.dtype)
             first = jax.tree.map(
                 lambda f, new: jnp.where(j == 0, new, f), first,
@@ -169,25 +191,35 @@ class Scaffold:
         )
 
         denom = fed.k0 * lr
-        ci_new = state["ci"] - state["c"][None] + (xc - y) / denom
+        ci_new = state["ci"] - c_used[None] + (xc - y) / denom
         if mask is not None:
             ci_new = api.masked_update(mask, ci_new, state["ci"])
         y_up, ef_new = compress_contrib(compressor, state, y, spec, mask=mask)
-        x_new, gsq, f_mean, n_sel, dci = api.flat_round_aggregate(
-            y_up, grads0, losses0, participation_vec(losses0, mask), spec,
-            mask=mask, weights=api.stale_weights(stale),
-            extra_mean=ci_new - state["ci"],
-        )
-        c_new = state["c"] + dci
+        if ovl is None:
+            x_new, gsq, f_mean, n_sel, dci = api.flat_round_aggregate(
+                y_up, grads0, losses0, participation_vec(losses0, mask),
+                spec, mask=mask, weights=api.stale_weights(stale),
+                extra_mean=ci_new - state["ci"],
+            )
+            x_new_out, c_new = x_new, state["c"] + dci
+        else:
+            slot, gsq, f_mean, n_sel = api.flat_overlap_aggregate(
+                y_up, grads0, losses0, participation_vec(losses0, mask),
+                spec, mask=mask, weights=api.stale_weights(stale),
+                extra_mean=ci_new - state["ci"],
+            )
+            x_new_out, c_new = anchor_x, c_used
 
         new_state = dict(state)
         new_state.update(
-            x=x_new,
+            x=x_new_out,
             c=c_new,
             ci=ci_new,
             round=state["round"] + 1,
             step=state["step"] + fed.k0,
         )
+        if ovl is not None:
+            new_state["ovl_shard"] = slot
         if ef_new is not None:
             new_state["ef"] = ef_new
         metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
@@ -196,9 +228,18 @@ class Scaffold:
             return new_state, stale, metrics
         return new_state, metrics
 
+    # --------------------------------------------------------------- overlap
+    def overlap_finalize(self, state, slot):
+        """Engine hook closing an overlapped run: fold the pending
+        reduce-scattered means in — row 0 is the final server model, row 1
+        the last round's control-variate delta."""
+        state["x"] = slot[0]
+        state["c"] = state["c"] + slot[1]
+        return state
+
     # ----------------------------------------------------- active-set round
     def round_flat_active(self, state, batch, spec, active, stale=None,
-                          compressor=None):
+                          compressor=None, donate_kernel=False):
         """`round_flat` on the packed participant tile (store="active"):
         participant control variates are GATHERED from the resident (m, N)
         `ci` buffer, advanced on the (capacity, N) tile, and SCATTERED back
@@ -211,10 +252,17 @@ class Scaffold:
         fed = self.fed
         cap = active.capacity
         batch_t = active.gather_tree(batch)
-        if stale is None:
-            xc = broadcast_clients(state["x"], cap)
+        ovl = state.get("ovl_shard")
+        if ovl is None:
+            anchor_x, c_used = state["x"], state["c"]
         else:
-            xc, stale = api.stale_xbar_view_active(stale, state["x"], active)
+            cons = api.flat_overlap_consensus(ovl)
+            anchor_x = cons[0]
+            c_used = state["c"] + cons[1]
+        if stale is None:
+            xc = broadcast_clients(anchor_x, cap)
+        else:
+            xc, stale = api.stale_xbar_view_active(stale, anchor_x, active)
         lr = lr_schedule(fed.lr, state["step"])
         ci_t = active.gather(state["ci"])
         fvg = flat_value_and_grad(self._vg_stacked, spec)
@@ -223,7 +271,7 @@ class Scaffold:
             y, first = carry
             losses, grads = fvg(y, batch_t)
             lr_j = lr_schedule(fed.lr, state["step"] + j)
-            y_new = y - lr_j * (grads + state["c"][None] - ci_t).astype(y.dtype)
+            y_new = y - lr_j * (grads + c_used[None] - ci_t).astype(y.dtype)
             first = jax.tree.map(
                 lambda f, new: jnp.where(j == 0, new, f), first,
                 (losses, grads)
@@ -236,26 +284,36 @@ class Scaffold:
         )
 
         denom = fed.k0 * lr
-        ci_new_t = ci_t - state["c"][None] + (xc - y) / denom
+        ci_new_t = ci_t - c_used[None] + (xc - y) / denom
         ci_new = active.scatter(state["ci"], ci_new_t)
         w = api.stale_weights(stale)
         y_up, ef_new = compress_contrib_active(compressor, state, y, spec,
                                                active)
-        x_new, gsq, f_mean, n_sel, dci = api.flat_round_aggregate_active(
-            y_up, grads0, losses0, active, spec,
-            weights=w,
-            extra_mean_tile=ci_new_t - ci_t,
-        )
-        c_new = state["c"] + dci
+        if ovl is None:
+            x_new, gsq, f_mean, n_sel, dci = api.flat_round_aggregate_active(
+                y_up, grads0, losses0, active, spec,
+                weights=w,
+                extra_mean_tile=ci_new_t - ci_t,
+            )
+            x_new_out, c_new = x_new, state["c"] + dci
+        else:
+            slot, gsq, f_mean, n_sel = api.flat_overlap_aggregate_active(
+                y_up, grads0, losses0, active, spec,
+                weights=w,
+                extra_mean_tile=ci_new_t - ci_t,
+            )
+            x_new_out, c_new = anchor_x, c_used
 
         new_state = dict(state)
         new_state.update(
-            x=x_new,
+            x=x_new_out,
             c=c_new,
             ci=ci_new,
             round=state["round"] + 1,
             step=state["step"] + fed.k0,
         )
+        if ovl is not None:
+            new_state["ovl_shard"] = slot
         if ef_new is not None:
             new_state["ef"] = ef_new
         metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])

@@ -84,6 +84,14 @@ class ComputeClock:
     byte-time term is never materialised, so every PR-4/5 ``sim_time``
     sequence is unchanged (tests/test_compress.py pins this against the
     committed BENCH_wallclock baseline).
+
+    :meth:`with_overlap` (installed by the engine under
+    ``run_rounds(overlap="scatter")``) switches the work-item duration
+    from the sequential ``compute + comm`` to ``max(compute, comm)``:
+    the split collective issues the upload's reduce-scatter at the round
+    end and defers the consensus all-gather to the next round's top, so
+    the wire hides behind local compute — crediting exactly
+    ``min(compute, comm)`` per work item against the barrier clock.
     """
 
     name = "constant"
@@ -108,19 +116,35 @@ class ComputeClock:
                     f"bandwidth_bps must be > 0, got {bandwidth_bps}")
         self.bytes_up = 0
         self.bytes_down = 0
+        self.overlap = False
         self._recompute_durations()
+
+    def _combine(self, compute):
+        """Work-item duration from its compute time. Barrier rounds pay
+        compute and communication sequentially — with the fp association
+        ``(compute + comm_s) + wire_s`` kept EXACTLY as before overlap
+        existed, so every non-overlapped ``sim_time`` sequence stays
+        bitwise. Overlapped rounds hide the wire behind compute:
+        ``max(compute, comm)``."""
+        if not self.overlap:
+            d = compute + self.comm_s
+            if self.wire_s is not None:
+                d = d + self.wire_s
+            return d
+        comm = (self.comm_s if self.wire_s is None
+                else self.comm_s + self.wire_s)
+        return jnp.maximum(compute, comm)
 
     def _recompute_durations(self):
         if self.bandwidth_bps is None:
             # bitwise escape: no byte-time term is ever added
             self.wire_s = None
-            self.durations_s = self.compute_s + self.comm_s
         else:
             self.wire_s = (
                 jnp.float32(self.bytes_up + self.bytes_down)
                 / self.bandwidth_bps
             )
-            self.durations_s = self.compute_s + self.comm_s + self.wire_s
+        self.durations_s = self._combine(self.compute_s)
 
     def with_wire(self, bytes_up: int, bytes_down: int) -> "ComputeClock":
         """A copy of this clock whose work items pay the byte time of
@@ -136,6 +160,19 @@ class ComputeClock:
         clone = copy.copy(self)
         clone.bytes_up = int(bytes_up)
         clone.bytes_down = int(bytes_down)
+        clone._recompute_durations()
+        return clone
+
+    def with_overlap(self) -> "ComputeClock":
+        """A copy of this clock pricing overlapped rounds (the engine
+        installs it under ``run_rounds(overlap="scatter")``): each work
+        item pays ``max(compute, comm)`` instead of ``compute + comm`` —
+        the communication hides behind the local compute scheduled
+        between the split collective's two halves. Composes with
+        :meth:`with_wire` (the byte-accurate wire folds into the comm
+        term before the max)."""
+        clone = copy.copy(self)
+        clone.overlap = True
         clone._recompute_durations()
         return clone
 
@@ -198,10 +235,7 @@ class LognormalClock(ComputeClock):
         jitter = jnp.exp(self.sigma * jax.random.normal(sub, (self.m,)))
         cs2 = dict(cstate)
         cs2["key"] = key
-        d = self.compute_s * jitter + self.comm_s
-        if self.wire_s is not None:
-            d = d + self.wire_s
-        return d, cs2
+        return self._combine(self.compute_s * jitter), cs2
 
 
 class TraceClock(ComputeClock):
@@ -224,10 +258,7 @@ class TraceClock(ComputeClock):
 
     def _draw(self, cstate, round_idx):
         t = jnp.asarray(round_idx, jnp.int32) % self.trace.shape[0]
-        d = jnp.take(self.trace, t, axis=0)
-        if self.wire_s is not None:
-            d = d + self.wire_s
-        return d, cstate
+        return self._combine(jnp.take(self.trace, t, axis=0)), cstate
 
 
 CLOCKS = ("constant", "lognormal", "trace")

@@ -57,6 +57,14 @@ not math. This engine removes both costs without changing a single number
     per-leaf pytree rounds, bitwise-equal on a single device
     (tests/test_flat.py). See docs/engine.md#flat-buffer-round-state.
 
+  * **overlapped collectives** — `overlap="scatter"` splits eq. (11)'s
+    psum into a round-END `psum_scatter` into a column-sharded carry slot
+    (`state["ovl_shard"]`) plus a round-TOP `all_gather` of the consensus
+    back out, so the local compute between them hides the wire; the
+    client axis may span pods (`client_axis=("pod", "data")`) and the
+    Pallas hot path can donate its buffers (`donate_kernel=`). See
+    docs/engine.md#overlapped-collectives.
+
 Scan-carry layout (donated between chunks):
 
     (state, policy_state, clock_state, stale, done, rounds_run)
@@ -102,20 +110,45 @@ def _full_spec(leading: Optional[str], ndim: int) -> P:
     return P(leading, *([None] * (ndim - 1))) if ndim else P()
 
 
-def _state_specs(algo, state_like, axis: str):
-    """Per-leaf PartitionSpecs: client-stacked top-level keys on `axis`."""
+def _state_specs(algo, state_like, axis):
+    """Per-leaf PartitionSpecs: client-stacked top-level keys on `axis`
+    (`axis` may be a compound tuple, e.g. ``('pod', 'data')``). The
+    overlap carry slot ``"ovl_shard"`` is the one exception: it holds the
+    reduce-scattered consensus CHUNKS, sharded over COLUMNS, not over a
+    leading client axis — spec ``P(None, axis)``."""
     client_keys = set(getattr(algo, "client_state_keys", ()))
-    return {
+    specs = {
         k: jax.tree.map(
             lambda l, kk=k: _full_spec(axis if kk in client_keys else None, l.ndim),
             v,
         )
         for k, v in state_like.items()
     }
+    if "ovl_shard" in specs:
+        specs["ovl_shard"] = P(None, axis)
+    return specs
 
 
-def _batch_specs(batch_like, axis: str):
+def _batch_specs(batch_like, axis):
     return jax.tree.map(lambda l: _full_spec(axis, l.ndim), batch_like)
+
+
+def _client_axes(client_axis) -> tuple:
+    """Normalise `client_axis` to a tuple of mesh axis names: the client
+    dimension may span one axis (``"data"``) or a compound of several
+    (``("pod", "data")`` — pod-spanning client sharding)."""
+    return client_axis if isinstance(client_axis, tuple) else (client_axis,)
+
+
+def _client_shards(mesh, client_axis) -> int:
+    """Total client shards = product of the client axes' mesh sizes."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    shards = 1
+    for a in _client_axes(client_axis):
+        if a not in sizes:
+            raise ValueError(f"mesh has no axis {a!r}: {mesh.axis_names}")
+        shards *= sizes[a]
+    return shards
 
 
 def flatten_state(algo, state, spec):
@@ -147,10 +180,11 @@ def unflatten_state(algo, state, spec):
     return out
 
 
-def make_round_fn(algo, mesh=None, client_axis: str = "data",
+def make_round_fn(algo, mesh=None, client_axis="data",
                   masked: bool = False, stale: bool = False,
                   flat_spec=None, active_capacity: Optional[int] = None,
-                  compressor=None):
+                  compressor=None, overlap: str = "off",
+                  donate_kernel: bool = False):
     """`algo.round`, optionally wrapped in `shard_map` over the client axis.
 
     `masked=True` returns a `(state, batch, mask) -> (state, metrics)`
@@ -187,20 +221,50 @@ def make_round_fn(algo, mesh=None, client_axis: str = "data",
     enters the round's aggregation (decompress-before-reduce), so the
     sharded round still lowers to its ONE model-size all-reduce. None
     keeps the uncompressed round — structurally, not just numerically.
+
+    `client_axis` may be a single mesh axis name or a compound tuple
+    (``("pod", "data")``): client state and batch shard over the product
+    of the named axes and every cross-client collective runs over the
+    compound axis — pod-spanning client sharding with no change to the
+    round bodies.
+
+    `overlap="scatter"` (flat rounds only) validates the split-collective
+    round here: the round body reads the previous round's consensus from
+    the ``state["ovl_shard"]`` carry slot (`api.flat_overlap_consensus`'s
+    all-gather at the round TOP) and writes this round's reduction back
+    with `api.flat_overlap_aggregate`'s reduce-scatter at the round END —
+    `run_rounds` creates/finalises the slot. Under a mesh the lane-padded
+    buffer must divide over the client shards (the reduce-scatter chunks
+    columns). ``"off"`` keeps the one-psum barrier round, bitwise.
+
+    `donate_kernel=True` threads Pallas buffer donation into the flat
+    rounds (`FedGiA.round_flat(donate_kernel=True)`): the kernel aliases
+    its (m, N) state inputs to its outputs (`input_output_aliases`), so
+    the hot-path update is in-place end-to-end under the donated scan
+    carry. Ignored by algorithms without a kernel path.
     """
+    if overlap not in ("off", "scatter"):
+        raise ValueError(f"unknown overlap {overlap!r}: ('off', 'scatter')")
+    if overlap == "scatter" and flat_spec is None:
+        raise ValueError(
+            "overlap='scatter' splits the flat comm buffer's collective — "
+            "it requires the flat round path (flat=True on an algorithm "
+            "providing round_flat; drop --no-flat)")
     if flat_spec is not None and active_capacity is not None:
         cap = active_capacity
         if mesh is not None:
-            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-            cap = min(cap, algo.fed.num_clients // max(sizes.get(client_axis, 1), 1))
+            cap = min(cap,
+                      algo.fed.num_clients // _client_shards(mesh, client_axis))
 
         def base_round(state, batch, mask, *extra):
             aset = pt.make_active_set(mask, cap)
             return algo.round_flat_active(state, batch, flat_spec, aset,
-                                          *extra, compressor=compressor)
+                                          *extra, compressor=compressor,
+                                          donate_kernel=donate_kernel)
     elif flat_spec is not None:
         base_round = lambda state, batch, *extra: algo.round_flat(
-            state, batch, flat_spec, *extra, compressor=compressor)
+            state, batch, flat_spec, *extra, compressor=compressor,
+            donate_kernel=donate_kernel)
     else:
         if compressor is not None:
             raise ValueError(
@@ -214,13 +278,15 @@ def make_round_fn(algo, mesh=None, client_axis: str = "data",
         if masked:
             return lambda state, batch, mask: base_round(state, batch, mask)
         return base_round
-    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    if client_axis not in axis_sizes:
-        raise ValueError(f"mesh has no axis {client_axis!r}: {mesh.axis_names}")
-    shards = axis_sizes[client_axis]
+    shards = _client_shards(mesh, client_axis)
     m = algo.fed.num_clients
     if m % shards != 0:
         raise ValueError(f"num_clients={m} not divisible by {shards} shards")
+    if overlap == "scatter" and flat_spec.padded_size % shards != 0:
+        raise ValueError(
+            f"overlap='scatter' reduce-scatters the lane-padded buffer "
+            f"column-wise: padded_size={flat_spec.padded_size} must divide "
+            f"over {shards} client shards")
 
     client_spec = lambda tree: jax.tree.map(
         lambda l: _full_spec(client_axis, l.ndim), tree
@@ -298,6 +364,8 @@ def run_rounds(
     compression=None,
     error_feedback: bool = False,
     topk_frac: float = 0.1,
+    overlap: str = "off",
+    donate_kernel: Optional[bool] = None,
 ) -> RoundResult:
     """Run up to `num_rounds` communication rounds of `algo`.
 
@@ -407,6 +475,35 @@ def run_rounds(
     installs `compress.uplink_bytes`/`downlink_bytes` of the model on
     the clock (`ComputeClock.with_wire`) and the history gains per-round
     `bytes_up`/`bytes_down` totals (arrived clients × per-client wire).
+
+    overlap: ``"off"`` (default) keeps the barrier round — eq. (11) as
+    one fused model-size psum, bitwise the PR-5 program. ``"scatter"``
+    splits it: each round ENDS with a `psum_scatter` of the stacked
+    contribution rows (`api.flat_overlap_aggregate`) into a
+    column-sharded carry slot ``state["ovl_shard"]``, and the NEXT round
+    STARTS by all-gathering the consensus back
+    (`api.flat_overlap_consensus`) — the local compute between the two
+    halves hides the wire. The slot is a pure carry-layout change: its
+    row 0 is exactly the mean the barrier round would have computed, so
+    results are bitwise the barrier engine unsharded (fp tolerance under
+    a mesh, where the reduce-scatter reassociates the sum) — the only
+    semantic shift is FedGiA's uplink-compression timing (the z upload is
+    encoded at round end instead of the next round's top; lossless runs
+    are unaffected, see docs/engine.md#overlapped-collectives). At the
+    return boundary the engine folds the slot back into the state
+    (``algo.overlap_finalize`` when defined, else ``x = slot[0]``), so
+    callers see the ordinary state layout. Requires the flat round path;
+    with a clock, round durations become ``max(compute, comm)`` instead
+    of ``compute + comm`` (`ComputeClock.with_overlap`). Under a mesh the
+    lane-padded buffer must divide over the client shards.
+
+    donate_kernel: donate the flat (m, N) state buffers into the Pallas
+    `fedgia_update` kernel (`input_output_aliases` + XLA donation), so
+    the collapsed diagonal-H update writes in place — no extra (m, N)
+    temp in `memory_analysis()` (tests/test_kernels.py). None (default)
+    resolves by backend like `donate`: enabled off-CPU, disabled on CPU
+    (CPU XLA cannot alias, and the CPU Pallas path is interpret-only).
+    Ignored by algorithms without a kernel path.
     """
     if num_rounds <= 0:
         return RoundResult(state, {}, 0, False, 0.0)
@@ -466,6 +563,17 @@ def run_rounds(
                 "(FederatedAlgorithm state contract)"
             )
     flat = flat and hasattr(algo, "round_flat")
+    if overlap not in ("off", "scatter"):
+        raise ValueError(f"unknown overlap {overlap!r}: ('off', 'scatter')")
+    if overlap == "scatter" and not flat:
+        raise ValueError(
+            "overlap='scatter' splits the flat comm buffer's collective — "
+            "it requires the flat round path (flat=True on an algorithm "
+            "providing round_flat; drop --no-flat)")
+    if donate_kernel is None:
+        # same backend rule as carry donation: CPU XLA cannot alias
+        # buffers (and the CPU Pallas path is interpret-only)
+        donate_kernel = jax.default_backend() != "cpu"
     if store not in ("dense", "active"):
         raise ValueError(f"unknown store {store!r}: ('dense', 'active')")
     active_capacity = None
@@ -516,6 +624,9 @@ def run_rounds(
             compress.uplink_bytes(wire_comp, model_size),
             compress.downlink_bytes(model_size),
         )
+    if overlap == "scatter" and clock is not None:
+        # overlapped rounds pay max(compute, comm) instead of their sum
+        clock = clock.with_overlap()
     spec = pt.ravel_spec(state["x"]) if flat else None
     if flat:
         # the ONE ravel of the run: everything downstream carries the
@@ -525,10 +636,24 @@ def run_rounds(
                 and "ef" not in state:
             state["ef"] = jnp.zeros(
                 (algo.fed.num_clients, spec.padded_size), spec.dtype)
+        if overlap == "scatter":
+            # seed the double-buffered carry slot: row 0 = the initial
+            # anchor (== mean(z⁰) for FedGiA, == the barrier's round-0
+            # anchor for the baselines), extra rows (algorithm riders,
+            # e.g. SCAFFOLD's control-variate delta) = exact zeros.
+            rows = int(getattr(algo, "overlap_slot_rows", 1))
+            slot0 = state["x"][None]
+            if rows > 1:
+                slot0 = jnp.concatenate([
+                    slot0,
+                    jnp.zeros((rows - 1, spec.padded_size), slot0.dtype),
+                ])
+            state["ovl_shard"] = slot0
     round_fn = make_round_fn(algo, mesh, client_axis, masked=masked,
                              stale=async_rounds, flat_spec=spec,
                              active_capacity=active_capacity,
-                             compressor=compressor)
+                             compressor=compressor, overlap=overlap,
+                             donate_kernel=donate_kernel)
     if mesh is not None:
         state, batch = shard_inputs(algo, state, batch, mesh, client_axis)
     if donate is None:
@@ -544,8 +669,11 @@ def run_rounds(
                                tol_metric, participation, stale0,
                                async_rounds, clock)
         if flat:
+            st = res.state
+            if overlap == "scatter":
+                st = _finalize_overlap(algo, st)
             res = dataclasses.replace(
-                res, state=unflatten_state(algo, res.state, spec))
+                res, state=unflatten_state(algo, st, spec))
         return res
     if auto_chunk:
         chunk_size = AUTO_CHUNK_CANDIDATES[0]
@@ -705,8 +833,28 @@ def run_rounds(
         for k in mets_host[0]
     }
     if flat:
+        if overlap == "scatter":
+            state = _finalize_overlap(algo, state)
         state = unflatten_state(algo, state, spec)
     return RoundResult(state, history, rounds_run, stopped, wall)
+
+
+def _finalize_overlap(algo, state):
+    """Fold the overlap carry slot back into the state at the return
+    boundary: the slot's row 0 holds the LAST round's consensus mean —
+    exactly the ``x`` the barrier engine would have stored — and extra
+    rows hold algorithm riders. ``algo.overlap_finalize(state, slot)``
+    overrides (FedGiA keeps its x — its round stores the consensus it
+    used, never lagging; SCAFFOLD also folds the deferred control-variate
+    delta); the default recovers ``x = slot[0]``. Runs OUTSIDE the round
+    (plain ops on the global, possibly column-sharded slot)."""
+    state = dict(state)
+    slot = state.pop("ovl_shard")
+    fin = getattr(algo, "overlap_finalize", None)
+    if fin is not None:
+        return fin(state, slot)
+    state["x"] = slot[0]
+    return state
 
 
 def _with_byte_metrics(met, mask, clock):

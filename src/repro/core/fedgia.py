@@ -237,7 +237,7 @@ class FedGiA:
 
     # ------------------------------------------------------------ flat round
     def round_flat(self, state, batch, spec, mask=None, stale=None,
-                   compressor=None):
+                   compressor=None, donate_kernel=False):
         """One communication round on the FLAT client-state buffer.
 
         Same contract as `round`, but `state["z"]` / `state["pi"]` /
@@ -259,6 +259,22 @@ class FedGiA:
         m rows and, with error feedback, every residual advances every
         round. Decompress-before-reduce: the fp32 decode enters the same
         one-psum mean.
+
+        Overlap (`run_rounds(overlap="scatter")`): when the engine seeds
+        `state["ovl_shard"]`, eq. (11)'s collective is SPLIT across the
+        round boundary — the round top all-gathers last round's
+        reduce-scattered consensus shard (`api.flat_overlap_consensus`)
+        instead of computing the mean, and the round end reduce-scatters
+        the FRESH z upload (`api.flat_overlap_aggregate`), so the wire
+        hides behind the next round's local compute. Value-preserving:
+        x̄ᵗ is the same mean either way (bitwise when unsharded); the
+        codec key at the round end is round t+1's barrier key, so only
+        the round-0 slot seed + the error-feedback sequence shift for
+        lossy codecs (docs/engine.md#overlapped-collectives).
+
+        `donate_kernel=True` routes the kernel branch through the donated
+        Pallas call: the (m, N) anchor/gradient/multiplier buffers alias
+        the outputs and update in place (no extra model-size temp).
         """
         fed = self.fed
         m = fed.num_clients
@@ -271,14 +287,22 @@ class FedGiA:
 
         # (1) aggregation — eq. (11) as ONE contiguous model-size mean
         # (under client sharding: the round's single model-size psum).
-        # Under a codec the mean is over the decoded uploads.
-        z_up, ef_new = state["z"], None
-        if compressor is not None:
-            ef = state.get("ef") if compressor.error_feedback else None
-            z_up, ef_new = api.compress_upload(
-                compressor, z_up, ef, spec,
-                key=compress.round_key(state["rng"], state["round"]))
-        xbar = api.client_mean(z_up, weights=api.stale_weights(stale))
+        # Under a codec the mean is over the decoded uploads. Overlapped
+        # rounds instead all-gather the consensus shard reduce-scattered
+        # at the END of the previous round — the deferred half of the
+        # split collective.
+        ef_new = None
+        ovl = state.get("ovl_shard")
+        if ovl is not None:
+            xbar = api.flat_overlap_consensus(ovl)[0]
+        else:
+            z_up = state["z"]
+            if compressor is not None:
+                ef = state.get("ef") if compressor.error_feedback else None
+                z_up, ef_new = api.compress_upload(
+                    compressor, z_up, ef, spec,
+                    key=compress.round_key(state["rng"], state["round"]))
+            xbar = api.client_mean(z_up, weights=api.stale_weights(stale))
 
         # (3) client selection — identical rng stream to the pytree round.
         rng, sel_key = jax.random.split(state["rng"])
@@ -320,6 +344,7 @@ class FedGiA:
             x_new, pi_new, z_new = fedgia_update_flat(
                 xbar_c, gbar, state["pi"], h, sel, sigma, m,
                 k0=fed.k0, interpret=fed.kernel_interpret,
+                donate=donate_kernel,
             )
         else:
             xa, pia, za = self._admm_branch_flat(state, xbar_c, gbar, spec)
@@ -338,14 +363,43 @@ class FedGiA:
             new_state["h"] = hparams.update_diag_h(state["h"], gbar,
                                                    state["r"], m)
 
-        metrics = {
-            "f_xbar": api.client_scalar_mean(losses),
-            "grad_sq_norm": api.flat_grad_sq_norm(
-                spec.ravel_stacked(grads), spec),
-            "selected": api.client_scalar_sum(sel),
-            "cr": 2.0 * (state["round"] + 1).astype(jnp.float32),
-            "local_grad_evals": jnp.float32(1.0),  # per client per round (C2)
-        }
+        if ovl is not None:
+            # upload half of the split collective: reduce-scatter the
+            # FRESH z (next round's eq. (11) numerator) before handing the
+            # round back — the next round's top only all-gathers. The
+            # codec key is round_key(rng, round+1): exactly the key the
+            # barrier round t+1 would draw, so the compressed stream is
+            # unchanged. The g²-norm / loss / selection metrics ride the
+            # same collective as scalar psum lanes instead of issuing
+            # their own (flat_grad_sq_norm would add a second
+            # reduce-scatter).
+            z_up_new = z_new
+            if compressor is not None:
+                ef = state.get("ef") if compressor.error_feedback else None
+                z_up_new, ef_new = api.compress_upload(
+                    compressor, z_up_new, ef, spec,
+                    key=compress.round_key(rng, state["round"] + 1))
+                new_state["ef"] = ef_new
+            slot, gsq, f_mean, n_sel = api.flat_overlap_aggregate(
+                z_up_new, spec.ravel_stacked(grads), losses, sel, spec,
+                weights=api.stale_weights(stale))
+            new_state["ovl_shard"] = slot
+            metrics = {
+                "f_xbar": f_mean,
+                "grad_sq_norm": gsq,
+                "selected": n_sel,
+                "cr": 2.0 * (state["round"] + 1).astype(jnp.float32),
+                "local_grad_evals": jnp.float32(1.0),
+            }
+        else:
+            metrics = {
+                "f_xbar": api.client_scalar_mean(losses),
+                "grad_sq_norm": api.flat_grad_sq_norm(
+                    spec.ravel_stacked(grads), spec),
+                "selected": api.client_scalar_sum(sel),
+                "cr": 2.0 * (state["round"] + 1).astype(jnp.float32),
+                "local_grad_evals": jnp.float32(1.0),  # per client per round (C2)
+            }
         if stale is not None:
             return new_state, stale, metrics
         return new_state, metrics
@@ -470,7 +524,7 @@ class FedGiA:
 
     # ----------------------------------------------------- active-set round
     def round_flat_active(self, state, batch, spec, active, stale=None,
-                          compressor=None):
+                          compressor=None, donate_kernel=False):
         """Active-store round (``run_rounds(store="active")``).
 
         FedGiA cannot shrink the round's working set: the GD branch
@@ -485,4 +539,13 @@ class FedGiA:
         are genuinely untouched. The same population argument routes the
         codec through the dense upload path (all m rows)."""
         return self.round_flat(state, batch, spec, active.mask, stale,
-                               compressor=compressor)
+                               compressor=compressor,
+                               donate_kernel=donate_kernel)
+
+    # --------------------------------------------------------------- overlap
+    def overlap_finalize(self, state, slot):
+        """Engine hook closing an overlapped run: FedGiA already stores the
+        FRESH consensus in `state["x"]` every round (x does not lag — the
+        carry slot holds the NEXT round's un-gathered numerator), so the
+        pending shard is simply dropped."""
+        return state

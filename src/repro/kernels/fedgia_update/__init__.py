@@ -1,3 +1,7 @@
+from repro.kernels.fedgia_update.kernel import (
+    fedgia_update_batched_kernel,
+    fedgia_update_batched_kernel_donated,
+)
 from repro.kernels.fedgia_update.ops import (
     fedgia_update,
     fedgia_update_flat,

@@ -90,18 +90,18 @@ def _batched_kernel(sel_ref, scal_ref, xbar_ref, g_ref, pi_ref, h_ref,
     z_out_ref[...] = z_new.astype(z_out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("k0", "interpret"))
-def fedgia_update_batched_kernel(xbar, gbar, pi, h, sel, sigma, m, *,
-                                 k0: int, interpret: bool = False):
-    """Batched flat round update: all inputs (mb, N) with N % 128 == 0
-    (ops.py pads); sel: (mb,) bool — client i's ADMM/GD branch select;
-    sigma: () f32; m: GLOBAL client count (the 1/m gradient scale).
-    Returns (x', pi', z'), each (mb, N).
+# Flattened pallas_call inputs are (sel, scal, xbar, gbar, pi, h) =
+# indices 0..5 and outputs (x', pi', z') = 0..2. The donated path aliases
+# the three model-size input streams onto the shape/dtype-matched outputs
+# so the collapsed update writes the (m, N) state in place:
+#   x'  <- xbar   (the anchor buffer becomes the new client params)
+#   pi' <- pi     (the multiplier updates in place)
+#   z'  <- gbar   (the 1/m-scaled gradient buffer becomes the new z)
+_DONATE_ALIASES = {2: 0, 4: 1, 3: 2}
 
-    Grid is (clients, row blocks): one kernel launch covers the whole
-    (m, N) client-state buffer — the flat engine's round is a single
-    fused elementwise pass instead of per-leaf (or per-client) dispatch.
-    """
+
+def _batched_call(xbar, gbar, pi, h, sel, sigma, m, *, k0: int,
+                  interpret: bool, donate: bool):
     mb, n = xbar.shape
     rows = n // LANES
     br = min(BLOCK_ROWS, rows)
@@ -122,10 +122,44 @@ def fedgia_update_batched_kernel(xbar, gbar, pi, h, sel, sigma, m, *,
         in_specs=[rep, rep, block, block, block, block],
         out_specs=[block, block, block],
         out_shape=out_shape,
+        input_output_aliases=_DONATE_ALIASES if donate else {},
         interpret=interpret,
     )(sel_arr, scal, reshape(xbar), reshape(gbar), reshape(pi), reshape(h))
     return (x_new.reshape(mb, n), pi_new.reshape(mb, n),
             z_new.reshape(mb, n))
+
+
+@functools.partial(jax.jit, static_argnames=("k0", "interpret"))
+def fedgia_update_batched_kernel(xbar, gbar, pi, h, sel, sigma, m, *,
+                                 k0: int, interpret: bool = False):
+    """Batched flat round update: all inputs (mb, N) with N % 128 == 0
+    (ops.py pads); sel: (mb,) bool — client i's ADMM/GD branch select;
+    sigma: () f32; m: GLOBAL client count (the 1/m gradient scale).
+    Returns (x', pi', z'), each (mb, N).
+
+    Grid is (clients, row blocks): one kernel launch covers the whole
+    (m, N) client-state buffer — the flat engine's round is a single
+    fused elementwise pass instead of per-leaf (or per-client) dispatch.
+    """
+    return _batched_call(xbar, gbar, pi, h, sel, sigma, m,
+                         k0=k0, interpret=interpret, donate=False)
+
+
+@functools.partial(jax.jit, static_argnames=("k0", "interpret"),
+                   donate_argnums=(0, 1, 2))
+def fedgia_update_batched_kernel_donated(xbar, gbar, pi, h, sel, sigma, m, *,
+                                         k0: int, interpret: bool = False):
+    """Donated twin of `fedgia_update_batched_kernel`: the (mb, N) xbar /
+    gbar / pi buffers are consumed — `donate_argnums` releases them to XLA
+    and `input_output_aliases` maps each onto the matching output (see
+    `_DONATE_ALIASES`), so the round update allocates ZERO extra
+    model-size temporaries (`memory_analysis()` shows the aliased bytes,
+    tests/test_kernels.py). The caller must not reuse the donated arrays
+    afterwards (doing so raises — the buffer is genuinely gone); `h` and
+    the scalars stay borrowed.
+    """
+    return _batched_call(xbar, gbar, pi, h, sel, sigma, m,
+                         k0=k0, interpret=interpret, donate=True)
 
 
 @functools.partial(jax.jit, static_argnames=("k0", "interpret"))

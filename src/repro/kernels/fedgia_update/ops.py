@@ -8,6 +8,7 @@ import jax.numpy as jnp
 from repro.kernels.fedgia_update.kernel import (
     LANES,
     fedgia_update_batched_kernel,
+    fedgia_update_batched_kernel_donated,
     fedgia_update_kernel,
 )
 from repro.kernels.fedgia_update.ref import fedgia_update_ref
@@ -40,7 +41,8 @@ def fedgia_update(xbar, gbar, pi, h, sel, sigma, m, *, k0: int,
 
 
 def fedgia_update_flat(xbar_c, gbar, pi, h, sel, sigma, m, *, k0: int,
-                       use_kernel: bool = True, interpret: bool = False):
+                       use_kernel: bool = True, interpret: bool = False,
+                       donate: bool = False):
     """Batched flat-buffer round update: the whole (mb, N) client-state
     buffer in one pass (the flat engine's ADMM/GD branch, vmapped over the
     client axis in a single pallas grid).
@@ -49,7 +51,16 @@ def fedgia_update_flat(xbar_c, gbar, pi, h, sel, sigma, m, *, k0: int,
     synchronous rounds, the stale per-client buffer in async rounds —
     and `sel` the (mb,) ADMM/GD branch select. `use_kernel=False` runs
     the jnp oracle (`ref.py`) broadcast over the client axis, which the
-    tier-1 kernel tests pin against the interpret-mode kernel."""
+    tier-1 kernel tests pin against the interpret-mode kernel.
+
+    `donate=True` consumes the xbar_c / gbar / pi buffers: the kernel
+    aliases each onto the matching output (x' <- xbar, pi' <- pi,
+    z' <- gbar), so the update runs in place with no extra (mb, N)
+    temporary — the caller must treat those arrays as dead afterwards.
+    Fp-identical to the undonated path (aliasing changes buffers, not
+    math); requires lane-aligned N (the engine's RavelSpec pads to 128),
+    since a ragged tail would force a padded copy and defeat the alias.
+    """
     if not use_kernel:
         return fedgia_update_ref(xbar_c, gbar, pi, h, sel[:, None], sigma, m,
                                  k0=k0)
@@ -58,7 +69,9 @@ def fedgia_update_flat(xbar_c, gbar, pi, h, sel, sigma, m, *, k0: int,
     if pad:
         pad1 = lambda v: jnp.pad(v, ((0, 0), (0, pad)))
         xbar_c, gbar, pi, h = map(pad1, (xbar_c, gbar, pi, h))
-    x, p, z = fedgia_update_batched_kernel(
+    call = (fedgia_update_batched_kernel_donated if donate and not pad
+            else fedgia_update_batched_kernel)
+    x, p, z = call(
         xbar_c, gbar, pi, h,
         jnp.asarray(sel), jnp.asarray(sigma, jnp.float32), m,
         k0=k0, interpret=interpret,

@@ -42,6 +42,15 @@ finish times, and the run reports simulated seconds alongside CR.
 `--stale-weighting poly|exp` downweights stale contributions in the
 aggregation (eq. 11) by decay in anchor age (`--stale-decay`).
 
+`--overlap scatter` splits eq. (11)'s one all-reduce into an early
+reduce-scatter of this round's contribution plus a deferred all-gather of
+the consensus shard at the TOP of the next round, so the model-size wire
+transfer hides behind the next round's local compute (the clock credits
+min(compute, comm) per round). `--pod P` spans the sharded client axis
+over a compound ("pod", "data") mesh — P pods of `--shard-clients`/P
+devices each — bitwise identical to the flat data axis
+(docs/engine.md#overlapped-collectives).
+
 `--compression bf16|int8|topk` quantizes/sparsifies the uplink on the
 flat comm buffer (core/compress.py, decompress-before-reduce — the round
 keeps its ONE model-size all-reduce); `--error-feedback` carries the
@@ -145,7 +154,10 @@ def validate_flags(args) -> dict:
     `--error-feedback` without a lossy codec (the identity residual is
     always zero); `--topk-frac` without `--compression topk` or outside
     (0, 1]; `--bandwidth-bps` without `--clock` (byte-accurate comm time
-    is a clock feature) or non-positive.
+    is a clock feature) or non-positive; `--overlap scatter` with
+    `--no-flat` (the carry slot lives on the flat buffers); `--pod`
+    without `--shard-clients`, or a `--shard-clients` not divisible by
+    `--pod` (each pod holds shard_clients/pod devices).
 
     Returns the resolved engine knobs: participation kind, clock kind,
     whether async rounds are on (a clock implies them), the parsed
@@ -254,6 +266,23 @@ def validate_flags(args) -> dict:
             raise SystemExit(
                 "--bandwidth-bps prices the wire inside the wall-clock "
                 "simulation — it requires --clock")
+    overlap = getattr(args, "overlap", "off")
+    if overlap == "scatter" and getattr(args, "no_flat", False):
+        raise SystemExit(
+            "--overlap scatter carries the reduce-scattered consensus "
+            "shard on the flat buffers and requires the flat round path "
+            "(drop --no-flat)")
+    pod = getattr(args, "pod", 0)
+    if pod:
+        shard = getattr(args, "shard_clients", 0)
+        if shard <= 1:
+            raise SystemExit(
+                "--pod spans the sharded client axis over a (pod, data) "
+                "mesh — it requires --shard-clients")
+        if shard % pod:
+            raise SystemExit(
+                f"--shard-clients ({shard}) must be divisible by "
+                f"--pod ({pod}): each pod holds shard_clients/pod devices")
     return {
         "kind": kind,
         "clock_kind": clock_kind,
@@ -270,6 +299,8 @@ def validate_flags(args) -> dict:
         "error_feedback": error_feedback,
         "topk_frac": 0.1 if topk_frac is None else topk_frac,
         "bandwidth_bps": bandwidth if bandwidth else None,
+        "overlap": overlap,
+        "pod": pod,
     }
 
 
@@ -296,10 +327,21 @@ def train(args) -> dict:
     # Namespace with only the legacy fields
     shard_clients = getattr(args, "shard_clients", 0)
     mesh = None
+    client_axis = "data"
     if shard_clients > 1:
         from repro.launch.mesh import make_host_mesh
 
-        mesh = make_host_mesh(data=shard_clients)
+        if parsed["pod"]:
+            mesh = make_host_mesh(pod=parsed["pod"],
+                                  data=shard_clients // parsed["pod"])
+            client_axis = ("pod", "data")
+            log.info("pod-spanning client axis: %d pods x %d devices",
+                     parsed["pod"], shard_clients // parsed["pod"])
+        else:
+            mesh = make_host_mesh(data=shard_clients)
+    if parsed["overlap"] == "scatter":
+        log.info("overlapped collectives: eq. (11) split into an early "
+                 "reduce-scatter + a deferred consensus all-gather")
 
     # engine-level participation (core/selection.py): "full" -> None keeps
     # the legacy in-algorithm behaviour (FedGiA's internal §V.B draw)
@@ -372,6 +414,8 @@ def train(args) -> dict:
         compression=parsed["compression"],
         error_feedback=parsed["error_feedback"],
         topk_frac=parsed["topk_frac"],
+        overlap=parsed["overlap"],
+        client_axis=client_axis,
     )
     history = [
         {"round": r, "f": float(res.history["f_xbar"][r]),
@@ -477,6 +521,23 @@ def build_parser() -> argparse.ArgumentParser:
                          "with --no-flat")
     ap.add_argument("--shard-clients", type=int, default=0,
                     help="shard the client axis over an N-way data mesh")
+    ap.add_argument("--pod", type=int, default=0,
+                    help="span the sharded client axis over a compound "
+                         "(pod, data) mesh: --pod P builds P pods of "
+                         "--shard-clients/P devices each and the round's "
+                         "collectives run over both axes — bitwise "
+                         "identical to the flat data axis. Requires "
+                         "--shard-clients divisible by P")
+    ap.add_argument("--overlap", default="off", choices=["off", "scatter"],
+                    help="overlapped eq.-(11) collectives: off (default — "
+                         "the round's one model-size all-reduce, bitwise "
+                         "the PR-5 program) or scatter (reduce-scatter "
+                         "the round's contribution early, all-gather the "
+                         "consensus shard at the top of the NEXT round, so "
+                         "the model-size wire hides behind local compute; "
+                         "the wall clock credits min(compute, comm) per "
+                         "round — docs/engine.md#overlapped-collectives). "
+                         "Requires the flat path")
     ap.add_argument("--participation", default="full", choices=POLICIES,
                     help="engine-level per-round client participation: "
                          "full (legacy in-algorithm behaviour), uniform "

@@ -31,8 +31,11 @@ except ImportError:  # hypothesis is optional: its tests importorskip
 
 def fake_device_env(num_devices: int = 8) -> dict:
     """Environment for a subprocess that should see `num_devices` fake CPU
-    devices: XLA_FLAGS set before jax import, PYTHONPATH pointing at src."""
-    env = dict(os.environ, PYTHONPATH=SRC)
+    devices: XLA_FLAGS set before jax import, PYTHONPATH pointing at src
+    AND at this directory (the scripts import the shared `hlo_guard`
+    collective classifier)."""
+    tests_dir = os.path.dirname(os.path.abspath(__file__))
+    env = dict(os.environ, PYTHONPATH=SRC + os.pathsep + tests_dir)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={num_devices}"
     return env
 

@@ -94,6 +94,90 @@ def test_fedgia_update_batched_matches_ref(n, k0):
                                    rtol=2e-5, atol=2e-5, err_msg=name)
 
 
+def _donation_args(m=6, n=2 * LANES):
+    xbar = jnp.asarray(RNG.standard_normal((m, n)), jnp.float32)
+    g = jnp.asarray(RNG.standard_normal((m, n)), jnp.float32)
+    pi = jnp.asarray(RNG.standard_normal((m, n)), jnp.float32)
+    h = jnp.asarray(RNG.uniform(0.05, 3.0, (m, n)), jnp.float32)
+    sel = jnp.asarray([True, False, True, True, False, True][:m])
+    return xbar, g, pi, h, sel, jnp.float32(0.7), m
+
+
+def test_fedgia_update_donated_bitwise_equals_undonated():
+    """Donation aliases buffers; it must not change a single bit of the
+    math (interpret mode on CPU; `+ 0` copies keep the originals alive
+    for the comparison)."""
+    xbar, g, pi, h, sel, sigma, m = _donation_args()
+    ref = fedgia_update_flat(xbar, g, pi, h, sel, sigma, m, k0=3,
+                             use_kernel=True, interpret=True, donate=False)
+    out = fedgia_update_flat(xbar + 0, g + 0, pi + 0, h, sel, sigma, m,
+                             k0=3, use_kernel=True, interpret=True,
+                             donate=True)
+    for a, b, name in zip(out, ref, ("x", "pi", "z")):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+def test_fedgia_update_donated_consumes_buffers():
+    """The donated entry point genuinely consumes xbar/gbar/pi: a second
+    call on the same (now-deleted) arrays must raise instead of silently
+    reading stale memory."""
+    from repro.kernels.fedgia_update import fedgia_update_batched_kernel_donated
+
+    xbar, g, pi, h, sel, sigma, m = _donation_args()
+    xb, gb, pb = xbar + 0, g + 0, pi + 0
+    fedgia_update_batched_kernel_donated(xb, gb, pb, h, sel, sigma,
+                                         jnp.int32(m), k0=3, interpret=True)
+    with pytest.raises((RuntimeError, ValueError),
+                       match="deleted|donated"):
+        fedgia_update_batched_kernel_donated(xb, gb, pb, h, sel, sigma,
+                                             jnp.int32(m), k0=3,
+                                             interpret=True)
+
+
+def test_fedgia_update_donated_memory_analysis_aliases():
+    """`memory_analysis()` proof of the in-place contract: the donated
+    program aliases all three (m, N) state streams onto its outputs
+    (alias bytes == 3 * m * N * 4) and allocates NO extra temp relative
+    to the undonated lowering of the same call."""
+    from repro.kernels.fedgia_update import (
+        fedgia_update_batched_kernel,
+        fedgia_update_batched_kernel_donated,
+    )
+
+    xbar, g, pi, h, sel, sigma, m = _donation_args()
+    n = xbar.shape[1]
+    args = (xbar, g, pi, h, sel, sigma, jnp.int32(m))
+    don = fedgia_update_batched_kernel_donated.lower(
+        *args, k0=3, interpret=True).compile().memory_analysis()
+    und = fedgia_update_batched_kernel.lower(
+        *args, k0=3, interpret=True).compile().memory_analysis()
+    assert don.alias_size_in_bytes == 3 * m * n * 4
+    assert und.alias_size_in_bytes == 0
+    assert don.temp_size_in_bytes <= und.temp_size_in_bytes
+
+
+def test_fedgia_update_flat_donate_falls_back_when_padded():
+    """A ragged N forces a lane-padding copy, which would break the alias
+    — ops.py must silently route donate=True through the undonated
+    kernel (correct results, originals still alive)."""
+    m, n = 4, LANES + 3
+    xbar = jnp.asarray(RNG.standard_normal((m, n)), jnp.float32)
+    g = jnp.asarray(RNG.standard_normal((m, n)), jnp.float32)
+    pi = jnp.asarray(RNG.standard_normal((m, n)), jnp.float32)
+    h = jnp.asarray(RNG.uniform(0.1, 2.0, (m, n)), jnp.float32)
+    sel = jnp.asarray([True, True, False, True])
+    sigma = jnp.float32(0.5)
+    ref = fedgia_update_flat(xbar, g, pi, h, sel, sigma, m, k0=2,
+                             use_kernel=True, interpret=True, donate=False)
+    out = fedgia_update_flat(xbar, g, pi, h, sel, sigma, m, k0=2,
+                             use_kernel=True, interpret=True, donate=True)
+    for a, b in zip(out, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the originals survived (no donation happened on the padded path)
+    assert np.isfinite(np.asarray(xbar)).all()
+
+
 def test_fedgia_update_batched_rowwise_equals_single():
     """Each row of the batched kernel equals the single-vector kernel on
     that client's slice (same interpret-mode lowering, same math)."""

@@ -1,0 +1,468 @@
+"""Overlapped eq. (11) collectives (`run_rounds(overlap="scatter")`).
+
+The overlap pipeline splits the round's one model-size all-reduce into an
+EARLY reduce-scatter of this round's contribution plus a DEFERRED
+all-gather of the consensus shard at the top of the NEXT round, carried in
+the double-buffered `ovl_shard` state slot — so the model-size wire hides
+behind the next round's local compute. The pipeline is value-preserving:
+the consensus a round consumes is bit-for-bit the mean a barrier round
+would have formed (the slot stores normalized means, seeded with x0).
+
+Covers:
+  * overlap="off" is THE SAME program as the PR-5 one-psum round:
+    lowered-HLO string equality for all five algorithms (sharded,
+    subprocess) and bitwise state/history equality (single device).
+  * overlap="scatter" tracks the barrier run within fp tolerance for all
+    five algorithms × sync/masked/async, scan and legacy (two different
+    XLA programs fuse differently — ulp-level drift is expected, exact
+    equality is not).
+  * slot semantics pinned against an independent per-client reference on
+    a 2-client example: the round consumes LAST round's consensus as its
+    anchor, returns x == that consensus (one-round lag), and emits the
+    slot holding THIS round's normalized contribution mean; f_xbar is the
+    loss AT the consumed consensus.
+  * collective budget (subprocess, 8 fake devices): the overlapped
+    sharded round lowers to ZERO model-size all-reduces + exactly one
+    reduce-scatter + one all-gather for five algorithms × sync/async ×
+    dense/active × uncompressed/int8 (hlo_guard.assert_overlap_round).
+  * pod-spanning client axis: make_host_mesh(pod=2, data=4) with
+    client_axis=("pod", "data") is BITWISE the flat data=8 mesh, with
+    and without overlap, and keeps the overlap collective budget.
+  * hypothesis property: random algorithm / scan chunk size / straggler
+    mask pattern — overlap="scatter" still tracks the barrier run.
+"""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import fake_device_env
+from repro.config import FedConfig
+from repro.core import make_algorithm, make_policy, run_rounds
+from repro.core.baselines.common import lr_schedule
+from repro.core.engine import flatten_state
+from repro.data import linreg_noniid
+from repro.models import LeastSquares
+from repro.utils import pytree as pt
+
+M, N, D = 8, 20, 400
+ROUNDS = 10
+
+ALGO_SETUPS = {
+    "fedgia_diag": dict(sigma_t=0.2, h_policy="diag_ema", alpha=0.5),
+    "fedavg": dict(lr=0.01),
+    "fedprox": dict(lr=0.002, prox_mu=1e-4, inner_steps=3),
+    "fedpd": dict(lr=0.05, fedpd_eta=1.0, inner_steps=3),
+    "scaffold": dict(lr=0.01),
+}
+FIVE = list(ALGO_SETUPS)
+
+# value parity between two independently compiled programs: ulp-level
+# drift from different fusion/FMA contraction is expected and fine
+TOL = dict(rtol=1e-4, atol=1e-6)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    batch = {k: jnp.asarray(v) for k, v in linreg_noniid(0, D, N, M).items()}
+    return LeastSquares(N), batch
+
+
+def _make(problem, key, **overrides):
+    model, batch = problem
+    name = "fedgia" if key.startswith("fedgia") else key
+    kwargs = dict(algorithm=name, num_clients=M, k0=3)
+    kwargs.update(ALGO_SETUPS[key])
+    kwargs.update(overrides)
+    fed = FedConfig(**kwargs)
+    algo = make_algorithm(fed, model.loss, model=model)
+    state = algo.init(model.init(jax.random.PRNGKey(0)),
+                      jax.random.PRNGKey(1), init_batch=batch)
+    return algo, state
+
+
+def _mode_kwargs(mode):
+    if mode == "sync":
+        return {}
+    pol = make_policy("straggler", M, 0.5, seed=0, drop_prob=0.3,
+                      horizon=ROUNDS)
+    if mode == "masked":
+        return dict(participation=pol)
+    return dict(participation=pol, async_rounds=True, max_staleness=2)
+
+
+def _assert_bitwise(res, ref):
+    assert res.rounds_run == ref.rounds_run
+    assert set(res.history) == set(ref.history)
+    for k in ref.history:
+        np.testing.assert_array_equal(res.history[k], ref.history[k],
+                                      err_msg=k)
+    for key in ref.state:
+        ok = jax.tree.map(lambda a, b: bool(jnp.array_equal(a, b)),
+                          res.state[key], ref.state[key])
+        assert all(jax.tree.leaves(ok)), f"state[{key!r}] diverged"
+
+
+# --------------------------------------------- overlap="off" is the old path
+@pytest.mark.parametrize("key", FIVE)
+def test_overlap_off_bitwise_identical(problem, key):
+    """overlap="off" must not perturb the PR-5 program AT ALL: bitwise
+    history and state against a run that never mentions overlap."""
+    model, batch = problem
+    algo, state = _make(problem, key)
+    ref = run_rounds(algo, state, batch, ROUNDS)
+    res = run_rounds(algo, state, batch, ROUNDS, overlap="off")
+    _assert_bitwise(res, ref)
+
+
+def test_overlap_validation(problem):
+    model, batch = problem
+    algo, state = _make(problem, "fedgia_diag")
+    with pytest.raises(ValueError, match="overlap"):
+        run_rounds(algo, state, batch, 2, overlap="bogus")
+    with pytest.raises(ValueError, match="overlap"):
+        run_rounds(algo, state, batch, 2, overlap="scatter", flat=False)
+
+
+# ------------------------------------------ scatter == barrier (value parity)
+@pytest.mark.parametrize("mode", ["sync", "masked", "async"])
+@pytest.mark.parametrize("key", FIVE)
+def test_overlap_scatter_matches_barrier(problem, key, mode):
+    """The overlap pipeline is value-preserving: every round consumes
+    exactly the consensus the barrier round would have formed, so the
+    full history tracks the barrier run (fp tolerance — two different
+    compiled programs). The carry slot never leaks into the final
+    state."""
+    model, batch = problem
+    algo, state = _make(problem, key)
+    kw = _mode_kwargs(mode)
+    ref = run_rounds(algo, state, batch, ROUNDS, **kw)
+    res = run_rounds(algo, state, batch, ROUNDS, overlap="scatter", **kw)
+    assert res.rounds_run == ref.rounds_run
+    assert "ovl_shard" not in res.state
+    for k in ref.history:
+        np.testing.assert_allclose(res.history[k], ref.history[k],
+                                   err_msg=k, **TOL)
+    for a, b in zip(jax.tree.leaves(res.state["x"]),
+                    jax.tree.leaves(ref.state["x"])):
+        np.testing.assert_allclose(a, b, **TOL)
+
+
+@pytest.mark.parametrize("key", ["fedgia_diag", "scaffold"])
+def test_overlap_scatter_legacy_loop(problem, key):
+    """The legacy (scan=False) per-round dispatch threads the slot and
+    finalizes it exactly like the scan path."""
+    model, batch = problem
+    algo, state = _make(problem, key)
+    ref = run_rounds(algo, state, batch, 6, scan=False)
+    res = run_rounds(algo, state, batch, 6, scan=False, overlap="scatter")
+    assert "ovl_shard" not in res.state
+    for k in ref.history:
+        np.testing.assert_allclose(res.history[k], ref.history[k],
+                                   err_msg=k, **TOL)
+
+
+# -------------------------------------------------- slot semantics, 2 clients
+def test_overlap_slot_semantics_two_clients():
+    """Pin the carry-slot contract on a 2-client example against an
+    independent per-client reference (plain python loop over jax.grad):
+
+      * the round's anchor is the slot row passed IN (last round's
+        consensus), not state["x"];
+      * the returned x IS that consensus (one-round lag — the engine's
+        finalize gathers the pending slot at run end);
+      * the returned slot row is the normalized mean of THIS round's
+        client trajectories;
+      * f_xbar is the mean client loss AT the consumed consensus.
+    """
+    m, n, d = 2, 12, 64
+    model = LeastSquares(n)
+    batch = {k: jnp.asarray(v) for k, v in linreg_noniid(3, d, n, m).items()}
+    fed = FedConfig(algorithm="fedavg", num_clients=m, k0=2, lr=0.05)
+    algo = make_algorithm(fed, model.loss, model=model)
+    state = algo.init(model.init(jax.random.PRNGKey(0)),
+                      jax.random.PRNGKey(1), init_batch=batch)
+    spec = pt.ravel_spec(state["x"])
+    sf = flatten_state(algo, state, spec)
+
+    # an arbitrary consensus "in flight" from the previous round
+    tail = (jnp.arange(spec.padded_size) < spec.size).astype(jnp.float32)
+    consensus = jnp.asarray(
+        np.random.default_rng(7).standard_normal(spec.padded_size),
+        jnp.float32) * tail  # zero the lane-padding tail
+    sf["ovl_shard"] = consensus[None]
+
+    new_state, metrics = algo.round_flat(sf, batch, spec)
+
+    # x == the consensus consumed this round, NOT a fresh mean
+    np.testing.assert_array_equal(np.asarray(new_state["x"]),
+                                  np.asarray(consensus))
+
+    # independent per-client trajectories from the consensus anchor
+    def client_loss(xv, i):
+        cb = jax.tree.map(lambda v: v[i], batch)
+        return model.loss(spec.unravel(xv), cb)[0]
+
+    trajs, losses_at_anchor = [], []
+    for i in range(m):
+        xv = consensus
+        losses_at_anchor.append(float(client_loss(xv, i)))
+        for j in range(fed.k0):
+            g = jax.grad(client_loss)(xv, i)
+            xv = xv - lr_schedule(fed.lr, jnp.int32(j)) * g
+        trajs.append(np.asarray(xv))
+    np.testing.assert_allclose(np.asarray(new_state["ovl_shard"][0]),
+                               np.mean(trajs, axis=0),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(metrics["f_xbar"]),
+                               np.mean(losses_at_anchor),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------- sharded subprocess checks
+_OVERLAP_OFF_PROGRAM_SCRIPT = textwrap.dedent(
+    """
+    import jax, jax.numpy as jnp
+    from hlo_guard import assert_barrier_round
+    from repro.config import FedConfig
+    from repro.core import engine, make_algorithm
+    from repro.data import linreg_noniid
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import LeastSquares
+    from repro.utils import pytree as pt
+
+    m, n, d = 8, 24, 320
+    batch = {k: jnp.asarray(v) for k, v in linreg_noniid(0, d, n, m).items()}
+    model = LeastSquares(n)
+    mesh = make_host_mesh(data=8)
+
+    for name in ("fedgia", "fedavg", "fedprox", "fedpd", "scaffold"):
+        fed = FedConfig(algorithm=name, num_clients=m, k0=3, alpha=1.0,
+                        sigma_t=0.3, h_policy="diag_ema", lr=0.01)
+        algo = make_algorithm(fed, model.loss, model=model)
+        s0 = algo.init(model.init(jax.random.PRNGKey(0)),
+                       jax.random.PRNGKey(1), init_batch=batch)
+        spec = pt.ravel_spec(s0["x"])
+        s0f = engine.flatten_state(algo, s0, spec)
+        rf_base = engine.make_round_fn(algo, mesh, masked=True,
+                                       flat_spec=spec)
+        rf_off = engine.make_round_fn(algo, mesh, masked=True,
+                                      flat_spec=spec, overlap="off")
+        st, b = engine.shard_inputs(algo, s0f, batch, mesh)
+        args = (st, b, jnp.ones((m,), bool))
+        txt_base = jax.jit(rf_base).lower(*args).as_text()
+        txt_off = jax.jit(rf_off).lower(*args).as_text()
+        assert txt_base == txt_off, name + ": overlap='off' changed the program"
+        assert_barrier_round(jax.jit(rf_off).lower(*args).compile().as_text(),
+                             name)
+    print("OVERLAP_OFF_SAME_PROGRAM_OK all five algorithms")
+    """
+)
+
+
+def test_overlap_off_same_lowered_program():
+    """overlap="off" must lower to CHARACTER-IDENTICAL StableHLO as the
+    round fn built without the overlap argument (the PR-5 one-psum
+    program), for all five algorithms on the sharded path."""
+    out = subprocess.run(
+        [sys.executable, "-c", _OVERLAP_OFF_PROGRAM_SCRIPT],
+        env=fake_device_env(8), capture_output=True, text=True, timeout=900,
+    )
+    assert "OVERLAP_OFF_SAME_PROGRAM_OK" in out.stdout, out.stdout + out.stderr
+
+
+_OVERLAP_MATRIX_SCRIPT = textwrap.dedent(
+    """
+    import jax, jax.numpy as jnp
+    from hlo_guard import assert_overlap_round
+    from repro.config import FedConfig
+    from repro.core import api, compress, engine, make_algorithm, make_policy
+    from repro.data import linreg_noniid
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import LeastSquares
+    from repro.utils import pytree as pt
+
+    m, n, d = 8, 24, 320
+    batch = {k: jnp.asarray(v) for k, v in linreg_noniid(0, d, n, m).items()}
+    model = LeastSquares(n)
+    mesh = make_host_mesh(data=8)
+    cap = make_policy("uniform", m, 0.5).active_capacity
+
+    def overlap_hlo(algo_name, stale, active, codec):
+        fed = FedConfig(algorithm=algo_name, num_clients=m, k0=3, alpha=1.0,
+                        sigma_t=0.3, h_policy="diag_ema", lr=0.01)
+        algo = make_algorithm(fed, model.loss, model=model)
+        s0 = algo.init(model.init(jax.random.PRNGKey(0)),
+                       jax.random.PRNGKey(1), init_batch=batch)
+        spec = pt.ravel_spec(s0["x"])
+        s0f = engine.flatten_state(algo, s0, spec)
+        rows = int(getattr(algo, "overlap_slot_rows", 1))
+        s0f["ovl_shard"] = jnp.zeros((rows, spec.padded_size),
+                                     s0f["x"].dtype)
+        kw = dict(masked=True, stale=stale, flat_spec=spec,
+                  overlap="scatter")
+        if active:
+            kw["active_capacity"] = cap
+        if codec:
+            kw["compressor"] = compress.make_compressor(codec)
+        rf = engine.make_round_fn(algo, mesh, **kw)
+        st, b = engine.shard_inputs(algo, s0f, batch, mesh)
+        args = (st, b, jnp.ones((m,), bool))
+        if stale:
+            args = args + (api.init_stale_xbar(s0f["x"], m, 2),)
+        return jax.jit(rf).lower(*args).compile().as_text()
+
+    checked = 0
+    for name in ("fedgia", "fedavg", "fedprox", "fedpd", "scaffold"):
+        for stale in (False, True):
+            for active in (False, True):
+                for codec in (None, "int8"):
+                    label = (name + "/stale=" + str(stale) + "/active="
+                             + str(active) + "/codec=" + str(codec))
+                    assert_overlap_round(
+                        overlap_hlo(name, stale, active, codec), label)
+                    checked += 1
+    print("OVERLAP_MATRIX_OK", checked, "variants, zero model-size all-reduce")
+    """
+)
+
+
+def test_overlap_matrix_collective_budget():
+    """The tentpole's wire contract, exhaustively: the overlapped sharded
+    round lowers to ZERO model-size all-reduces and exactly ONE
+    reduce-scatter + ONE all-gather — five algorithms × sync/async ×
+    dense/active store × uncompressed/int8 uplink (40 lowered programs,
+    all classified by the shared hlo_guard)."""
+    out = subprocess.run(
+        [sys.executable, "-c", _OVERLAP_MATRIX_SCRIPT],
+        env=fake_device_env(8), capture_output=True, text=True, timeout=900,
+    )
+    assert "OVERLAP_MATRIX_OK" in out.stdout, out.stdout + out.stderr
+
+
+_POD_AXIS_SCRIPT = textwrap.dedent(
+    """
+    import jax, jax.numpy as jnp, numpy as np
+    from hlo_guard import assert_overlap_round
+    from repro.config import FedConfig
+    from repro.core import api, engine, make_algorithm, run_rounds
+    from repro.data import linreg_noniid
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import LeastSquares
+    from repro.utils import pytree as pt
+
+    m, n, d = 8, 24, 320
+    batch = {k: jnp.asarray(v) for k, v in linreg_noniid(0, d, n, m).items()}
+    model = LeastSquares(n)
+    mesh8 = make_host_mesh(data=8)
+    meshp = make_host_mesh(pod=2, data=4)
+
+    fed = FedConfig(algorithm="fedgia", num_clients=m, k0=3, alpha=1.0,
+                    sigma_t=0.3, h_policy="diag_ema")
+    algo = make_algorithm(fed, model.loss, model=model)
+    s0 = algo.init(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(1),
+                   init_batch=batch)
+
+    def bitwise(a, b):
+        for k in a.history:
+            np.testing.assert_array_equal(a.history[k], b.history[k],
+                                          err_msg=k)
+        for key in b.state:
+            ok = jax.tree.map(lambda x, y: bool(jnp.array_equal(x, y)),
+                              a.state[key], b.state[key])
+            assert all(jax.tree.leaves(ok)), key
+
+    # compound ("pod", "data") client axis == flat data axis, bitwise
+    r8 = run_rounds(algo, s0, batch, 10, mesh=mesh8)
+    rp = run_rounds(algo, s0, batch, 10, mesh=meshp,
+                    client_axis=("pod", "data"))
+    bitwise(rp, r8)
+
+    # and with overlapped collectives on top
+    o8 = run_rounds(algo, s0, batch, 10, mesh=mesh8, overlap="scatter")
+    op = run_rounds(algo, s0, batch, 10, mesh=meshp,
+                    client_axis=("pod", "data"), overlap="scatter")
+    bitwise(op, o8)
+
+    # the overlap collective budget holds over the compound axis
+    spec = pt.ravel_spec(s0["x"])
+    s0f = engine.flatten_state(algo, s0, spec)
+    s0f["ovl_shard"] = jnp.zeros((1, spec.padded_size), s0f["x"].dtype)
+    rf = engine.make_round_fn(algo, meshp, client_axis=("pod", "data"),
+                              masked=True, flat_spec=spec, overlap="scatter")
+    st, b = engine.shard_inputs(algo, s0f, batch, meshp,
+                                client_axis=("pod", "data"))
+    txt = jax.jit(rf).lower(st, b, jnp.ones((m,), bool)).compile().as_text()
+    assert_overlap_round(txt, "pod-axis")
+    print("POD_AXIS_OK bitwise over (pod, data), overlap budget holds")
+    """
+)
+
+
+def test_pod_axis_bitwise_and_overlap_budget():
+    """Lifting the client axis from 'data' to a compound ("pod", "data")
+    mesh is a pure re-layout: runs are BITWISE the flat data=8 mesh, with
+    and without overlap, and the overlapped round keeps its 1 RS + 1 AG
+    + 0 model-size AR budget over the compound axis."""
+    out = subprocess.run(
+        [sys.executable, "-c", _POD_AXIS_SCRIPT],
+        env=fake_device_env(8), capture_output=True, text=True, timeout=900,
+    )
+    assert "POD_AXIS_OK" in out.stdout, out.stdout + out.stderr
+
+
+# ------------------------------------------------------- hypothesis property
+@pytest.mark.parametrize("key,chunk,seed,drop", [
+    ("fedgia_diag", 1, 3, 0.6),
+    ("scaffold", 3, 1, 0.3),
+    ("fedpd", 5, 2, 0.0),
+])
+def test_overlap_tracks_barrier_fixed_draws(problem, key, chunk, seed, drop):
+    """Deterministic slice of the property below (runs even where
+    hypothesis is not installed): scatter == barrier across chunk sizes
+    and straggler mask patterns."""
+    model, batch = problem
+    algo, state = _make(problem, key)
+    pol = make_policy("straggler", M, 0.5, seed=seed, drop_prob=drop,
+                      horizon=6)
+    kw = dict(chunk_size=chunk, participation=pol)
+    ref = run_rounds(algo, state, batch, 6, **kw)
+    res = run_rounds(algo, state, batch, 6, overlap="scatter", **kw)
+    assert "ovl_shard" not in res.state
+    for k in ref.history:
+        np.testing.assert_allclose(res.history[k], ref.history[k],
+                                   err_msg=k, **TOL)
+
+
+def test_overlap_property_random_algo_chunk_mask(problem):
+    """Property test: overlap="scatter" tracks the barrier run for any
+    (algorithm, scan chunk size, straggler mask pattern) draw."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    model, batch = problem
+    rounds = 6
+
+    @settings(max_examples=15, deadline=None)
+    @given(key=st.sampled_from(FIVE),
+           chunk=st.sampled_from([0, 1, 3, 5]),
+           seed=st.integers(min_value=0, max_value=4),
+           drop=st.sampled_from([0.0, 0.3, 0.6]))
+    def inner(key, chunk, seed, drop):
+        algo, state = _make(problem, key)
+        pol = make_policy("straggler", M, 0.5, seed=seed, drop_prob=drop,
+                          horizon=rounds)
+        kw = dict(chunk_size=chunk, participation=pol)
+        ref = run_rounds(algo, state, batch, rounds, **kw)
+        res = run_rounds(algo, state, batch, rounds, overlap="scatter", **kw)
+        assert "ovl_shard" not in res.state
+        for k in ref.history:
+            np.testing.assert_allclose(res.history[k], ref.history[k],
+                                       err_msg=f"{key}/{chunk}/{seed}: {k}",
+                                       **TOL)
+
+    inner()

@@ -75,6 +75,12 @@ def _args(*extra):
     (["--clock", "constant", "--bandwidth-bps", "-4000"],
      "--bandwidth-bps must be > 0"),
     (["--bandwidth-bps", "4000"], "--bandwidth-bps prices the wire"),
+    # the overlap carry slot lives on the flat buffers; pods subdivide
+    # the sharded client axis
+    (["--overlap", "scatter", "--no-flat"],
+     "--overlap scatter carries the reduce-scattered"),
+    (["--pod", "2"], "--pod .* requires --shard-clients"),
+    (["--pod", "3", "--shard-clients", "8"], "must be divisible by"),
 ])
 def test_rejected_flag_combinations(argv, match):
     with pytest.raises(SystemExit, match=match):

@@ -290,8 +290,8 @@ def test_stale_decay_must_be_positive(problem):
 # -------------------------------------------------- sharded one-psum check
 _SHARDED_WEIGHTED_SCRIPT = textwrap.dedent(
     """
-    import re
     import jax, jax.numpy as jnp, numpy as np
+    from hlo_guard import model_size_all_reduces as count_ars
     from repro.config import FedConfig
     from repro.core import api, engine, make_algorithm, run_rounds
     from repro.core.clock import ComputeClock
@@ -315,9 +315,7 @@ _SHARDED_WEIGHTED_SCRIPT = textwrap.dedent(
         stale = api.init_stale_xbar(s0["x"], m, 2, weighting=weighting,
                                     decay=1.0)
         args = (st, b, jnp.ones((m,), bool), stale)
-        txt = jax.jit(rf).lower(*args).compile().as_text()
-        shapes = re.findall(r"= (\\S+) all-reduce\\(", txt)
-        return sum(1 for s in shapes if re.search(r"\\[\\d", s))
+        return count_ars(jax.jit(rf).lower(*args).compile().as_text())
 
     uni, wtd = model_size_all_reduces("uniform"), model_size_all_reduces("poly")
     assert wtd == uni, (
