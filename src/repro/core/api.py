@@ -409,6 +409,36 @@ def flat_round_aggregate_active(contrib_tile, grads_tile, losses_tile,
     n_sel = active.count
     loss_sum = jnp.sum(losses_z)
     if _CLIENT_AXIS is None:
+        if active.packed:
+            # Opt-in fp-tolerance mode (run_rounds(aggregate="packed")):
+            # sum the (capacity, N) tile directly — O(capacity·N), the
+            # sharded branch's math on one device, skipping the dense
+            # (m, N) scatter temp entirely. ~1 ulp from the bitwise
+            # dense default (docs/engine.md#packed-aggregation).
+            contrib_z = active.zero_invalid(contrib_tile)
+            if weights is not None:
+                w_t = jnp.where(
+                    active.valid,
+                    active.gather(
+                        jnp.where(active.mask, weights, 0.0)
+                    ).astype(jnp.float32),
+                    0.0,
+                )
+                num = jnp.sum(
+                    w_t[:, None].astype(contrib_z.dtype) * contrib_z, axis=0
+                )
+                den = jnp.sum(w_t)
+            else:
+                num = jnp.sum(contrib_z, axis=0)
+                den = active.count
+            agg = num / den.astype(num.dtype)
+            out = (agg, gsq, loss_sum / n_sel, n_sel)
+            if extra_mean_tile is not None:
+                extra = jnp.sum(
+                    active.zero_invalid(extra_mean_tile), axis=0
+                ) / active.num_clients
+                out = out + (extra,)
+            return out
         m = active.num_clients
         zeros = jnp.zeros((m,) + contrib_tile.shape[1:], contrib_tile.dtype)
         contrib_d = active.scatter(zeros, contrib_tile)
@@ -706,8 +736,10 @@ def compress_upload_active(compressor, contrib_tile: jax.Array,
     untouched — the dense path's mask freeze, row for row). Per-client
     stochastic keys come from the tile's resident row ids, so tile and
     dense rounds quantize each client identically. Returns
-    ``(decoded_tile, ef')`` with ``ef'`` the full dense residual."""
-    ef_t = None if ef is None else active.gather(ef)
+    ``(decoded_tile, ef')`` with ``ef'`` the full dense residual — or the
+    updated residual TILE under the host-offloaded store
+    (``active.tile_state``), whose engine scatters it back host-side."""
+    ef_t = None if ef is None else active.gather_state(ef)
     ids = active.idx.astype(jnp.uint32)
     if _CLIENT_AXIS is not None:
         name, _ = _CLIENT_AXIS
@@ -717,7 +749,7 @@ def compress_upload_active(compressor, contrib_tile: jax.Array,
         compressor, contrib_tile, ef_t, spec, key=key, row_ids=ids)
     if ef is None:
         return dec_t, None
-    return dec_t, active.scatter(ef, ef_new_t)
+    return dec_t, active.scatter_state(ef, ef_new_t)
 
 
 def per_client_value_and_grad(loss_fn: LossFn):
@@ -947,18 +979,28 @@ def stale_xbar_view_active(stale: StaleXbar, xbar, active):
     force_t = active.gather(force)
     anchor_t = jax.tree.map(
         lambda buf, fresh: jnp.where(
-            _mask_bcast(force_t, active.gather(buf)), fresh, active.gather(buf)
+            _mask_bcast(force_t, active.gather_state(buf)), fresh,
+            active.gather_state(buf)
         ),
         stale.anchor,
         xbar,
     )
     s_used = jnp.where(force, 0, stale.age).astype(jnp.int32)
     refresh = jnp.logical_or(active.mask, force)
-    buf = jax.tree.map(
-        lambda a, fresh: jnp.where(_mask_bcast(refresh, a), fresh, a),
-        stale.anchor,
-        xbar,
-    )
+    if active.tile_state:
+        # Host-offloaded store: the resident anchor lives host-side, so
+        # the dense refresh write is the ENGINE's job (it applies
+        # `anchor[refresh] = x̄` with the exact same row select outside
+        # the jit). Return the fresh x̄ as the anchor slot so the engine
+        # has its exact bits; the per-client scalars stay dense and
+        # advance on-device like the active store's.
+        buf = xbar
+    else:
+        buf = jax.tree.map(
+            lambda a, fresh: jnp.where(_mask_bcast(refresh, a), fresh, a),
+            stale.anchor,
+            xbar,
+        )
     age = jnp.where(refresh, 1, s_used + 1).astype(jnp.int32)
     return anchor_t, StaleXbar(buf, age, s_used, stale.max_staleness,
                                stale.weighting, stale.decay)

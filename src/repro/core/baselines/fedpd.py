@@ -233,7 +233,7 @@ class FedPD:
         else:
             anchors, stale = api.stale_xbar_view_active(stale, anchor_x,
                                                         active)
-        lam_t = active.gather(state["lam"])
+        lam_t = active.gather_state(state["lam"])
         fvg = flat_value_and_grad(self._vg_stacked, spec)
 
         def local_step(carry, j):
@@ -262,7 +262,7 @@ class FedPD:
         (anchors_new, lam_new_t, (losses0, grads0)), _ = jax.lax.scan(
             local_step, (anchors, lam_t, first0), jnp.arange(fed.k0)
         )
-        lam_new = active.scatter(state["lam"], lam_new_t)
+        lam_new = active.scatter_state(state["lam"], lam_new_t)
         w = api.stale_weights(stale)
         anchors_up, ef_new = compress_contrib_active(compressor, state,
                                                      anchors_new, spec,

@@ -264,7 +264,7 @@ class Scaffold:
         else:
             xc, stale = api.stale_xbar_view_active(stale, anchor_x, active)
         lr = lr_schedule(fed.lr, state["step"])
-        ci_t = active.gather(state["ci"])
+        ci_t = active.gather_state(state["ci"])
         fvg = flat_value_and_grad(self._vg_stacked, spec)
 
         def local_step(carry, j):
@@ -285,7 +285,7 @@ class Scaffold:
 
         denom = fed.k0 * lr
         ci_new_t = ci_t - c_used[None] + (xc - y) / denom
-        ci_new = active.scatter(state["ci"], ci_new_t)
+        ci_new = active.scatter_state(state["ci"], ci_new_t)
         w = api.stale_weights(stale)
         y_up, ef_new = compress_contrib_active(compressor, state, y, spec,
                                                active)

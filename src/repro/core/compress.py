@@ -71,6 +71,14 @@ class Compressor:
     per-client residual buffer (``state["ef"]``, one extra (m, N) flat
     `flat_client_keys` entry) and `api.compress_upload` should fold it
     into the upload. ``stochastic`` codecs receive per-row PRNG keys.
+
+    Because the residual is declared through `flat_client_keys`, it
+    rides every client-state store for free: packed to a (capacity, N)
+    tile under ``store="active"`` and resident in HOST memory under
+    ``store="offload"`` (gathered/advanced/scattered through the same
+    host rows as any client buffer — docs/scaling.md). Stochastic
+    rounding keys come from global row ids, so the draw is identical in
+    all three stores.
     """
 
     name = "abstract"

@@ -103,6 +103,12 @@ class RoundResult:
     rounds_run: int
     stopped_early: bool
     wall_s: float
+    # Path-specific diagnostics that are not per-round metrics. The
+    # host-offloaded store reports `device_peak_bytes` (XLA
+    # memory_analysis of the compiled tile round, when the backend
+    # exposes it) and `host_resident_bytes` (the buffers that left the
+    # device). Empty for the dense/active paths.
+    extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
 # ---------------------------------------------------------------- sharding
@@ -184,7 +190,7 @@ def make_round_fn(algo, mesh=None, client_axis="data",
                   masked: bool = False, stale: bool = False,
                   flat_spec=None, active_capacity: Optional[int] = None,
                   compressor=None, overlap: str = "off",
-                  donate_kernel: bool = False):
+                  donate_kernel: bool = False, aggregate: str = "dense"):
     """`algo.round`, optionally wrapped in `shard_map` over the client axis.
 
     `masked=True` returns a `(state, batch, mask) -> (state, metrics)`
@@ -242,6 +248,14 @@ def make_round_fn(algo, mesh=None, client_axis="data",
     its (m, N) state inputs to its outputs (`input_output_aliases`), so
     the hot-path update is in-place end-to-end under the donated scan
     carry. Ignored by algorithms without a kernel path.
+
+    `aggregate="packed"` (active rounds only) opts eq. (11) into the
+    fp-tolerance packed aggregation: the unsharded round sums the
+    (capacity, N) tile directly instead of scattering it back to the
+    dense (m, N) layout first (`ActiveSet.packed`; ~1 ulp from the
+    bitwise dense default). Under a mesh the flag is a no-op — the
+    sharded branch already keeps packed O(capacity) sums inside the
+    round's one psum, so the lowered program is unchanged.
     """
     if overlap not in ("off", "scatter"):
         raise ValueError(f"unknown overlap {overlap!r}: ('off', 'scatter')")
@@ -250,14 +264,22 @@ def make_round_fn(algo, mesh=None, client_axis="data",
             "overlap='scatter' splits the flat comm buffer's collective — "
             "it requires the flat round path (flat=True on an algorithm "
             "providing round_flat; drop --no-flat)")
+    if aggregate not in ("dense", "packed"):
+        raise ValueError(
+            f"unknown aggregate {aggregate!r}: ('dense', 'packed')")
+    if aggregate == "packed" and active_capacity is None:
+        raise ValueError(
+            "aggregate='packed' sums the packed participant tile — it "
+            "requires the active-set round (store='active' or 'offload')")
     if flat_spec is not None and active_capacity is not None:
         cap = active_capacity
         if mesh is not None:
             cap = min(cap,
                       algo.fed.num_clients // _client_shards(mesh, client_axis))
+        packed = aggregate == "packed"
 
         def base_round(state, batch, mask, *extra):
-            aset = pt.make_active_set(mask, cap)
+            aset = pt.make_active_set(mask, cap, packed=packed)
             return algo.round_flat_active(state, batch, flat_spec, aset,
                                           *extra, compressor=compressor,
                                           donate_kernel=donate_kernel)
@@ -361,6 +383,7 @@ def run_rounds(
     stale_decay: float = 1.0,
     flat: bool = True,
     store: str = "dense",
+    aggregate: str = "dense",
     compression=None,
     error_feedback: bool = False,
     topk_frac: float = 0.1,
@@ -448,7 +471,34 @@ def run_rounds(
     never contacted. Requires flat=True and a participation policy or
     clock; FedGiA declares `active_tile="population"` (every client is
     rewritten every round by eqs. 15-17) and falls back to the dense
-    round internally.
+    round internally. "offload" moves the resident (m, N) client
+    buffers (and the batch + StaleXbar anchor) into HOST memory
+    (pinned host memory where the backend supports computing on it,
+    else the CPU device — `pt.host_placement`): each round gathers only
+    the (capacity, N) participant tiles to the device, runs
+    `round_flat_active` in tile mode (`ActiveSet.tile_state`), and
+    scatters the updated tiles back host-side — double-buffered (the
+    next round's mask/batch tile are staged while the current round's
+    device compute is in flight) with tile donation off-CPU, so m is
+    bounded by host RAM instead of device HBM. Bitwise equal to
+    store="active" (host gather/scatter is pure data movement —
+    tests/test_store.py); single-device only (no mesh/overlap; the
+    scan flag is accepted but the loop is host-driven, so
+    chunk_size="auto" is rejected). FedGiA's population tile shuttles
+    the full buffers each round instead (residency, not per-round
+    traffic, is what moves off-device). `RoundResult.extras` reports
+    `device_peak_bytes` / `host_resident_bytes`. See
+    docs/engine.md#host-offloaded-store and docs/scaling.md.
+
+    aggregate: eq. (11) aggregation layout for active/offload rounds.
+    "dense" (default) scatters the participant tile back to the dense
+    (m, N) layout before reducing — bitwise the dense store. "packed"
+    sums the (capacity, N) tile directly — O(capacity·N) and no dense
+    (m, N) aggregation temp, at fp tolerance (~1 ulp: XLA associates
+    the two reduction shapes differently). Under a mesh the sharded
+    branch is already packed inside its one psum, so the flag leaves
+    the lowered program unchanged. See
+    docs/engine.md#packed-aggregation.
 
     compression: uplink codec for the flat comm buffer — "none"/None,
     "bf16", "int8", "topk" or a `core.compress.Compressor` instance.
@@ -574,19 +624,20 @@ def run_rounds(
         # same backend rule as carry donation: CPU XLA cannot alias
         # buffers (and the CPU Pallas path is interpret-only)
         donate_kernel = jax.default_backend() != "cpu"
-    if store not in ("dense", "active"):
-        raise ValueError(f"unknown store {store!r}: ('dense', 'active')")
+    if store not in ("dense", "active", "offload"):
+        raise ValueError(
+            f"unknown store {store!r}: ('dense', 'active', 'offload')")
     active_capacity = None
-    if store == "active":
+    if store in ("active", "offload"):
         if not flat:
             raise ValueError(
-                "store='active' packs the flat (m, N) client buffers — it "
+                f"store={store!r} packs the flat (m, N) client buffers — it "
                 "requires the flat round path (flat=True on an algorithm "
                 "providing round_flat; drop --no-flat)"
             )
         if not masked:
             raise ValueError(
-                "store='active' needs a per-round participant set to pack "
+                f"store={store!r} needs a per-round participant set to pack "
                 "the tile from — pass participation= (core.selection) or "
                 "clock= (core.clock)"
             )
@@ -597,6 +648,31 @@ def run_rounds(
             )
         active_capacity = (algo.fed.num_clients if clock is not None
                            else participation.active_capacity)
+    if store == "offload":
+        if mesh is not None:
+            raise ValueError(
+                "store='offload' is the single-device host/device split — "
+                "under a mesh the resident buffers are already sharded "
+                "over devices; pass store='active' instead"
+            )
+        if overlap != "off":
+            raise ValueError(
+                "store='offload' runs the host-driven tile loop — the "
+                "overlapped-collective carry slot (overlap='scatter') "
+                "does not ride it"
+            )
+        if auto_chunk:
+            raise ValueError(
+                "chunk_size='auto' tunes the scan chunk length — the "
+                "host-driven offload loop (store='offload') has no chunks"
+            )
+    if aggregate not in ("dense", "packed"):
+        raise ValueError(
+            f"unknown aggregate {aggregate!r}: ('dense', 'packed')")
+    if aggregate == "packed" and store == "dense":
+        raise ValueError(
+            "aggregate='packed' sums the packed participant tile — it "
+            "requires store='active' or store='offload'")
     compressor = compress.as_compressor(
         compression, error_feedback=error_feedback, topk_frac=topk_frac)
     # the clock prices the wire the codec actually produces, even when
@@ -649,11 +725,13 @@ def run_rounds(
                     jnp.zeros((rows - 1, spec.padded_size), slot0.dtype),
                 ])
             state["ovl_shard"] = slot0
-    round_fn = make_round_fn(algo, mesh, client_axis, masked=masked,
-                             stale=async_rounds, flat_spec=spec,
-                             active_capacity=active_capacity,
-                             compressor=compressor, overlap=overlap,
-                             donate_kernel=donate_kernel)
+    if store != "offload":
+        round_fn = make_round_fn(algo, mesh, client_axis, masked=masked,
+                                 stale=async_rounds, flat_spec=spec,
+                                 active_capacity=active_capacity,
+                                 compressor=compressor, overlap=overlap,
+                                 donate_kernel=donate_kernel,
+                                 aggregate=aggregate)
     if mesh is not None:
         state, batch = shard_inputs(algo, state, batch, mesh, client_axis)
     if donate is None:
@@ -664,6 +742,14 @@ def run_rounds(
                             weighting=stale_weighting, decay=stale_decay)
         if async_rounds else ()
     )
+    if store == "offload":
+        res = _run_offload_loop(
+            algo, state, batch, num_rounds, tol, tol_metric,
+            participation, clock, stale0, async_rounds, spec,
+            active_capacity, compressor, donate_kernel,
+            packed=(aggregate == "packed"), max_staleness=max_staleness)
+        return dataclasses.replace(
+            res, state=unflatten_state(algo, res.state, spec))
     if not scan:
         res = _run_legacy_loop(round_fn, state, batch, num_rounds, tol,
                                tol_metric, participation, stale0,
@@ -941,6 +1027,226 @@ def _run_legacy_loop(round_fn, state, batch, num_rounds, tol, tol_metric,
     wall = time.time() - t0
     history = {k: np.asarray([h[k] for h in hist]) for k in hist[0]} if hist else {}
     return RoundResult(state, history, len(hist), stopped, wall)
+
+
+def _run_offload_loop(algo, state, batch, num_rounds, tol, tol_metric,
+                      participation, clock, stale0, async_rounds,
+                      spec, cap, compressor, donate_kernel, packed,
+                      max_staleness):
+    """Host-driven round loop for ``run_rounds(store="offload")``.
+
+    The resident ``flat_client_keys`` buffers, the per-client batch and
+    the StaleXbar anchor live HOST-side (`pt.OffloadStore` /
+    `pt.host_put`); the device keeps only the globals (x, rng, scalars,
+    FedGiA's gram factors) and the compact (m,) per-client riders
+    (participation/clock state, staleness ages). Each round:
+
+      1. the jitted SELECT step draws the mask / packed row ids on
+         device (the same pure `policy.mask` / `clock.tick` sequence as
+         the scan and legacy drivers, so masks agree between paths);
+      2. the host gathers the (capacity, N) participant tiles
+         (`pt.gather_rows` — the active store's exact clip semantics)
+         and moves them to the device;
+      3. the jitted TILE ROUND runs `algo.round_flat_active` with a
+         tile-mode `ActiveSet` (`tile_state=True`: state accessors are
+         the identity on the pre-gathered tiles, while idx/mask keep
+         resident row semantics for the aggregation and the dense (m,)
+         riders);
+      4. the host scatters the updated tiles back (`pt.scatter_rows`,
+         drop semantics) and applies the stale-anchor refresh write
+         (`anchor[refresh] = x̄` — the identical row select the
+         on-device stores run inside the jit).
+
+    Steps 2/3 are DOUBLE-BUFFERED: the next round's mask draw and
+    (read-only) batch-tile gather are dispatched while the current
+    round's device compute is in flight; only the MUTABLE state tiles
+    wait for the current round's scatter. Off-CPU the device-side tiles
+    are donated into the round (fresh buffers every round).
+
+    Gather/scatter is pure data movement, so the loop is BITWISE
+    ``store="active"`` (tests/test_store.py). FedGiA's population tile
+    (`active_tile="population"`) shuttles the full client buffers +
+    batch each round instead — every client is rewritten every round,
+    so the win is residency (host RAM bounds m), not per-round traffic;
+    its gram factors stay device-resident in the globals.
+
+    Both steps are AOT-compiled before the timed region (the legacy
+    warm-up convention); the compiled tile round's `memory_analysis`
+    (where the backend exposes it) is reported as
+    ``RoundResult.extras["device_peak_bytes"]`` next to
+    ``host_resident_bytes``.
+    """
+    population = getattr(algo, "active_tile", "participants") == "population"
+    client_keys = tuple(k for k in getattr(algo, "flat_client_keys", ())
+                        if k in state)
+    byte_clock = (clock is not None
+                  and getattr(clock, "bandwidth_bps", None) is not None)
+    dev = jax.devices()[0]
+    to_dev = lambda tree: jax.tree.map(lambda l: jax.device_put(l, dev), tree)
+
+    store = pt.OffloadStore({k: state[k] for k in client_keys})
+    gstate = {k: v for k, v in state.items() if k not in client_keys}
+    anchor_h = pt.host_put(stale0.anchor) if async_rounds else None
+    if population:
+        # every client is rewritten every round: the full batch is read
+        # on device each round anyway, so it stays device-resident
+        batch_h, batch_dev = None, to_dev(batch)
+    else:
+        batch_h, batch_dev = pt.host_put_tree(batch), None
+    host_bytes = store.nbytes
+    if batch_h is not None:
+        host_bytes += sum(int(l.nbytes) for l in jax.tree.leaves(batch_h))
+    if anchor_h is not None:
+        host_bytes += int(anchor_h.nbytes)
+
+    if clock is not None:
+        def select(pcs, n):
+            mask, now, cs2 = clock.tick(pcs, n)
+            return mask, pt.make_active_set(mask, cap).idx, now, cs2
+        pcs0 = clock.init()
+    else:
+        def select(pcs, n):
+            mask, ps2 = participation.mask(pcs, n)
+            return (mask, pt.make_active_set(mask, cap).idx,
+                    jnp.float32(0.0), ps2)
+        pcs0 = participation.init()
+
+    def tile_round(gst, tiles, batch_t, mask, sl_in):
+        st = dict(gst)
+        st.update(tiles)
+        aset = pt.make_active_set(mask, cap, tile_state=not population,
+                                  packed=packed)
+        if async_rounds:
+            anchor_t, age, last_used = sl_in
+            sl = api.StaleXbar(anchor_t, age, last_used, max_staleness,
+                               stale0.weighting, stale0.decay)
+            s2, sl2, met = algo.round_flat_active(
+                st, batch_t, spec, aset, sl, compressor=compressor,
+                donate_kernel=donate_kernel)
+            met = _with_staleness_metrics(met, sl2)
+            refresh = None
+            if not population and max_staleness > 0:
+                # the rows the host-side anchor write must refresh —
+                # the view's exact expression on the exact same inputs
+                refresh = jnp.logical_or(mask, age > max_staleness)
+            sl_out = (sl2.anchor, sl2.age, sl2.last_used, refresh)
+        else:
+            s2, met = algo.round_flat_active(
+                st, batch_t, spec, aset, compressor=compressor,
+                donate_kernel=donate_kernel)
+            sl_out = ()
+        s2 = dict(s2)
+        tiles2 = {k: s2.pop(k) for k in client_keys}
+        return s2, tiles2, met, sl_out
+
+    abs_of = lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype)
+    tile_abs = lambda tree: jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((cap,) + l.shape[1:], l.dtype), tree)
+    n0_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    pcs_abs = jax.tree.map(abs_of, pcs0)
+    mask_abs, _, _, _ = jax.eval_shape(select, pcs_abs, n0_abs)
+    select_c = jax.jit(select).lower(pcs_abs, n0_abs).compile()
+    if population:
+        tiles_abs = {k: abs_of(v) for k, v in store.buffers.items()}
+        batch_abs = jax.tree.map(abs_of, batch_dev)
+        anchor_abs = abs_of(anchor_h) if async_rounds else None
+    else:
+        tiles_abs = tile_abs(store.buffers)
+        batch_abs = tile_abs(batch_h)
+        anchor_abs = (jax.ShapeDtypeStruct((cap,) + anchor_h.shape[1:],
+                                           anchor_h.dtype)
+                      if async_rounds else None)
+    sl_abs = ((anchor_abs, abs_of(stale0.age), abs_of(stale0.last_used))
+              if async_rounds else ())
+    if jax.default_backend() != "cpu":
+        # fresh device buffers every round: tiles + (participants) batch
+        # tile + staleness inputs are all donatable; the population batch
+        # is reused every round and must stay alive
+        dn = (1, 4) if population else (1, 2, 4)
+    else:
+        dn = ()
+    round_c = jax.jit(tile_round, donate_argnums=dn).lower(
+        jax.tree.map(abs_of, gstate), tiles_abs, batch_abs, mask_abs,
+        sl_abs).compile()
+
+    extras = {"host_resident_bytes": int(host_bytes),
+              "device_peak_bytes": None}
+    ma_fn = getattr(round_c, "memory_analysis", None)
+    if ma_fn is not None:
+        try:
+            ma = ma_fn()
+            extras["device_peak_bytes"] = int(
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+        except Exception:
+            pass
+
+    gather_h = lambda tree, i: jax.tree.map(
+        lambda l: pt.gather_rows(l, i), tree)
+    hist = []
+    stopped = False
+    if async_rounds:
+        age, last_used = stale0.age, stale0.last_used
+    pcs = pcs0
+    mask, idx, now, pcs = select_c(pcs, jnp.int32(0))
+    if population:
+        idx_h, staged = None, batch_dev
+    else:
+        idx_h = pt.host_put(idx)
+        staged = to_dev(gather_h(batch_h, idx_h))
+    t0 = time.time()
+    for i in range(num_rounds):
+        if population:
+            tiles = to_dev(store.buffers)
+            sl_in = ((to_dev(anchor_h), age, last_used)
+                     if async_rounds else ())
+        else:
+            tiles = to_dev(store.gather_tiles(idx_h))
+            sl_in = ((to_dev(pt.gather_rows(anchor_h, idx_h)), age,
+                      last_used) if async_rounds else ())
+        out = round_c(gstate, tiles, staged, mask, sl_in)
+        cur_mask, cur_idx_h, cur_now = mask, idx_h, now
+        if i + 1 < num_rounds:
+            # double-buffer: next round's mask draw + read-only batch
+            # tile overlap the in-flight device round; the mutable state
+            # tiles wait for this round's scatter below
+            mask, idx, now, pcs = select_c(pcs, jnp.int32(i + 1))
+            if not population:
+                idx_h = pt.host_put(idx)
+                staged = to_dev(gather_h(batch_h, idx_h))
+        gstate, tiles2, met, sl_out = out
+        if population:
+            store.buffers = {k: pt.host_put(v) for k, v in tiles2.items()}
+        else:
+            store.scatter_tiles(cur_idx_h, tiles2)
+        if async_rounds:
+            anchor_new, age, last_used, refresh = sl_out
+            if population:
+                anchor_h = pt.host_put(anchor_new)
+            elif max_staleness > 0:
+                # the dense refresh write, host-side: participant +
+                # force-synced rows take the fresh x̄ — bitwise the
+                # on-device stores' row select (same inputs, same op)
+                anchor_h = jnp.where(
+                    pt.host_put(refresh)[:, None],
+                    pt.host_put(anchor_new)[None, :], anchor_h)
+        met = dict(met)
+        if clock is not None:
+            met["sim_time"] = cur_now
+            if byte_clock:
+                met = _with_byte_metrics(met, cur_mask, clock)
+        met_h = jax.device_get(met)
+        hist.append(met_h)
+        if tol > 0 and float(met_h[tol_metric]) < tol:
+            stopped = True
+            break
+    wall = time.time() - t0
+    state_f = dict(gstate)
+    for k, b in store.buffers.items():
+        state_f[k] = jax.device_put(b, dev)
+    history = ({k: np.asarray([h[k] for h in hist]) for k in hist[0]}
+               if hist else {})
+    return RoundResult(state_f, history, len(hist), stopped, wall, extras)
 
 
 # --------------------------------------------------------------- generic scan

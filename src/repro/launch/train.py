@@ -157,7 +157,12 @@ def validate_flags(args) -> dict:
     is a clock feature) or non-positive; `--overlap scatter` with
     `--no-flat` (the carry slot lives on the flat buffers); `--pod`
     without `--shard-clients`, or a `--shard-clients` not divisible by
-    `--pod` (each pod holds shard_clients/pod devices).
+    `--pod` (each pod holds shard_clients/pod devices); `--store
+    offload` with `--shard-clients` (the host/device split is
+    single-device), `--overlap scatter` (no carry slot in the
+    host-driven loop) or `--chunk auto` (no chunks to tune);
+    `--aggregate packed` with `--store dense` (the packed sum needs the
+    participant tile).
 
     Returns the resolved engine knobs: participation kind, clock kind,
     whether async rounds are on (a clock implies them), the parsed
@@ -195,17 +200,37 @@ def validate_flags(args) -> dict:
             "--kernel on/interpret requires the flat round path "
             "(drop --no-flat)")
     store = getattr(args, "store", "dense")
-    if store == "active":
+    if store in ("active", "offload"):
         if getattr(args, "no_flat", False):
             raise SystemExit(
-                "--store active packs the flat (m, N) client buffers and "
+                f"--store {store} packs the flat (m, N) client buffers and "
                 "requires the flat round path (drop --no-flat)")
         if kind == "full" and clock_kind == "none":
             raise SystemExit(
-                "--store active needs a per-round participant set to pack "
+                f"--store {store} needs a per-round participant set to pack "
                 "the tile from: pass --participation (uniform/weighted/"
                 "cyclic give the fixed-size tile; others bound it by m) "
                 "or --clock")
+    if store == "offload":
+        if getattr(args, "shard_clients", 0) > 1:
+            raise SystemExit(
+                "--store offload is the single-device host/device split — "
+                "under --shard-clients the resident buffers are already "
+                "spread over devices; use --store active")
+        if getattr(args, "overlap", "off") == "scatter":
+            raise SystemExit(
+                "--store offload runs the host-driven tile loop — the "
+                "overlapped-collective carry slot (--overlap scatter) "
+                "does not ride it")
+        if chunk == "auto":
+            raise SystemExit(
+                "--chunk auto tunes the scan chunk length — the "
+                "host-driven offload loop (--store offload) has no chunks")
+    aggregate = getattr(args, "aggregate", "dense")
+    if aggregate == "packed" and store == "dense":
+        raise SystemExit(
+            "--aggregate packed sums the packed participant tile — it "
+            "requires --store active or --store offload")
     if clock_kind != "none" and kind != "full":
         raise SystemExit(
             "--clock derives the arrival mask from simulated finish times "
@@ -293,6 +318,7 @@ def validate_flags(args) -> dict:
         "chunk": chunk,
         "flat": not getattr(args, "no_flat", False),
         "store": store,
+        "aggregate": aggregate,
         "use_kernel": use_kernel,
         "kernel_interpret": kernel_interpret,
         "compression": None if compression == "none" else compression,
@@ -400,6 +426,14 @@ def train(args) -> dict:
         cap = args.clients if clock is not None else policy.active_capacity
         log.info("active-set store: (%d, N) participant tile gathered/"
                  "scattered per round (m=%d resident)", cap, args.clients)
+    elif parsed["store"] == "offload":
+        cap = args.clients if clock is not None else policy.active_capacity
+        log.info("host-offloaded store: resident client buffers in host "
+                 "memory, (%d, N) tiles shuttled per round (m=%d)",
+                 cap, args.clients)
+    if parsed["aggregate"] == "packed":
+        log.info("packed aggregation: eq. (11) sums the participant tile "
+                 "directly (fp tolerance vs the bitwise dense layout)")
 
     res = run_rounds(
         algo, state, batch, args.rounds,
@@ -411,6 +445,7 @@ def train(args) -> dict:
         stale_decay=getattr(args, "stale_decay", 1.0),
         flat=parsed["flat"],
         store=parsed["store"],
+        aggregate=parsed["aggregate"],
         compression=parsed["compression"],
         error_feedback=parsed["error_feedback"],
         topk_frac=parsed["topk_frac"],
@@ -506,19 +541,34 @@ def build_parser() -> argparse.ArgumentParser:
                          "(kernel on TPU, fused jnp elsewhere), on, off, "
                          "or interpret (Pallas interpret mode — CPU "
                          "validation). Requires the flat path")
-    ap.add_argument("--store", default="dense", choices=["dense", "active"],
+    ap.add_argument("--store", default="dense",
+                    choices=["dense", "active", "offload"],
                     help="client-state execution strategy for the flat "
                          "path: dense (default, every round's working set "
-                         "is (m, N) with non-participants masked out) or "
+                         "is (m, N) with non-participants masked out), "
                          "active (each round gathers the participants "
                          "into a packed (capacity, N) tile, runs local "
                          "work at O(capacity) instead of O(m), and "
                          "scatters per-client state back — states bitwise-"
                          "equal to dense, loss/grad diagnostics become "
                          "participant means; the million-client regime, "
-                         "see docs/engine.md#active-set-client-store). "
-                         "Requires --participation or --clock; rejected "
-                         "with --no-flat")
+                         "see docs/engine.md#active-set-client-store), or "
+                         "offload (the active tile loop with the resident "
+                         "(m, N) client buffers + batch + stale anchor in "
+                         "HOST memory — m bounded by host RAM, bitwise "
+                         "equal to active; single device only, see "
+                         "docs/engine.md#host-offloaded-store and "
+                         "docs/scaling.md). Requires --participation or "
+                         "--clock; rejected with --no-flat")
+    ap.add_argument("--aggregate", default="dense",
+                    choices=["dense", "packed"],
+                    help="eq.-(11) aggregation layout for the active/"
+                         "offload stores: dense (default — scatter the "
+                         "participant tile back to the (m, N) layout "
+                         "before reducing, bitwise the dense store) or "
+                         "packed (sum the (capacity, N) tile directly — "
+                         "O(capacity*N), no dense aggregation temp, ~1 ulp "
+                         "fp tolerance; docs/engine.md#packed-aggregation)")
     ap.add_argument("--shard-clients", type=int, default=0,
                     help="shard the client axis over an N-way data mesh")
     ap.add_argument("--pod", type=int, default=0,

@@ -277,6 +277,23 @@ class ActiveSet:
     weighted / cyclic) packs to exactly |C| rows; variable-cardinality
     sources (availability, wall-clock arrivals) pack to m rows — correct,
     but no smaller than dense (see docs/engine.md#active-set-client-store).
+
+    ``tile_state`` (static) marks the HOST-OFFLOADED round
+    (``run_rounds(store="offload")``): the per-client state buffers the
+    round receives are already the pre-gathered (capacity, N) participant
+    tiles — the engine gathered them from the host-resident store before
+    entering the jit — so :meth:`gather_state` / :meth:`scatter_state`
+    become the identity and the engine owns the host-side write-back.
+    ``idx`` / ``valid`` / ``count`` / ``mask`` keep their REAL resident
+    semantics in both modes: dense (m,)-shaped riders (staleness ages,
+    aggregation weights) and the dense-layout aggregation scatter still
+    address the true resident rows. See docs/engine.md#host-offloaded-store.
+
+    ``packed`` (static) opts the round's eq. (11) into the fp-tolerance
+    PACKED aggregation (``run_rounds(aggregate="packed")``): the
+    aggregation sums the (capacity, N) tile directly instead of scattering
+    back to the dense (m, N) layout first — O(capacity·N), ~1 ulp from the
+    bitwise dense default. See docs/engine.md#packed-aggregation.
     """
 
     idx: jax.Array  # (capacity,) int32 rows into the resident store
@@ -285,6 +302,10 @@ class ActiveSet:
     mask: jax.Array  # (m_local,) bool — the round's dense mask
     capacity: int = dataclasses.field(metadata=dict(static=True))
     num_clients: int = dataclasses.field(metadata=dict(static=True))
+    tile_state: bool = dataclasses.field(default=False,
+                                         metadata=dict(static=True))
+    packed: bool = dataclasses.field(default=False,
+                                     metadata=dict(static=True))
 
     def gather(self, buf: jax.Array) -> jax.Array:
         """Resident (m, ...) buffer -> packed (capacity, ...) tile."""
@@ -295,9 +316,27 @@ class ActiveSet:
         rows carry the sentinel index and are dropped)."""
         return scatter_rows(buf, self.idx, tile)
 
+    def gather_state(self, buf: jax.Array) -> jax.Array:
+        """Per-client STATE accessor: resident (m, ...) buffer -> packed
+        tile — or the identity under ``tile_state`` (the engine already
+        gathered the tile from the host-resident store). Algorithms must
+        route their `flat_client_keys` reads through this instead of
+        :meth:`gather`, which keeps resident row semantics for dense
+        (m,)-shaped riders in both modes."""
+        return buf if self.tile_state else self.gather(buf)
+
+    def scatter_state(self, buf: jax.Array, tile: jax.Array) -> jax.Array:
+        """Per-client STATE write-back twin of :meth:`gather_state`: under
+        ``tile_state`` the updated tile is returned as-is (the engine
+        scatters it into the host-resident rows outside the jit), else
+        the ordinary resident-row scatter."""
+        return tile if self.tile_state else self.scatter(buf, tile)
+
     def gather_tree(self, tree: Pytree) -> Pytree:
-        """Gather every leaf's active rows (e.g. the per-client batch)."""
-        return jax.tree.map(self.gather, tree)
+        """Gather every leaf's active rows (e.g. the per-client batch).
+        Routed through :meth:`gather_state`: the host-offloaded engine
+        pre-gathers the batch tile with the state tiles."""
+        return jax.tree.map(self.gather_state, tree)
 
     def zero_invalid(self, tile: jax.Array) -> jax.Array:
         """Zero the padding rows of a (capacity, ...) tile so reductions
@@ -309,16 +348,20 @@ class ActiveSet:
 jax.tree_util.register_dataclass(
     ActiveSet,
     data_fields=["idx", "valid", "count", "mask"],
-    meta_fields=["capacity", "num_clients"],
+    meta_fields=["capacity", "num_clients", "tile_state", "packed"],
 )
 
 
-def make_active_set(mask: jax.Array, capacity: int) -> ActiveSet:
+def make_active_set(mask: jax.Array, capacity: int, *,
+                    tile_state: bool = False,
+                    packed: bool = False) -> ActiveSet:
     """Pack a dense (m,) participation mask into an :class:`ActiveSet`.
 
     ``capacity`` must upper-bound the mask's population count (the engine
     derives it from the policy's fixed cardinality, or uses m); overflow
     would silently drop participants, so callers own that invariant.
+    ``tile_state`` / ``packed`` set the static store/aggregation modes
+    (see the :class:`ActiveSet` docstring).
     """
     m = mask.shape[0]
     (idx,) = jnp.nonzero(mask, size=capacity, fill_value=m)
@@ -330,6 +373,8 @@ def make_active_set(mask: jax.Array, capacity: int) -> ActiveSet:
         mask=mask,
         capacity=capacity,
         num_clients=m,
+        tile_state=tile_state,
+        packed=packed,
     )
 
 
@@ -345,3 +390,83 @@ def scatter_rows(buf: jax.Array, idx: jax.Array, rows: jax.Array) -> jax.Array:
     resident buffer; sentinel (out-of-range) indices are dropped. Under
     buffer donation XLA updates the resident store in place."""
     return buf.at[idx].set(rows, mode="drop")
+
+
+# --- host-resident placement for run_rounds(store="offload") -----------
+#
+# The offloaded store keeps the resident (m, N) client buffers in HOST
+# memory and only moves (capacity, N) participant tiles to the device
+# each round. Placement preference: pinned host memory of the default
+# device (sharding memory_kind="pinned_host", zero-copy DMA on TPU/GPU)
+# when the backend both accepts it AND can run the row gather/scatter on
+# it; otherwise the CPU backend's device. On a CPU-only process the two
+# coincide and every transfer below is a no-op.
+
+_HOST_PLACEMENT = None
+
+
+def host_placement():
+    """The device/sharding host-resident offload buffers are committed
+    to. Probed once per process; the probe runs the exact ops the
+    offload store needs (row take / indexed set), so a backend that
+    merely *stores* pinned-host arrays but cannot compute on them falls
+    back to the CPU device."""
+    global _HOST_PLACEMENT
+    if _HOST_PLACEMENT is not None:
+        return _HOST_PLACEMENT
+    placement = None
+    if jax.default_backend() != "cpu":
+        try:
+            sharding = jax.sharding.SingleDeviceSharding(
+                jax.devices()[0], memory_kind="pinned_host")
+            probe = jax.device_put(jnp.zeros((2, 2), jnp.float32), sharding)
+            idx = jax.device_put(jnp.zeros((1,), jnp.int32), sharding)
+            out = probe.at[idx].set(
+                jnp.take(probe, idx, axis=0, mode="clip"), mode="drop")
+            jax.block_until_ready(out)
+            placement = sharding
+        except Exception:
+            placement = None
+    if placement is None:
+        placement = jax.local_devices(backend="cpu")[0]
+    _HOST_PLACEMENT = placement
+    return placement
+
+
+def host_put(x) -> jax.Array:
+    """Commit an array to the offload store's host placement."""
+    return jax.device_put(x, host_placement())
+
+
+def host_put_tree(tree: Pytree) -> Pytree:
+    return jax.tree.map(host_put, tree)
+
+
+class OffloadStore:
+    """Host-resident flat client buffers for ``run_rounds(store="offload")``.
+
+    Holds the per-client ``flat_client_keys`` buffers (z/π/h, λ, cᵢ, EF
+    residuals) committed to :func:`host_placement`. Gather/scatter reuse
+    the exact :func:`gather_rows` / :func:`scatter_rows` semantics of the
+    device-resident active store (clip reads, drop writes) — pure data
+    movement, so the round tiles carry bit-identical values and the
+    offloaded store is bitwise-equal to ``store="active"``. See
+    docs/engine.md#host-offloaded-store.
+    """
+
+    def __init__(self, buffers: dict):
+        self.buffers = {k: host_put(v) for k, v in buffers.items()}
+
+    def gather_tiles(self, idx: jax.Array) -> dict:
+        """(capacity,) host row ids -> {key: (capacity, ...) host tile}."""
+        return {k: gather_rows(b, idx) for k, b in self.buffers.items()}
+
+    def scatter_tiles(self, idx: jax.Array, tiles: dict) -> None:
+        """Write the round's updated tiles back into the resident rows."""
+        for k, rows in tiles.items():
+            self.buffers[k] = scatter_rows(self.buffers[k], idx,
+                                           host_put(rows))
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(b.nbytes) for b in self.buffers.values())

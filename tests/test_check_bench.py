@@ -1,0 +1,71 @@
+"""tools/check_bench.py --update-baseline must not lose curation keys.
+
+The committed baselines carry a hand-written top-level `_meta` block
+(regeneration command + what the numbers mean) that benchmark dumps
+don't produce. The old implementation was a plain file copy, so every
+refresh silently dropped `_meta` and it had to be hand-restored in
+review. `update_baseline` carries every top-level `_*` key of the old
+baseline that the fresh dump lacks.
+"""
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _load_check_bench():
+    spec = importlib.util.spec_from_file_location(
+        "check_bench", ROOT / "tools" / "check_bench.py")
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules["check_bench"] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+cb = _load_check_bench()
+
+
+def test_update_baseline_preserves_meta(tmp_path, capsys):
+    baseline = tmp_path / "baseline.json"
+    current = tmp_path / "current.json"
+    meta = {"generated_with": "benchmarks/run.py", "note": "hand-written"}
+    baseline.write_text(json.dumps(
+        {"_meta": meta, "engine": {"paths": {"scan": {"rounds_per_s": 10.0}}}}))
+    current.write_text(json.dumps(
+        {"engine": {"paths": {"scan": {"rounds_per_s": 12.0}}}}))
+    cb.update_baseline(current, baseline)
+    out = json.loads(baseline.read_text())
+    assert out["_meta"] == meta
+    assert out["engine"]["paths"]["scan"]["rounds_per_s"] == 12.0
+    assert list(out)[0] == "_meta"  # meta stays on top for readers
+    assert "kept _meta" in capsys.readouterr().out
+
+
+def test_update_baseline_fresh_meta_wins(tmp_path):
+    """A dump that DOES carry its own _meta is authoritative — no merge."""
+    baseline = tmp_path / "baseline.json"
+    current = tmp_path / "current.json"
+    baseline.write_text(json.dumps({"_meta": {"note": "old"}, "engine": {}}))
+    current.write_text(json.dumps({"_meta": {"note": "new"}, "engine": {}}))
+    cb.update_baseline(current, baseline)
+    assert json.loads(baseline.read_text())["_meta"] == {"note": "new"}
+
+
+def test_update_baseline_without_existing_baseline(tmp_path):
+    baseline = tmp_path / "baseline.json"
+    current = tmp_path / "current.json"
+    current.write_text(json.dumps({"engine": {"paths": {}}}))
+    cb.update_baseline(current, baseline)
+    assert json.loads(baseline.read_text()) == {"engine": {"paths": {}}}
+
+
+def test_committed_baselines_still_carry_meta():
+    """Anchor the invariant the fix exists for: both committed baselines
+    keep their _meta block."""
+    for name in ("BENCH_engine.baseline.json", "BENCH_wallclock.baseline.json"):
+        data = json.loads(
+            (ROOT / "benchmarks" / "baselines" / name).read_text())
+        assert "generated_with" in data["_meta"], name
+        assert "note" in data["_meta"], name

@@ -18,6 +18,15 @@ Also covers: ActiveSet packing/gather/scatter units, the engine's
 store validation, auto-chunk composition, and (subprocess) the zero-tail
 debug assertion (REPRO_DEBUG_TAIL=1) plus the sharded active round's
 ONE model-size all-reduce.
+
+The HOST-OFFLOADED store (`store="offload"`) moves the resident client
+buffers + batch + stale anchor into host memory and shuttles (capacity,
+N) tiles per round; host gather/scatter is pure data movement, so it
+must be BITWISE `store="active"` on every path — including the full
+metric history (same tile bits through same-shaped reductions). The
+PACKED aggregation (`aggregate="packed"`) sums the participant tile
+directly and is held to fp tolerance against the dense layout, with the
+sharded packed round still lowering to ONE model-size all-reduce.
 """
 import subprocess
 import sys
@@ -381,3 +390,295 @@ def test_active_sharded_one_all_reduce_and_parity():
         env=fake_device_env(8), capture_output=True, text=True, timeout=900,
     )
     assert "ACTIVE_SHARDED_OK" in out.stdout, out.stdout + out.stderr
+
+
+# ------------------------------------------- offload == active, bitwise
+def _assert_offload_equiv(res, ref):
+    """Offload (res) vs active (ref): bitwise state AND bitwise full
+    history — host gather/scatter is pure data movement, so every tile
+    entering the round carries the active store's exact bits and every
+    metric leaves through the same-shaped reductions."""
+    assert res.rounds_run == ref.rounds_run
+    assert set(res.history) == set(ref.history)
+    for k in ref.history:
+        np.testing.assert_array_equal(res.history[k], ref.history[k],
+                                      err_msg=k)
+    for key in ref.state:
+        ok = jax.tree.map(lambda a, b: bool(jnp.array_equal(a, b)),
+                          res.state[key], ref.state[key])
+        assert all(jax.tree.leaves(ok)), f"state[{key!r}] diverged"
+
+
+def _run_offload_pair(algo, state, batch, **kw):
+    ref = run_rounds(algo, state, batch, ROUNDS, store="active", **kw)
+    res = run_rounds(algo, state, batch, ROUNDS, store="offload", **kw)
+    return res, ref
+
+
+@pytest.mark.parametrize("use_scan", [True, False], ids=["scan", "legacy"])
+@pytest.mark.parametrize("algo_key", FIVE)
+def test_offload_matches_active_masked(problem, algo_key, use_scan):
+    """5 algos x scan/legacy under uniform masked participation: the
+    host-resident tiles replay the active store bit for bit (FedGiA's
+    population tile shuttles the full buffers instead)."""
+    algo, state = _make(problem, algo_key)
+    _, batch = problem
+    res, ref = _run_offload_pair(
+        algo, state, batch, scan=use_scan,
+        participation=make_policy("uniform", M, 0.5, seed=3))
+    _assert_offload_equiv(res, ref)
+
+
+@pytest.mark.parametrize("algo_key", FIVE)
+def test_offload_matches_active_async(problem, algo_key):
+    """Stale-x̄ rounds: the anchor buffer rides host memory and the
+    engine applies the dense refresh write host-side (`anchor[refresh] =
+    x̄` — the view's exact row select), ages stay device (m,) riders."""
+    algo, state = _make(problem, algo_key)
+    _, batch = problem
+    res, ref = _run_offload_pair(algo, state, batch,
+                                 participation=make_policy("periodic", M),
+                                 async_rounds=True, max_staleness=2)
+    _assert_offload_equiv(res, ref)
+
+
+def test_offload_matches_active_async_zero_staleness(problem):
+    """max_staleness=0 (always fresh): the host anchor is never read or
+    written — still bitwise the active engine."""
+    algo, state = _make(problem, "fedpd")
+    _, batch = problem
+    res, ref = _run_offload_pair(algo, state, batch,
+                                 participation=make_policy("periodic", M),
+                                 async_rounds=True, max_staleness=0)
+    _assert_offload_equiv(res, ref)
+
+
+@pytest.mark.parametrize("algo_key", ["fedavg", "scaffold"])
+def test_offload_matches_active_clocked_weighted(problem, algo_key):
+    """Wall-clock arrivals (tile capacity = m) + staleness-weighted
+    eq. (11): the dense (m,) weights stay device-resident and gather by
+    REAL row ids inside the tile round — bitwise the active store."""
+    algo, state = _make(problem, algo_key)
+    _, batch = problem
+    clk = ComputeClock(M, 1.0 + (np.arange(M) % 3))
+    res, ref = _run_offload_pair(algo, state, batch, clock=clk,
+                                 max_staleness=3, stale_weighting="poly",
+                                 stale_decay=0.5)
+    _assert_offload_equiv(res, ref)
+
+
+def test_offload_ef_stale_composition(problem):
+    """EF residuals ride the host store: the codec's residual tile is
+    gathered/advanced/scattered through the same host rows as any client
+    state, composed with staleness and the byte-accurate wire clock —
+    bitwise the active store, bytes_up included."""
+    algo, state = _make(problem, "scaffold")
+    _, batch = problem
+    clk = ComputeClock(M, 1.0 + (np.arange(M) % 3), bandwidth_bps=1e6)
+    res, ref = _run_offload_pair(algo, state, batch, clock=clk,
+                                 max_staleness=2, compression="int8",
+                                 error_feedback=True)
+    _assert_offload_equiv(res, ref)
+
+
+def test_offload_early_stop_matches_active(problem):
+    """The offload loop's per-round host sync applies the eq.-(35) tol
+    rule on the same metric stream — same stop round, same state."""
+    algo, state = _make(problem, "fedgia", k0=5)
+    _, batch = problem
+    kw = dict(tol=1e-9, participation=make_policy("uniform", M, 0.5, seed=3))
+    ref = run_rounds(algo, state, batch, 300, scan=False, store="active",
+                     **kw)
+    res = run_rounds(algo, state, batch, 300, store="offload", **kw)
+    assert ref.stopped_early and res.stopped_early
+    assert res.rounds_run == ref.rounds_run
+    for key in ref.state:
+        ok = jax.tree.map(lambda a, b: bool(jnp.array_equal(a, b)),
+                          res.state[key], ref.state[key])
+        assert all(jax.tree.leaves(ok)), key
+
+
+def test_offload_reports_memory_extras(problem):
+    """RoundResult.extras carries the offload footprint: the buffers that
+    left the device and (where XLA reports it) the compiled tile round's
+    peak device bytes."""
+    algo, state = _make(problem, "fedpd")
+    _, batch = problem
+    res = run_rounds(algo, state, batch, 3, store="offload",
+                     participation=make_policy("uniform", M, 0.5, seed=3))
+    assert res.extras["host_resident_bytes"] > 0
+    peak = res.extras["device_peak_bytes"]
+    assert peak is None or peak > 0
+    # dense/active paths don't populate extras
+    ref = run_rounds(algo, state, batch, 3, store="active",
+                     participation=make_policy("uniform", M, 0.5, seed=3))
+    assert ref.extras == {}
+
+
+def test_tile_state_accessors_are_identity():
+    """tile_state=True: gather_state/scatter_state pass pre-gathered
+    tiles through; plain gather/scatter keep REAL resident row
+    semantics (the dense riders and the aggregation depend on it)."""
+    mask = jnp.asarray([0, 1, 0, 1], bool)
+    aset = pt.make_active_set(mask, capacity=2, tile_state=True)
+    tile = jnp.arange(6, dtype=jnp.float32).reshape(2, 3)
+    assert aset.gather_state(tile) is tile
+    assert aset.scatter_state(tile, tile * 2) is not tile
+    np.testing.assert_array_equal(np.asarray(aset.scatter_state(tile,
+                                                                tile * 2)),
+                                  np.asarray(tile) * 2)
+    dense = jnp.arange(4, dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(aset.gather(dense)),
+                                  [1.0, 3.0])
+    # resident mode: gather_state == gather
+    rset = pt.make_active_set(mask, capacity=2)
+    buf = jnp.arange(12, dtype=jnp.float32).reshape(4, 3)
+    np.testing.assert_array_equal(np.asarray(rset.gather_state(buf)),
+                                  np.asarray(rset.gather(buf)))
+
+
+def test_offload_store_roundtrip_bitwise():
+    """OffloadStore gather/scatter == the device store's
+    gather_rows/scatter_rows, bit for bit (clip reads, drop writes)."""
+    buf = jnp.arange(20, dtype=jnp.float32).reshape(5, 4)
+    store = pt.OffloadStore({"z": buf})
+    idx = pt.host_put(jnp.asarray([1, 3, 5], jnp.int32))  # 5 = sentinel
+    tiles = store.gather_tiles(idx)
+    np.testing.assert_array_equal(np.asarray(tiles["z"]),
+                                  np.asarray(pt.gather_rows(buf, idx)))
+    store.scatter_tiles(idx, {"z": tiles["z"] * -1.0})
+    np.testing.assert_array_equal(
+        np.asarray(store.buffers["z"]),
+        np.asarray(pt.scatter_rows(buf, idx, tiles["z"] * -1.0)))
+    assert store.nbytes == int(buf.nbytes)
+
+
+def test_offload_validation(problem):
+    algo, state = _make(problem, "fedavg")
+    _, batch = problem
+    pol = lambda: make_policy("uniform", M, 0.5, seed=0)
+    with pytest.raises(ValueError, match="participant"):
+        run_rounds(algo, state, batch, 2, store="offload")
+    with pytest.raises(ValueError, match="flat"):
+        run_rounds(algo, state, batch, 2, store="offload",
+                   participation=pol(), flat=False)
+    with pytest.raises(ValueError, match="no chunks"):
+        run_rounds(algo, state, batch, 2, store="offload",
+                   participation=pol(), chunk_size="auto")
+    with pytest.raises(ValueError, match="overlap"):
+        run_rounds(algo, state, batch, 2, store="offload",
+                   participation=pol(), overlap="scatter")
+    with pytest.raises(ValueError, match="unknown aggregate"):
+        run_rounds(algo, state, batch, 2, store="active",
+                   participation=pol(), aggregate="sparse")
+    with pytest.raises(ValueError, match="packed"):
+        run_rounds(algo, state, batch, 2, store="dense",
+                   participation=pol(), aggregate="packed")
+
+
+# ------------------------------------------ packed aggregation (fp tol)
+@pytest.mark.parametrize("algo_key", ["fedavg", "scaffold"])
+def test_packed_matches_dense_fp(problem, algo_key):
+    """aggregate='packed' sums the (capacity, N) tile directly — fp
+    tolerance vs the bitwise dense layout (~1 ulp: XLA associates the
+    m-row and capacity-row reductions differently). SCAFFOLD also
+    exercises the extra_mean rider (control-variate delta)."""
+    algo, state = _make(problem, algo_key)
+    _, batch = problem
+    pol = lambda: make_policy("uniform", M, 0.5, seed=3)
+    ref = run_rounds(algo, state, batch, ROUNDS, store="active",
+                     participation=pol())
+    res = run_rounds(algo, state, batch, ROUNDS, store="active",
+                     aggregate="packed", participation=pol())
+    assert res.rounds_run == ref.rounds_run
+    for key in ref.state:
+        jax.tree.map(
+            lambda a, b: np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-7),
+            res.state[key], ref.state[key])
+    np.testing.assert_allclose(res.history["f_xbar"],
+                               ref.history["f_xbar"], rtol=1e-5)
+
+
+def test_packed_weighted_matches_dense_fp(problem):
+    """The staleness-weighted packed sum gathers the dense (m,) weights
+    by real row ids — fp-equal to the dense weighted aggregate."""
+    algo, state = _make(problem, "fedavg")
+    _, batch = problem
+    clk = lambda: ComputeClock(M, 1.0 + (np.arange(M) % 3))
+    ref = run_rounds(algo, state, batch, ROUNDS, store="active", clock=clk(),
+                     max_staleness=3, stale_weighting="poly", stale_decay=0.5)
+    res = run_rounds(algo, state, batch, ROUNDS, store="active",
+                     aggregate="packed", clock=clk(), max_staleness=3,
+                     stale_weighting="poly", stale_decay=0.5)
+    for key in ref.state:
+        jax.tree.map(
+            lambda a, b: np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-7),
+            res.state[key], ref.state[key])
+
+
+def test_packed_offload_matches_packed_active_bitwise(problem):
+    """The two new modes compose: offload+packed is bitwise
+    active+packed (the store moves data, the aggregate changes math —
+    independent axes)."""
+    algo, state = _make(problem, "scaffold")
+    _, batch = problem
+    pol = lambda: make_policy("uniform", M, 0.5, seed=3)
+    ref = run_rounds(algo, state, batch, ROUNDS, store="active",
+                     aggregate="packed", participation=pol())
+    res = run_rounds(algo, state, batch, ROUNDS, store="offload",
+                     aggregate="packed", participation=pol())
+    _assert_offload_equiv(res, ref)
+
+
+_SHARDED_PACKED_SCRIPT = textwrap.dedent(
+    """
+    import jax, jax.numpy as jnp, numpy as np
+    from hlo_guard import assert_barrier_round
+    from repro.config import FedConfig
+    from repro.core import engine, make_algorithm, make_policy
+    from repro.data import linreg_noniid
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import LeastSquares
+    from repro.utils import pytree as pt
+
+    m, n, d = 8, 24, 320
+    batch = {k: jnp.asarray(v) for k, v in linreg_noniid(0, d, n, m).items()}
+    model = LeastSquares(n)
+    mesh = make_host_mesh(data=8)
+
+    fed = FedConfig(algorithm="scaffold", num_clients=m, k0=3, lr=0.01)
+    algo = make_algorithm(fed, model.loss, model=model)
+    s0 = algo.init(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(1),
+                   init_batch=batch)
+    spec = pt.ravel_spec(s0["x"])
+    s0f = engine.flatten_state(algo, s0, spec)
+    cap = make_policy("uniform", m, 0.5).active_capacity
+    st, b = engine.shard_inputs(algo, s0f, batch, mesh)
+    mask = jnp.ones((m,), bool)
+
+    def hlo(aggregate):
+        rf = engine.make_round_fn(algo, mesh, masked=True, flat_spec=spec,
+                                  active_capacity=cap, aggregate=aggregate)
+        return jax.jit(rf).lower(st, b, mask).compile().as_text()
+
+    txt = hlo("packed")
+    assert_barrier_round(txt, "scaffold-packed")
+    # under a mesh the sharded branch is ALREADY packed inside its one
+    # psum: the flag must leave the lowered program unchanged
+    assert txt == hlo("dense"), "packed flag changed the sharded program"
+    print("PACKED_SHARDED_OK one model-size all-reduce")
+    """
+)
+
+
+def test_packed_sharded_one_all_reduce():
+    """The sharded packed round keeps eq. (11) as exactly ONE model-size
+    all-reduce, and the packed flag is a program-level no-op under a
+    mesh (the sharded branch already sums the packed tile)."""
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARDED_PACKED_SCRIPT],
+        env=fake_device_env(8), capture_output=True, text=True, timeout=900,
+    )
+    assert "PACKED_SHARDED_OK" in out.stdout, out.stdout + out.stderr

@@ -57,6 +57,19 @@ def _args(*extra):
     (["--store", "active", "--no-flat"],
      "--store active packs the flat"),
     (["--store", "active"], "--store active needs a per-round participant"),
+    # the offload store is the single-device host/device split and runs a
+    # host-driven loop: no sharding, no overlap carry slot, no scan chunks
+    (["--store", "offload", "--no-flat"],
+     "--store offload packs the flat"),
+    (["--store", "offload"], "--store offload needs a per-round participant"),
+    (["--store", "offload", "--participation", "uniform",
+      "--shard-clients", "4"], "single-device host/device split"),
+    (["--store", "offload", "--participation", "uniform",
+      "--overlap", "scatter"], "does not ride it"),
+    (["--store", "offload", "--participation", "uniform",
+      "--chunk", "auto"], "has no chunks"),
+    # the packed aggregate sums a participant tile — dense store has none
+    (["--aggregate", "packed"], "requires --store active or --store offload"),
     # codecs run on the flat comm buffer; EF needs a lossy codec to carry
     # a residual for; topk-frac belongs to topk and must be a fraction
     (["--compression", "int8", "--no-flat"],
@@ -140,6 +153,22 @@ def test_store_resolved():
     parsed = validate_flags(_args("--participation", "uniform",
                                   "--store", "active", "--chunk", "auto"))
     assert parsed["store"] == "active" and parsed["chunk"] == "auto"
+
+
+def test_offload_and_aggregate_resolved():
+    assert validate_flags(_args())["aggregate"] == "dense"
+    parsed = validate_flags(_args("--participation", "uniform",
+                                  "--store", "offload"))
+    assert parsed["store"] == "offload" and parsed["flat"]
+    # a clock is a participant source for the offload tile too
+    parsed = validate_flags(_args("--clock", "constant", "--store", "offload",
+                                  "--aggregate", "packed"))
+    assert parsed["store"] == "offload" and parsed["aggregate"] == "packed"
+    # packed rides the device-resident active store as well
+    parsed = validate_flags(_args("--participation", "uniform",
+                                  "--store", "active",
+                                  "--aggregate", "packed"))
+    assert parsed["aggregate"] == "packed"
 
 
 def test_compression_knobs_resolved():

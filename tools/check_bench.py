@@ -40,7 +40,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import shutil
 import sys
 from pathlib import Path
 
@@ -170,6 +169,29 @@ def check_wallclock(current: dict, baseline: dict, max_slowdown: float,
     return 0
 
 
+def update_baseline(current: Path, baseline: Path) -> None:
+    """Refresh the committed baseline from a fresh dump, KEEPING the
+    baseline's curation keys. Benchmark dumps carry raw numbers only;
+    the committed baselines additionally hold hand-written top-level
+    `_*` keys (`_meta`: how to regenerate, what the numbers mean). A
+    plain file copy silently drops those — every top-level key of the
+    old baseline that starts with `_` and is absent from the fresh dump
+    is carried over, `_meta` first so the file still reads top-down."""
+    with open(current) as f:
+        fresh = json.load(f)
+    carried = []
+    if baseline.exists():
+        with open(baseline) as f:
+            old = json.load(f)
+        carried = [k for k in old if k.startswith("_") and k not in fresh]
+        fresh = {**{k: old[k] for k in carried}, **fresh}
+    with open(baseline, "w") as f:
+        json.dump(fresh, f, indent=2, sort_keys=True)
+        f.write("\n")
+    kept = f" (kept {', '.join(carried)})" if carried else ""
+    print(f"baseline refreshed from {current} -> {baseline}{kept}")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--current", default="BENCH_engine.json",
@@ -183,7 +205,9 @@ def main() -> int:
     ap.add_argument("--warn-slowdown", type=float, default=1.5,
                     help="warn beyond this rounds/s slowdown factor")
     ap.add_argument("--update-baseline", action="store_true",
-                    help="copy --current over --baseline instead of checking")
+                    help="refresh --baseline from --current instead of "
+                         "checking, preserving the baseline's hand-written "
+                         "top-level _meta keys")
     args = ap.parse_args()
     if args.wallclock:
         if args.current == "BENCH_engine.json":
@@ -191,8 +215,7 @@ def main() -> int:
         if args.baseline == str(BASELINE):
             args.baseline = str(WALLCLOCK_BASELINE)
     if args.update_baseline:
-        shutil.copyfile(args.current, args.baseline)
-        print(f"baseline refreshed from {args.current} -> {args.baseline}")
+        update_baseline(Path(args.current), Path(args.baseline))
         return 0
     if args.wallclock:
         return check_wallclock(load_wallclock_rows(Path(args.current)),

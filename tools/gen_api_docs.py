@@ -127,6 +127,20 @@ def main() -> int:
     if args.check:
         current = OUT.read_text() if OUT.exists() else ""
         if current != text:
+            # point at the first drifted line so the CI log says WHAT is
+            # stale, not just that something is
+            cur_lines = current.splitlines()
+            new_lines = text.splitlines()
+            for i, (a, b) in enumerate(zip(cur_lines, new_lines), 1):
+                if a != b:
+                    print(f"first difference at docs/api.md:{i}\n"
+                          f"  committed: {a!r}\n"
+                          f"  generated: {b!r}", file=sys.stderr)
+                    break
+            else:
+                n_cur, n_new = len(cur_lines), len(new_lines)
+                print(f"docs/api.md line count drifted: committed {n_cur} "
+                      f"lines, generated {n_new}", file=sys.stderr)
             print("docs/api.md is stale — regenerate with "
                   "`PYTHONPATH=src python tools/gen_api_docs.py`",
                   file=sys.stderr)
