@@ -60,6 +60,15 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def load_extra(directory: str, step: int) -> Dict:
+    """The checkpoint's `extra` metadata alone (json, no npz read) — lets
+    callers vet e.g. a config fingerprint BEFORE deserializing a carry
+    whose structure may not even match theirs."""
+    path = os.path.join(directory, f"ckpt_{step:08d}")
+    with open(os.path.join(path, _META)) as f:
+        return json.load(f)["extra"]
+
+
 def load_checkpoint(directory: str, step: int, tree_like) -> Tuple[Any, Dict]:
     """tree_like: a pytree with the target structure (values ignored)."""
     path = os.path.join(directory, f"ckpt_{step:08d}")

@@ -19,6 +19,13 @@ from repro.core.compress import (
     uplink_bytes,
 )
 from repro.core.engine import RoundResult, run_rounds, scan_steps
+from repro.core.faults import (
+    FAULT_KINDS,
+    FaultModel,
+    FaultSpec,
+    Screening,
+    make_faults,
+)
 from repro.core.selection import (
     AvailabilityParticipation,
     CyclicParticipation,

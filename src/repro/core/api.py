@@ -752,6 +752,89 @@ def compress_upload_active(compressor, contrib_tile: jax.Array,
     return dec_t, active.scatter_state(ef, ef_new_t)
 
 
+def harden_upload(contrib: jax.Array, mask: Optional[jax.Array], spec, *,
+                  faults=None, screening=None,
+                  fault_prev: Optional[jax.Array] = None,
+                  round_idx: Optional[jax.Array] = None):
+    """The round's fault-injection + screening stage (core/faults.py),
+    between the codec decode and eq. (11)'s aggregation.
+
+    Applies the :class:`~repro.core.faults.FaultModel` to the decoded
+    (m_local, N) upload (crashed rows leave the mask and are zeroed; the
+    replay buffer ``fault_prev`` advances like the EF residual), then the
+    :class:`~repro.core.faults.Screening` finite check + norm clip. Both
+    stages are shard-local elementwise/per-row ops keyed on GLOBAL row
+    ids — no collectives — so the caller's aggregation still lowers to
+    the round's ONE model-size collective set; the screened count rides
+    as a scalar psum (free under the HLO budget, like the loss riders).
+
+    Returns ``(contrib', mask', prev', n_screened)``: the hardened
+    buffer (every row finite, non-arriving rows exact zeros), the
+    screened participation mask (⊆ ``mask``), the advanced replay buffer
+    (None without one) and the GLOBAL count of rows that survived."""
+    from repro.core import faults as faults_mod
+
+    row_ids = _compress_row_ids(contrib.shape[0])
+    prev_new = None
+    if faults is not None:
+        contrib, mask, prev_new = faults.apply(
+            contrib, mask, fault_prev, round_idx, row_ids,
+            payload_cols=spec.size)
+    if screening is not None:
+        contrib, mask = faults_mod.screen_rows(contrib, mask, screening)
+    n = client_scalar_sum(jnp.ones(contrib.shape[0], jnp.float32), mask=mask)
+    return contrib, mask, prev_new, n
+
+
+def harden_upload_active(contrib_tile: jax.Array, active, spec, *,
+                         faults=None, screening=None,
+                         fault_prev: Optional[jax.Array] = None,
+                         round_idx: Optional[jax.Array] = None):
+    """Active-store twin of :func:`harden_upload`: faults + screening on
+    the packed (capacity, N) participant tile, keyed on the tile's GLOBAL
+    resident row ids (so the same clients fault as in the dense round).
+
+    The screened rows fold back into the :class:`~repro.utils.pytree
+    .ActiveSet` itself — ``valid``/``count``/dense ``mask`` all shrink to
+    the surviving rows — so the unchanged
+    :func:`flat_round_aggregate_active` / overlap twin aggregate exactly
+    the screened set (padding AND screened-out rows are zeroed by
+    ``zero_invalid``, and SCAFFOLD's ``extra_mean_tile`` rider is zeroed
+    with them). The replay buffer goes through
+    ``gather_state``/``scatter_state`` like the EF residual, so it rides
+    the host-offloaded store's tiles unchanged. Returns
+    ``(tile', active', prev', n_screened)``."""
+    from repro.core import faults as faults_mod
+
+    m_local = active.num_clients
+    ids = active.idx.astype(jnp.uint32)
+    if _CLIENT_AXIS is not None:
+        name, _ = _CLIENT_AXIS
+        ids = ids + jax.lax.axis_index(name).astype(jnp.uint32) * m_local
+    ok = active.valid
+    prev_new = None
+    if faults is not None:
+        prev_t = (active.gather_state(fault_prev)
+                  if fault_prev is not None else None)
+        contrib_tile, ok, prev_t_new = faults.apply(
+            contrib_tile, ok, prev_t, round_idx, ids,
+            payload_cols=spec.size)
+        if prev_t_new is not None:
+            prev_new = active.scatter_state(fault_prev, prev_t_new)
+    if screening is not None:
+        contrib_tile, ok = faults_mod.screen_rows(contrib_tile, ok,
+                                                  screening)
+    dense_ok = pt.scatter_rows(jnp.zeros((m_local,), bool), active.idx, ok)
+    active2 = dataclasses.replace(
+        active,
+        valid=ok,
+        count=jnp.sum(ok.astype(jnp.float32)),
+        mask=jnp.logical_and(active.mask, dense_ok),
+    )
+    n = client_scalar_sum(ok.astype(jnp.float32))
+    return contrib_tile, active2, prev_new, n
+
+
 def per_client_value_and_grad(loss_fn: LossFn):
     """vmap(value_and_grad) over the stacked client batch, shared params."""
     vg = jax.value_and_grad(lambda p, b: loss_fn(p, b)[0])

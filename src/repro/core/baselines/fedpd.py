@@ -30,10 +30,11 @@ from repro.utils import pytree as pt
 
 class FedPD:
     name = "fedpd"
-    # "ef" = compression error-feedback residual (core/compress.py);
-    # present only when the engine enables it — absent keys cost nothing
-    client_state_keys = ("lam", "ef")
-    flat_client_keys = ("lam", "ef")
+    # "ef" = compression error-feedback residual (core/compress.py) and
+    # "fault_prev" = the fault model's replay buffer (core/faults.py);
+    # present only when the engine enables them — absent keys cost nothing
+    client_state_keys = ("lam", "ef", "fault_prev")
+    flat_client_keys = ("lam", "ef", "fault_prev")
     flat_global_keys = ("x",)
     active_tile = "participants"  # frozen clients keep their duals untouched
 
@@ -130,7 +131,8 @@ class FedPD:
 
     # ------------------------------------------------------------ flat round
     def round_flat(self, state, batch, spec, mask=None, stale=None,
-                   compressor=None, donate_kernel=False):
+                   compressor=None, donate_kernel=False,
+                   faults=None, screening=None):
         """`round` on the flat (m, N) buffers: per-client primal-dual
         anchors and duals are contiguous arrays, the gradient evaluation
         the only pytree boundary, and eq. (11) + diagnostics one fused
@@ -180,6 +182,16 @@ class FedPD:
             lam_new = api.masked_update(mask, lam_new, state["lam"])
         anchors_up, ef_new = compress_contrib(compressor, state, anchors_new,
                                               spec, mask=mask)
+        # faults/screening shrink the AGGREGATION mask only — the dual
+        # update above keeps the original participation mask (the client
+        # advanced its local state; only its upload was lost/rejected)
+        hardened = faults is not None or screening is not None
+        fprev_new = None
+        if hardened:
+            anchors_up, mask, fprev_new, n_scr = api.harden_upload(
+                anchors_up, mask, spec, faults=faults, screening=screening,
+                fault_prev=state.get("fault_prev"),
+                round_idx=state["round"])
         if ovl is None:
             x_new, gsq, f_mean, n_sel = api.flat_round_aggregate(
                 anchors_up, grads0, losses0,
@@ -205,15 +217,20 @@ class FedPD:
             new_state["ovl_shard"] = slot
         if ef_new is not None:
             new_state["ef"] = ef_new
+        if fprev_new is not None:
+            new_state["fault_prev"] = fprev_new
         metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
         metrics["local_grad_evals"] = jnp.float32(fed.k0 * fed.inner_steps)
+        if hardened:
+            metrics["screened"] = n_scr
         if stale is not None:
             return new_state, stale, metrics
         return new_state, metrics
 
     # ----------------------------------------------------- active-set round
     def round_flat_active(self, state, batch, spec, active, stale=None,
-                          compressor=None, donate_kernel=False):
+                          compressor=None, donate_kernel=False,
+                          faults=None, screening=None):
         """`round_flat` on the packed participant tile (store="active"):
         the duals of the round's participants are GATHERED from the resident
         (m, N) `lam` buffer, advanced on the (capacity, N) tile, and
@@ -267,6 +284,13 @@ class FedPD:
         anchors_up, ef_new = compress_contrib_active(compressor, state,
                                                      anchors_new, spec,
                                                      active)
+        hardened = faults is not None or screening is not None
+        fprev_new = None
+        if hardened:
+            anchors_up, active, fprev_new, n_scr = api.harden_upload_active(
+                anchors_up, active, spec, faults=faults,
+                screening=screening, fault_prev=state.get("fault_prev"),
+                round_idx=state["round"])
         if ovl is None:
             x_new, gsq, f_mean, n_sel = api.flat_round_aggregate_active(
                 anchors_up, grads0, losses0, active, spec,
@@ -290,8 +314,12 @@ class FedPD:
             new_state["ovl_shard"] = slot
         if ef_new is not None:
             new_state["ef"] = ef_new
+        if fprev_new is not None:
+            new_state["fault_prev"] = fprev_new
         metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
         metrics["local_grad_evals"] = jnp.float32(fed.k0 * fed.inner_steps)
+        if hardened:
+            metrics["screened"] = n_scr
         if stale is not None:
             return new_state, stale, metrics
         return new_state, metrics

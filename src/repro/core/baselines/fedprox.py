@@ -23,10 +23,11 @@ from repro.utils import pytree as pt
 
 class FedProx:
     name = "fedprox"
-    # "ef" = compression error-feedback residual (core/compress.py);
-    # present only when the engine enables it — absent keys cost nothing
-    client_state_keys = ("ef",)
-    flat_client_keys = ("ef",)
+    # "ef" = compression error-feedback residual (core/compress.py) and
+    # "fault_prev" = the fault model's replay buffer (core/faults.py);
+    # present only when the engine enables them — absent keys cost nothing
+    client_state_keys = ("ef", "fault_prev")
+    flat_client_keys = ("ef", "fault_prev")
     flat_global_keys = ("x",)
     active_tile = "participants"  # frozen clients are never read or written
 
@@ -106,7 +107,8 @@ class FedProx:
 
     # ------------------------------------------------------------ flat round
     def round_flat(self, state, batch, spec, mask=None, stale=None,
-                   compressor=None, donate_kernel=False):
+                   compressor=None, donate_kernel=False,
+                   faults=None, screening=None):
         """`round` on the flat (m, N) trajectory buffer: the proximal GD
         loop is contiguous elementwise math, the gradient evaluation the
         only pytree boundary, and eq. (11) + diagnostics one fused
@@ -149,6 +151,13 @@ class FedProx:
         )
         xc_up, ef_new = compress_contrib(compressor, state, xc_new, spec,
                                          mask=mask)
+        hardened = faults is not None or screening is not None
+        fprev_new = None
+        if hardened:
+            xc_up, mask, fprev_new, n_scr = api.harden_upload(
+                xc_up, mask, spec, faults=faults, screening=screening,
+                fault_prev=state.get("fault_prev"),
+                round_idx=state["round"])
         if ovl is None:
             x_new, gsq, f_mean, n_sel = api.flat_round_aggregate(
                 xc_up, grads0, losses0, participation_vec(losses0, mask),
@@ -169,15 +178,20 @@ class FedProx:
             new_state["ovl_shard"] = slot
         if ef_new is not None:
             new_state["ef"] = ef_new
+        if fprev_new is not None:
+            new_state["fault_prev"] = fprev_new
         metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
         metrics["local_grad_evals"] = jnp.float32(fed.k0 * fed.inner_steps)
+        if hardened:
+            metrics["screened"] = n_scr
         if stale is not None:
             return new_state, stale, metrics
         return new_state, metrics
 
     # ----------------------------------------------------- active-set round
     def round_flat_active(self, state, batch, spec, active, stale=None,
-                          compressor=None, donate_kernel=False):
+                          compressor=None, donate_kernel=False,
+                          faults=None, screening=None):
         """`round_flat` on the packed participant tile (store="active"):
         proximal GD trajectories exist only for the gathered clients (the
         prox center is each participant's own anchor view). See
@@ -220,6 +234,13 @@ class FedProx:
         w = api.stale_weights(stale)
         xc_up, ef_new = compress_contrib_active(compressor, state, xc_new,
                                                 spec, active)
+        hardened = faults is not None or screening is not None
+        fprev_new = None
+        if hardened:
+            xc_up, active, fprev_new, n_scr = api.harden_upload_active(
+                xc_up, active, spec, faults=faults, screening=screening,
+                fault_prev=state.get("fault_prev"),
+                round_idx=state["round"])
         if ovl is None:
             x_new, gsq, f_mean, n_sel = api.flat_round_aggregate_active(
                 xc_up, grads0, losses0, active, spec,
@@ -240,8 +261,12 @@ class FedProx:
             new_state["ovl_shard"] = slot
         if ef_new is not None:
             new_state["ef"] = ef_new
+        if fprev_new is not None:
+            new_state["fault_prev"] = fprev_new
         metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
         metrics["local_grad_evals"] = jnp.float32(fed.k0 * fed.inner_steps)
+        if hardened:
+            metrics["screened"] = n_scr
         if stale is not None:
             return new_state, stale, metrics
         return new_state, metrics

@@ -27,10 +27,11 @@ from repro.utils import pytree as pt
 
 class Scaffold:
     name = "scaffold"
-    # "ef" = compression error-feedback residual (core/compress.py);
-    # present only when the engine enables it — absent keys cost nothing
-    client_state_keys = ("ci", "ef")
-    flat_client_keys = ("ci", "ef")
+    # "ef" = compression error-feedback residual (core/compress.py) and
+    # "fault_prev" = the fault model's replay buffer (core/faults.py);
+    # present only when the engine enables them — absent keys cost nothing
+    client_state_keys = ("ci", "ef", "fault_prev")
+    flat_client_keys = ("ci", "ef", "fault_prev")
     flat_global_keys = ("x", "c")
     active_tile = "participants"  # frozen clients keep their control variates
     # overlapped rounds defer TWO means across the round boundary: the
@@ -136,7 +137,8 @@ class Scaffold:
 
     # ------------------------------------------------------------ flat round
     def round_flat(self, state, batch, spec, mask=None, stale=None,
-                   compressor=None, donate_kernel=False):
+                   compressor=None, donate_kernel=False,
+                   faults=None, screening=None):
         """`round` on the flat (m, N) buffers: trajectories and control
         variates are contiguous arrays, and the server-model mean, the
         control-variate delta mean AND the diagnostics all ride eq. (11)'s
@@ -195,18 +197,30 @@ class Scaffold:
         if mask is not None:
             ci_new = api.masked_update(mask, ci_new, state["ci"])
         y_up, ef_new = compress_contrib(compressor, state, y, spec, mask=mask)
+        hardened = faults is not None or screening is not None
+        fprev_new = None
+        dmean = ci_new - state["ci"]
+        if hardened:
+            y_up, mask, fprev_new, n_scr = api.harden_upload(
+                y_up, mask, spec, faults=faults, screening=screening,
+                fault_prev=state.get("fault_prev"),
+                round_idx=state["round"])
+            # a rejected/lost upload drops the client's control-variate
+            # delta with it (the client still advanced its local ci —
+            # the server just never saw this round's delta)
+            dmean = jnp.where(mask[:, None], dmean, jnp.zeros_like(dmean))
         if ovl is None:
             x_new, gsq, f_mean, n_sel, dci = api.flat_round_aggregate(
                 y_up, grads0, losses0, participation_vec(losses0, mask),
                 spec, mask=mask, weights=api.stale_weights(stale),
-                extra_mean=ci_new - state["ci"],
+                extra_mean=dmean,
             )
             x_new_out, c_new = x_new, state["c"] + dci
         else:
             slot, gsq, f_mean, n_sel = api.flat_overlap_aggregate(
                 y_up, grads0, losses0, participation_vec(losses0, mask),
                 spec, mask=mask, weights=api.stale_weights(stale),
-                extra_mean=ci_new - state["ci"],
+                extra_mean=dmean,
             )
             x_new_out, c_new = anchor_x, c_used
 
@@ -222,8 +236,12 @@ class Scaffold:
             new_state["ovl_shard"] = slot
         if ef_new is not None:
             new_state["ef"] = ef_new
+        if fprev_new is not None:
+            new_state["fault_prev"] = fprev_new
         metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
         metrics["local_grad_evals"] = jnp.float32(fed.k0)
+        if hardened:
+            metrics["screened"] = n_scr
         if stale is not None:
             return new_state, stale, metrics
         return new_state, metrics
@@ -239,7 +257,8 @@ class Scaffold:
 
     # ----------------------------------------------------- active-set round
     def round_flat_active(self, state, batch, spec, active, stale=None,
-                          compressor=None, donate_kernel=False):
+                          compressor=None, donate_kernel=False,
+                          faults=None, screening=None):
         """`round_flat` on the packed participant tile (store="active"):
         participant control variates are GATHERED from the resident (m, N)
         `ci` buffer, advanced on the (capacity, N) tile, and SCATTERED back
@@ -289,6 +308,15 @@ class Scaffold:
         w = api.stale_weights(stale)
         y_up, ef_new = compress_contrib_active(compressor, state, y, spec,
                                                active)
+        hardened = faults is not None or screening is not None
+        fprev_new = None
+        if hardened:
+            # the hardened ActiveSet's shrunk `valid` zeroes the screened
+            # rows out of the extra_mean_tile rider inside the aggregate
+            y_up, active, fprev_new, n_scr = api.harden_upload_active(
+                y_up, active, spec, faults=faults, screening=screening,
+                fault_prev=state.get("fault_prev"),
+                round_idx=state["round"])
         if ovl is None:
             x_new, gsq, f_mean, n_sel, dci = api.flat_round_aggregate_active(
                 y_up, grads0, losses0, active, spec,
@@ -316,8 +344,12 @@ class Scaffold:
             new_state["ovl_shard"] = slot
         if ef_new is not None:
             new_state["ef"] = ef_new
+        if fprev_new is not None:
+            new_state["fault_prev"] = fprev_new
         metrics = round_metrics_flat(gsq, f_mean, n_sel, state["round"])
         metrics["local_grad_evals"] = jnp.float32(fed.k0)
+        if hardened:
+            metrics["screened"] = n_scr
         if stale is not None:
             return new_state, stale, metrics
         return new_state, metrics

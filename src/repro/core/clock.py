@@ -97,9 +97,12 @@ class ComputeClock:
     name = "constant"
 
     def __init__(self, m: int, compute_s=1.0, comm_s=0.0,
-                 bandwidth_bps=None):
+                 bandwidth_bps=None, deadline_s=None):
         if m < 1:
             raise ValueError("need at least one client")
+        if deadline_s is not None and not float(deadline_s) > 0:
+            raise ValueError(f"deadline_s must be > 0, got {deadline_s}")
+        self.deadline_s = None if deadline_s is None else float(deadline_s)
         self.m = m
         self.compute_s = _per_client(compute_s, m, "compute_s")
         self.comm_s = _per_client(comm_s, m, "comm_s")
@@ -200,7 +203,19 @@ class ComputeClock:
         so clock-driven scan == clock-driven legacy holds the same way.
         """
         busy = cstate["busy_until"]
-        now = jnp.maximum(cstate["now"], jnp.min(busy))
+        if self.deadline_s is None:
+            # event-driven: wake at the earliest finish, so >= 1 client
+            # arrives every round by construction
+            now = jnp.maximum(cstate["now"], jnp.min(busy))
+        else:
+            # deadline-driven: the server cuts the round a fixed
+            # `deadline_s` after the previous one, whatever has finished.
+            # Late clients are NOT waited for — they keep their in-flight
+            # item and arrive at a later round once busy <= now (a round
+            # may see ZERO arrivals; the engine's quorum degradation
+            # absorbs it as a recorded no-op, which is why run_rounds
+            # requires quorum >= 1 under a deadline clock).
+            now = cstate["now"] + jnp.float32(self.deadline_s)
         mask = busy <= now
         d, cstate = self._draw(cstate, round_idx)
         cs2 = dict(cstate)
@@ -218,8 +233,9 @@ class LognormalClock(ComputeClock):
     name = "lognormal"
 
     def __init__(self, m: int, compute_s=1.0, comm_s=0.0, sigma: float = 0.5,
-                 seed: int = 0, bandwidth_bps=None):
-        super().__init__(m, compute_s, comm_s, bandwidth_bps)
+                 seed: int = 0, bandwidth_bps=None, deadline_s=None):
+        super().__init__(m, compute_s, comm_s, bandwidth_bps,
+                         deadline_s=deadline_s)
         if sigma < 0:
             raise ValueError(f"sigma must be >= 0, got {sigma}")
         self.sigma = float(sigma)
@@ -246,14 +262,14 @@ class TraceClock(ComputeClock):
 
     name = "trace"
 
-    def __init__(self, m: int, trace, bandwidth_bps=None):
+    def __init__(self, m: int, trace, bandwidth_bps=None, deadline_s=None):
         tr = np.asarray(trace, np.float32)
         if tr.ndim != 2 or tr.shape[1] != m:
             raise ValueError(f"trace must be (T, m={m}), got {tr.shape}")
         if not (tr > 0).all():
             raise ValueError("trace durations must be > 0")
         super().__init__(m, compute_s=tr[0], comm_s=0.0,
-                         bandwidth_bps=bandwidth_bps)
+                         bandwidth_bps=bandwidth_bps, deadline_s=deadline_s)
         self.trace = jnp.asarray(tr)
 
     def _draw(self, cstate, round_idx):
@@ -281,25 +297,34 @@ def make_clock(
     seed: int = 0,
     trace=None,
     bandwidth_bps=None,
+    deadline_s=None,
 ) -> Optional[ComputeClock]:
     """CLI-level factory (launch: --clock/--client-speeds). ``kind="none"``
     returns None — rounds stay trace- or policy-driven. ``compute_s``
     defaults to `default_speeds` (per-client seconds cycling 1..4).
     ``bandwidth_bps`` enables byte-accurate comm time (the engine feeds
     the codec's exact wire size per round; None keeps the constant
-    ``comm_s`` model bitwise)."""
+    ``comm_s`` model bitwise). ``deadline_s`` switches the server from
+    event-driven (wake at the earliest finish) to deadline-driven rounds:
+    the round is cut ``deadline_s`` simulated seconds after the previous
+    one and whoever has finished by then uploads — stragglers re-arrive
+    at a later round instead of blocking (None keeps the event-driven
+    tick bitwise)."""
     if kind == "none":
         return None
     if compute_s is None:
         compute_s = default_speeds(m)
     if kind == "constant":
         return ComputeClock(m, compute_s, comm_s,
-                            bandwidth_bps=bandwidth_bps)
+                            bandwidth_bps=bandwidth_bps,
+                            deadline_s=deadline_s)
     if kind == "lognormal":
         return LognormalClock(m, compute_s, comm_s, sigma=sigma, seed=seed,
-                              bandwidth_bps=bandwidth_bps)
+                              bandwidth_bps=bandwidth_bps,
+                              deadline_s=deadline_s)
     if kind == "trace":
         if trace is None:
             raise ValueError("trace clock needs a (T, m) duration table")
-        return TraceClock(m, trace, bandwidth_bps=bandwidth_bps)
+        return TraceClock(m, trace, bandwidth_bps=bandwidth_bps,
+                          deadline_s=deadline_s)
     raise KeyError(f"unknown clock {kind!r}: {CLOCKS} or 'none'")

@@ -81,6 +81,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
+import json
 import time
 from typing import Any, Dict, Optional
 
@@ -90,6 +92,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.checkpoint import checkpoint as ckpt_io
 from repro.core import api, compress
 from repro.utils import pytree as pt
 
@@ -190,7 +193,8 @@ def make_round_fn(algo, mesh=None, client_axis="data",
                   masked: bool = False, stale: bool = False,
                   flat_spec=None, active_capacity: Optional[int] = None,
                   compressor=None, overlap: str = "off",
-                  donate_kernel: bool = False, aggregate: str = "dense"):
+                  donate_kernel: bool = False, aggregate: str = "dense",
+                  faults=None, screening=None):
     """`algo.round`, optionally wrapped in `shard_map` over the client axis.
 
     `masked=True` returns a `(state, batch, mask) -> (state, metrics)`
@@ -249,6 +253,17 @@ def make_round_fn(algo, mesh=None, client_axis="data",
     the hot-path update is in-place end-to-end under the donated scan
     carry. Ignored by algorithms without a kernel path.
 
+    `faults` (a `core.faults.FaultModel`) / `screening`
+    (`core.faults.Screening`) thread the fault-injection and defensive
+    screening stage into the flat rounds (`api.harden_upload[_active]`
+    between the codec and the aggregation): faults corrupt the decoded
+    uploads on device from a stateless per-(round, client) key stream —
+    identical across scan/legacy, stores and shardings — and screening
+    folds a per-row finite check + norm clip into the participation mask
+    BEFORE eq. (11)'s psum, so the sharded round keeps its one
+    model-size collective set. None/None keeps the un-hardened round —
+    structurally, not just numerically.
+
     `aggregate="packed"` (active rounds only) opts eq. (11) into the
     fp-tolerance packed aggregation: the unsharded round sums the
     (capacity, N) tile directly instead of scattering it back to the
@@ -282,16 +297,21 @@ def make_round_fn(algo, mesh=None, client_axis="data",
             aset = pt.make_active_set(mask, cap, packed=packed)
             return algo.round_flat_active(state, batch, flat_spec, aset,
                                           *extra, compressor=compressor,
-                                          donate_kernel=donate_kernel)
+                                          donate_kernel=donate_kernel,
+                                          faults=faults, screening=screening)
     elif flat_spec is not None:
         base_round = lambda state, batch, *extra: algo.round_flat(
             state, batch, flat_spec, *extra, compressor=compressor,
-            donate_kernel=donate_kernel)
+            donate_kernel=donate_kernel, faults=faults, screening=screening)
     else:
         if compressor is not None:
             raise ValueError(
                 "compression operates on the flat (m, N) comm buffer — "
                 "the pytree round path (flat=False) does not support it")
+        if faults is not None or screening is not None:
+            raise ValueError(
+                "faults/screening operate on the flat (m, N) comm buffer — "
+                "the pytree round path (flat=False) does not support them")
         base_round = algo.round
     if mesh is None:
         if stale:
@@ -389,6 +409,15 @@ def run_rounds(
     topk_frac: float = 0.1,
     overlap: str = "off",
     donate_kernel: Optional[bool] = None,
+    faults=None,
+    screening=None,
+    quorum: int = 0,
+    watchdog: bool = False,
+    watchdog_patience: int = 3,
+    watchdog_factor: float = 2.0,
+    checkpoint_every: int = 0,
+    checkpoint_dir: Optional[str] = None,
+    resume: bool = False,
 ) -> RoundResult:
     """Run up to `num_rounds` communication rounds of `algo`.
 
@@ -547,6 +576,53 @@ def run_rounds(
     of ``compute + comm`` (`ComputeClock.with_overlap`). Under a mesh the
     lane-padded buffer must divide over the client shards.
 
+    faults / screening: fault-tolerant rounds (docs/faults.md). `faults`
+    (a `core.faults.FaultModel`) corrupts the decoded uploads ON DEVICE
+    just before eq. (11) — crash/drop, NaN/Inf payloads, update
+    explosions, stale replays — from a stateless per-(round, client) key
+    stream, so the injected stream is identical across scan/legacy, all
+    three stores and shardings, and across checkpoint resume (no fault
+    rng rides the carry). `screening` (`core.faults.Screening`) is the
+    defense: a per-row finite check + optional norm clip folded into the
+    participation mask BEFORE the psum — the screened mask and clip
+    scale are riders on the round's ONE model-size collective set
+    (tests/test_faults.py HLO-asserts {1 AR} / {1 RS, 1 AG}). The
+    history gains a per-round `screened` count. Flat rounds only.
+
+    quorum: minimum accepted-upload count for a round to COMMIT. A round
+    whose screened/selected count falls below it becomes a recorded
+    no-op: every state entry except the rng and the round counter
+    reverts (x̄ is carried, partial aggregation is never applied — the
+    biased mean of eq. (11) over too few clients is worse than waiting),
+    and the history records `degraded=True` for that round. quorum=0
+    (default) keeps today's always-commit rounds structurally unchanged.
+    Required >= 1 under a deadline clock (`ComputeClock(deadline_s=)`),
+    whose rounds can see zero arrivals.
+
+    watchdog: carry-resident divergence watchdog. Tracks the best f̄
+    seen (`f_xbar`) plus a full state snapshot in the scan carry; after
+    `watchdog_patience` consecutive non-degraded rounds with
+    f̄ > `watchdog_factor` × best (NaN counts as diverged), the state
+    rolls back to the snapshot (rng/round keep advancing — the run does
+    not relive the same faults) and the history records
+    `rollback=True`. Degraded rounds never advance the patience counter.
+    The snapshot doubles the carry, so the watchdog is opt-in; with
+    store="offload" it is rejected (it would double host residency).
+
+    checkpoint_every / checkpoint_dir / resume: bitwise checkpoint +
+    resume (docs/faults.md#checkpointing). Every `checkpoint_every`
+    rounds the FULL carry — state (incl. ef / fault_prev / overlap
+    slot), policy/clock state, StaleXbar, watchdog slot, rng, stop flag
+    — plus the history so far is written through
+    `checkpoint/checkpoint.py` (atomic npz). `resume=True` restores the
+    newest checkpoint under `checkpoint_dir` (a fresh start when none
+    exists) and the resumed run's history and final state are BITWISE
+    the uninterrupted run's. Checkpoints embed a config fingerprint;
+    resuming under a different round-semantics configuration raises
+    (num_rounds is excluded — extending a finished run is the point).
+    Supported on the chunked scan driver and the host-driven offload
+    loop; rejected with chunk_size="auto" and under a mesh.
+
     donate_kernel: donate the flat (m, N) state buffers into the Pallas
     `fedgia_update` kernel (`input_output_aliases` + XLA donation), so
     the collapsed diagonal-H update writes in place — no extra (m, N)
@@ -690,6 +766,74 @@ def run_rounds(
             "requires the flat round path (flat=True on an algorithm "
             "providing round_flat; drop --no-flat)"
         )
+    if (faults is not None or screening is not None) and not flat:
+        raise ValueError(
+            "faults/screening operate on the flat (m, N) comm buffer — "
+            "they require the flat round path (flat=True on an algorithm "
+            "providing round_flat; drop --no-flat)"
+        )
+    if faults is not None and faults.num_clients != algo.fed.num_clients:
+        raise ValueError(
+            f"fault model covers {faults.num_clients} clients, algorithm "
+            f"has {algo.fed.num_clients}")
+    if quorum:
+        if not 0 < quorum <= algo.fed.num_clients:
+            raise ValueError(
+                f"quorum must be in [0, m={algo.fed.num_clients}], "
+                f"got {quorum}")
+        if not masked and faults is None and screening is None:
+            raise ValueError(
+                "quorum needs a source of non-arrival to guard against — "
+                "pass participation=, clock=, faults= or screening="
+            )
+    deadline_clock = (clock is not None
+                      and getattr(clock, "deadline_s", None) is not None)
+    if deadline_clock and quorum < 1:
+        raise ValueError(
+            "a deadline clock (ComputeClock(deadline_s=)) can cut rounds "
+            "with ZERO arrivals — pass quorum >= 1 so they degrade to "
+            "recorded no-ops instead of a 0-client mean"
+        )
+    if watchdog:
+        if watchdog_patience < 1:
+            raise ValueError(
+                f"watchdog_patience must be >= 1, got {watchdog_patience}")
+        if watchdog_factor <= 1.0:
+            raise ValueError(
+                "watchdog_factor must be > 1 (a divergence threshold "
+                f"RELATIVE to the best f̄ seen), got {watchdog_factor}")
+        if store == "offload":
+            raise ValueError(
+                "the watchdog keeps a full state snapshot in the carry — "
+                "under store='offload' that would double the host-resident "
+                "buffers; run the watchdog with store='dense'/'active'"
+            )
+    if checkpoint_every < 0:
+        raise ValueError(
+            f"checkpoint_every must be >= 0, got {checkpoint_every}")
+    ckpt_on = checkpoint_every > 0 or resume
+    if ckpt_on:
+        if checkpoint_dir is None:
+            raise ValueError(
+                "checkpoint_every/resume need a checkpoint_dir= to write "
+                "to / restore from")
+        if mesh is not None:
+            raise ValueError(
+                "checkpointing round-trips the carry through host npz — "
+                "not supported under a mesh (GSPMD carry placements); "
+                "checkpoint unsharded runs"
+            )
+        if auto_chunk:
+            raise ValueError(
+                "chunk_size='auto' picks chunk boundaries from wall-clock "
+                "timings — pass a fixed chunk_size when checkpointing so "
+                "the save points are deterministic"
+            )
+        if not scan and store != "offload":
+            raise ValueError(
+                "checkpointing rides the chunked scan driver (or the "
+                "host-driven offload loop) — drop scan=False"
+            )
     byte_clock = (clock is not None
                   and getattr(clock, "bandwidth_bps", None) is not None)
     if byte_clock:
@@ -703,6 +847,20 @@ def run_rounds(
     if overlap == "scatter" and clock is not None:
         # overlapped rounds pay max(compute, comm) instead of their sum
         clock = clock.with_overlap()
+    fp = None
+    if ckpt_on:
+        fp = _config_fingerprint(
+            algo=getattr(algo, "name", type(algo).__name__),
+            num_clients=algo.fed.num_clients,
+            tol=tol, tol_metric=tol_metric, flat=bool(flat), store=store,
+            aggregate=aggregate, overlap=overlap,
+            async_rounds=bool(async_rounds), max_staleness=max_staleness,
+            stale_weighting=stale_weighting, stale_decay=stale_decay,
+            participation=participation, clock=clock, compression=wire_comp,
+            error_feedback=bool(error_feedback), topk_frac=topk_frac,
+            faults=faults, screening=screening, quorum=quorum,
+            watchdog=bool(watchdog), watchdog_patience=watchdog_patience,
+            watchdog_factor=watchdog_factor)
     spec = pt.ravel_spec(state["x"]) if flat else None
     if flat:
         # the ONE ravel of the run: everything downstream carries the
@@ -711,6 +869,13 @@ def run_rounds(
         if compressor is not None and compressor.error_feedback \
                 and "ef" not in state:
             state["ef"] = jnp.zeros(
+                (algo.fed.num_clients, spec.padded_size), spec.dtype)
+        if faults is not None and faults.needs_prev \
+                and "fault_prev" not in state:
+            # the replay fault's stale-upload buffer: engine-created like
+            # "ef" above, rides `flat_client_keys` so it shards, offloads
+            # and unflattens like any other per-client flat buffer
+            state["fault_prev"] = jnp.zeros(
                 (algo.fed.num_clients, spec.padded_size), spec.dtype)
         if overlap == "scatter":
             # seed the double-buffered carry slot: row 0 = the initial
@@ -731,7 +896,8 @@ def run_rounds(
                                  active_capacity=active_capacity,
                                  compressor=compressor, overlap=overlap,
                                  donate_kernel=donate_kernel,
-                                 aggregate=aggregate)
+                                 aggregate=aggregate,
+                                 faults=faults, screening=screening)
     if mesh is not None:
         state, batch = shard_inputs(algo, state, batch, mesh, client_axis)
     if donate is None:
@@ -742,18 +908,30 @@ def run_rounds(
                             weighting=stale_weighting, decay=stale_decay)
         if async_rounds else ()
     )
+    guard = _make_guard(quorum, watchdog, watchdog_patience, watchdog_factor)
+    ws0 = ()
+    if watchdog:
+        # the snapshot slot starts as a COPY of the initial state: a
+        # shared buffer would alias the donated carry's state leaves
+        ws0 = {"best": jnp.full((), jnp.inf, jnp.float32),
+               "bad": jnp.zeros((), jnp.int32),
+               "snap": jax.tree.map(jnp.copy, state)}
     if store == "offload":
         res = _run_offload_loop(
             algo, state, batch, num_rounds, tol, tol_metric,
             participation, clock, stale0, async_rounds, spec,
             active_capacity, compressor, donate_kernel,
-            packed=(aggregate == "packed"), max_staleness=max_staleness)
+            packed=(aggregate == "packed"), max_staleness=max_staleness,
+            faults=faults, screening=screening,
+            quorum=quorum, checkpoint_every=checkpoint_every,
+            checkpoint_dir=checkpoint_dir, resume=resume, fingerprint=fp)
         return dataclasses.replace(
             res, state=unflatten_state(algo, res.state, spec))
     if not scan:
         res = _run_legacy_loop(round_fn, state, batch, num_rounds, tol,
                                tol_metric, participation, stale0,
-                               async_rounds, clock)
+                               async_rounds, clock, guard=guard, ws0=ws0,
+                               donate=donate and mesh is None)
         if flat:
             st = res.state
             if overlap == "scatter":
@@ -789,36 +967,46 @@ def run_rounds(
         s2, met = round_fn(st, b, mask)
         return s2, ps2, cs, sl, met
 
-    _, _, _, _, abs_met = jax.eval_shape(
-        call_round, state, batch, pstate, cstate, stale0,
+    def guarded_round(st, b, ps, cs, sl, ws, n):
+        """One round + the quorum/watchdog guard (identity — and
+        structurally absent — when both are off)."""
+        s2, ps2, cs2, sl2, met = call_round(st, b, ps, cs, sl, n)
+        if guard is not None:
+            s2, sl2, ws, met = guard(st, sl, s2, sl2, ws, met)
+        return s2, ps2, cs2, sl2, ws, met
+
+    _, _, _, _, _, abs_met = jax.eval_shape(
+        guarded_round, state, batch, pstate, cstate, stale0, ws0,
         jnp.zeros((), jnp.int32)
     )
 
     def chunk_fn(carry, batch, *, length):
         def step(carry, _):
-            st, ps, cs, sl, done, n = carry
+            st, ps, cs, sl, ws, done, n = carry
             if tol > 0:
                 def live(op):
-                    st_, ps_, cs_, sl_, b_, n_ = op
-                    s2, ps2, cs2, sl2, met = call_round(st_, b_, ps_, cs_,
-                                                        sl_, n_)
-                    return (s2, ps2, cs2, sl2, met,
+                    st_, ps_, cs_, sl_, ws_, b_, n_ = op
+                    s2, ps2, cs2, sl2, ws2, met = guarded_round(
+                        st_, b_, ps_, cs_, sl_, ws_, n_)
+                    return (s2, ps2, cs2, sl2, ws2, met,
                             met[tol_metric] < tol, n_ + 1)
 
                 def frozen(op):
-                    st_, ps_, cs_, sl_, _, n_ = op
+                    st_, ps_, cs_, sl_, ws_, _, n_ = op
                     zeros = jax.tree.map(
                         lambda l: jnp.zeros(l.shape, l.dtype), abs_met
                     )
-                    return st_, ps_, cs_, sl_, zeros, jnp.ones((), bool), n_
+                    return (st_, ps_, cs_, sl_, ws_, zeros,
+                            jnp.ones((), bool), n_)
 
-                s2, ps2, cs2, sl2, met, d2, n2 = jax.lax.cond(
-                    done, frozen, live, (st, ps, cs, sl, batch, n)
+                s2, ps2, cs2, sl2, ws2, met, d2, n2 = jax.lax.cond(
+                    done, frozen, live, (st, ps, cs, sl, ws, batch, n)
                 )
             else:
-                s2, ps2, cs2, sl2, met = call_round(st, batch, ps, cs, sl, n)
+                s2, ps2, cs2, sl2, ws2, met = guarded_round(
+                    st, batch, ps, cs, sl, ws, n)
                 d2, n2 = done, n + 1
-            return (s2, ps2, cs2, sl2, d2, n2), met
+            return (s2, ps2, cs2, sl2, ws2, d2, n2), met
 
         return jax.lax.scan(step, carry, None, length=length)
 
@@ -839,8 +1027,25 @@ def run_rounds(
             )
         return chunks[length]
 
-    carry = (state, pstate, cstate, stale0, jnp.zeros((), bool),
+    carry = (state, pstate, cstate, stale0, ws0, jnp.zeros((), bool),
              jnp.zeros((), jnp.int32))
+
+    start_round = 0
+    saved_hist = None
+    if resume:
+        step0 = ckpt_io.latest_step(checkpoint_dir)
+        if step0 is not None:
+            # fingerprint FIRST (json only): a mismatched config often
+            # also means a mismatched carry structure, and the clean
+            # error must win over an npz leaf-count assertion
+            _check_fingerprint(checkpoint_dir, step0, fp)
+            # history dtypes come from abs_met (shapes from the file);
+            # the fingerprint guarantees the key set matches
+            hist_like = {k: np.zeros((0,), l.dtype)
+                         for k, l in abs_met.items()}
+            (carry, saved_hist), _ = ckpt_io.load_checkpoint(
+                checkpoint_dir, step0, (carry, hist_like))
+            start_round = step0
 
     # chunk_size="auto": the first chunks run the candidate lengths in
     # turn (clipped to the rounds left — the rounds executed are the same
@@ -855,7 +1060,7 @@ def run_rounds(
             plan.append(min(cand, rem_after))
             rem_after -= plan[-1]
 
-    if mesh is None:
+    if mesh is None and not ckpt_on:
         # Pre-compile (AOT) every chunk length this run can need — at most
         # two (fixed chunk) or the candidate set plus each possible
         # remainder (auto) — so wall_s measures execution, matching the
@@ -863,7 +1068,9 @@ def run_rounds(
         # directly; on a single device input/output placements are
         # trivially consistent. (Under a mesh, GSPMD may re-place carry
         # leaves between chunks, so there we let jit handle compilation on
-        # first call instead.)
+        # first call instead. With checkpointing on, chunk lengths are
+        # additionally capped at checkpoint boundaries — those compile
+        # lazily via get_chunk, so wall_s may include compile time.)
         if auto_chunk:
             lengths = set(plan)
             if tol <= 0 and rem_after > 0:
@@ -887,27 +1094,41 @@ def run_rounds(
                 jax.tree.map(abs_of, carry), jax.tree.map(abs_of, batch)
             ).compile()
 
-    chunk_metrics = []
+    chunk_metrics = [] if saved_hist is None else [saved_hist]
     timings = []
-    remaining = num_rounds
+    remaining = num_rounds - start_round
+    executed = start_round
+    next_ckpt = None
+    if checkpoint_every > 0:
+        next_ckpt = (executed // checkpoint_every + 1) * checkpoint_every
     t0 = time.time()
     while remaining > 0:
         if plan:
             c = plan.pop(0)
             tc = time.time()
             carry, mets = get_chunk(c)(carry, batch)
-            jax.block_until_ready(carry[5])
+            jax.block_until_ready(carry[6])
             timings.append(((time.time() - tc) / c, c))
             if not plan:
                 chunk_size = min(timings)[1]
         else:
             c = min(chunk_size, remaining)
+            if next_ckpt is not None:
+                # cut the chunk at the checkpoint boundary so the saved
+                # carry sits exactly at a multiple of checkpoint_every —
+                # the rounds executed are identical whatever the cuts
+                c = min(c, next_ckpt - executed)
             carry, mets = get_chunk(c)(carry, batch)
         chunk_metrics.append(mets)
         remaining -= c
-        if tol > 0 and bool(carry[4]):  # the chunk's ONE host sync
+        executed += c
+        if next_ckpt is not None and executed == next_ckpt:
+            _save_scan_checkpoint(checkpoint_dir, executed, carry,
+                                  chunk_metrics, fp)
+            next_ckpt += checkpoint_every
+        if tol > 0 and bool(carry[5]):  # the chunk's ONE host sync
             break
-    state, _, _, _, done, n = carry
+    state, _, _, _, _, done, n = carry
     jax.block_until_ready(n)
     wall = time.time() - t0
 
@@ -943,6 +1164,126 @@ def _finalize_overlap(algo, state):
     return state
 
 
+def _make_guard(quorum: int, watchdog: bool, patience: int, factor: float):
+    """Build the post-round QUORUM + WATCHDOG guard, or None when both are
+    off (the guarded round is then structurally the unguarded one).
+
+    The guard is pure and traceable — it runs INSIDE the jitted round
+    step, so scan == legacy holds for degraded/rollback rounds exactly as
+    for ordinary ones:
+
+      * quorum: a round whose accepted-upload count (`screened` when the
+        hardening stage ran, else `selected`) falls below `quorum` is a
+        recorded no-op — every state entry except the rng and the round
+        counter reverts (those two always advance: replaying a round
+        index would re-draw the SAME faults/masks forever), the StaleXbar
+        reverts with it (the download belongs to the aborted round), and
+        the round's history row records `degraded=True`.
+      * watchdog: tracks the best f̄ and a full state snapshot; after
+        `patience` consecutive committed rounds with f̄ > factor × best
+        (NaN counts as diverged), the state rolls back to the snapshot
+        (rng/round again excepted) and the row records `rollback=True`.
+        Degraded rounds freeze the patience counter — a quorum no-op is
+        not evidence of divergence.
+    """
+    if not quorum and not watchdog:
+        return None
+    keep = ("rng", "round")
+
+    def merge(flag, a, b, keep=keep):
+        """flag ? a : b over two same-structure state dicts; `keep` keys
+        always come from `a` (the freshly advanced state)."""
+        return {
+            k: (a[k] if k in keep else jax.tree.map(
+                lambda x, y: jnp.where(flag, x, y), a[k], b[k]))
+            for k in a
+        }
+
+    def guard(st_old, sl_old, s2, sl2, ws, met):
+        met = dict(met)
+        ok = jnp.ones((), bool)
+        if quorum:
+            n_eff = met.get("screened", met["selected"])
+            ok = n_eff >= quorum
+            s2 = merge(ok, s2, st_old)
+            if sl_old != ():
+                sl2 = jax.tree.map(
+                    lambda a, b: jnp.where(ok, a, b), sl2, sl_old)
+            met["degraded"] = jnp.logical_not(ok)
+        if watchdog:
+            f = met["f_xbar"]
+            best, bad, snap = ws["best"], ws["bad"], ws["snap"]
+            improved = jnp.logical_and(ok, f < best)
+            best2 = jnp.where(improved, f, best)
+            snap2 = merge(improved, s2, snap, keep=())
+            # NaN f̄ fails the <= and counts as diverged
+            diverged = jnp.logical_and(
+                ok, jnp.logical_not(f <= jnp.float32(factor) * best2))
+            bad2 = jnp.where(ok, jnp.where(diverged, bad + 1, 0), bad)
+            roll = bad2 >= patience
+            s2 = merge(jnp.logical_not(roll), s2, snap2)
+            ws = {"best": best2, "bad": jnp.where(roll, 0, bad2),
+                  "snap": snap2}
+            met["rollback"] = roll
+        return s2, sl2, ws, met
+
+    return guard
+
+
+def _config_fingerprint(**knobs) -> str:
+    """Round-semantics fingerprint embedded in every checkpoint: resume
+    refuses a checkpoint written under a different configuration (the
+    carry would often deserialize fine, but the continued rounds would
+    not be the run the caller asked for). `num_rounds` is deliberately
+    NOT part of it — extending a finished run is the point of resuming.
+    Deliberately coarse: dataclass knobs (fault model, screening) hash
+    by repr, stateful objects (clock, policy, codec) by type + name."""
+    def desc(v):
+        if v is None or isinstance(v, (bool, int, float, str)):
+            return v
+        if dataclasses.is_dataclass(v):
+            return repr(v)
+        return [type(v).__name__, getattr(v, "name", None),
+                getattr(v, "deadline_s", None)]
+
+    payload = {k: desc(v) for k, v in knobs.items()}
+    return hashlib.sha256(
+        json.dumps(payload, sort_keys=True).encode()).hexdigest()
+
+
+def _check_fingerprint(checkpoint_dir, step0, fp):
+    """Vet the checkpoint's config fingerprint from its json metadata
+    alone, BEFORE the carry is deserialized — a config change often also
+    changes the carry/history structure, and the leaf-count assertion
+    inside load_checkpoint would otherwise mask the real problem."""
+    extra = ckpt_io.load_extra(checkpoint_dir, step0)
+    if extra.get("fingerprint") != fp:
+        raise ValueError(
+            f"resume: checkpoint ckpt_{step0:08d} under "
+            f"{checkpoint_dir!r} was written by a run with a "
+            "different configuration (fingerprint mismatch) — "
+            "resuming it would not continue the run it started")
+
+
+def _save_scan_checkpoint(directory, step, carry, chunk_metrics, fp):
+    """Write the scan driver's FULL carry (state incl. ef/fault_prev/
+    overlap slot, policy/clock state, StaleXbar, watchdog slot, stop
+    flag, round counter) plus the history accumulated so far — one
+    atomic npz through checkpoint/checkpoint.py. The history is trimmed
+    to the rounds actually run (a tol-stopped chunk emits frozen zero
+    rows past the stop), so a resumed run reassembles the exact history
+    the uninterrupted run would return."""
+    carry_h = jax.device_get(carry)
+    n_now = int(carry_h[6])
+    mets_host = jax.device_get(chunk_metrics)
+    hist = {
+        k: np.concatenate([np.asarray(m[k]) for m in mets_host])[:n_now]
+        for k in mets_host[0]
+    }
+    ckpt_io.save_checkpoint(directory, step, (carry_h, hist),
+                            extra={"fingerprint": fp})
+
+
 def _with_byte_metrics(met, mask, clock):
     """Per-round wire totals under a byte-accurate clock: every ARRIVED
     client paid one upload (the codec's wire) and one fp32 download this
@@ -967,20 +1308,21 @@ def _with_staleness_metrics(met, stale):
 
 def _run_legacy_loop(round_fn, state, batch, num_rounds, tol, tol_metric,
                      participation=None, stale0=(), async_rounds=False,
-                     clock=None):
+                     clock=None, guard=None, ws0=(), donate=False):
     """Per-round jit dispatch + per-round host sync (the --no-scan path).
 
     With a participation policy the per-round jitted step also advances the
     policy state and draws the round's mask — the same pure `policy.mask`
     sequence as the scan path, so masks (and results) agree between paths.
-    The async `StaleXbar` state and the wall-clock simulation state thread
-    through the step the same way, so async/clock scan == legacy holds
-    exactly as well.
+    The async `StaleXbar` state, the wall-clock simulation state and the
+    quorum/watchdog guard (`_make_guard`, with its watchdog slot `ws0`)
+    thread through the step the same way, so async/clock/fault-tolerant
+    scan == legacy holds exactly as well.
     """
     if clock is not None:
         byte_clock = getattr(clock, "bandwidth_bps", None) is not None
 
-        def step(st, ps, cs, sl, b, n):
+        def base_step(st, ps, cs, sl, b, n):
             mask, now, cs2 = clock.tick(cs, n)
             s2, sl2, met = round_fn(st, b, mask, sl)
             met = _with_staleness_metrics(met, sl2)
@@ -990,35 +1332,60 @@ def _run_legacy_loop(round_fn, state, batch, num_rounds, tol, tol_metric,
             return s2, ps, cs2, sl2, met
         pstate, cstate = (), clock.init()
     elif participation is None:
-        def step(st, ps, cs, sl, b, n):
+        def base_step(st, ps, cs, sl, b, n):
             s2, met = round_fn(st, b)
             return s2, ps, cs, sl, met
         pstate, cstate = (), ()
     elif async_rounds:
-        def step(st, ps, cs, sl, b, n):
+        def base_step(st, ps, cs, sl, b, n):
             mask, ps2 = participation.mask(ps, n)
             s2, sl2, met = round_fn(st, b, mask, sl)
             return s2, ps2, cs, sl2, _with_staleness_metrics(met, sl2)
         pstate, cstate = participation.init(), ()
     else:
-        def step(st, ps, cs, sl, b, n):
+        def base_step(st, ps, cs, sl, b, n):
             mask, ps2 = participation.mask(ps, n)
             s2, met = round_fn(st, b, mask)
             return s2, ps2, cs, sl, met
         pstate, cstate = participation.init(), ()
+
+    def step(st, ps, cs, sl, ws, b, n):
+        s2, ps2, cs2, sl2, met = base_step(st, ps, cs, sl, b, n)
+        if guard is not None:
+            s2, sl2, ws, met = guard(st, sl, s2, sl2, ws, met)
+        return s2, ps2, cs2, sl2, ws, met
+
     sstate = stale0
-    rfn = jax.jit(step)
-    # warm-up compile outside the timed region (same convention as the
-    # scan path's AOT pre-compile); round is pure, the result is discarded
-    _s, _ps, _cs, _sl, _m = rfn(state, pstate, cstate, sstate, batch,
-                                jnp.zeros((), jnp.int32))
-    jax.block_until_ready(_m)
+    wstate = ws0
+    if donate:
+        # Donate the model-size round state — plus the async anchor and
+        # the watchdog slot, which also carry model-size buffers — into
+        # each per-round dispatch, so the baselines' flat GD rounds (and
+        # every other legacy round) update in-place like the scan path's
+        # donated carry: no second (m, N) client buffer materialises per
+        # round. AOT lower().compile() replaces the executing warm-up
+        # (an executed call would consume the donated inputs); the
+        # one-time copies keep the caller's arrays valid for round 0.
+        state = jax.tree.map(jnp.copy, state)
+        sstate = jax.tree.map(jnp.copy, sstate)
+        wstate = jax.tree.map(jnp.copy, wstate)
+        rfn = jax.jit(step, donate_argnums=(0, 3, 4)).lower(
+            state, pstate, cstate, sstate, wstate, batch,
+            jnp.zeros((), jnp.int32)).compile()
+    else:
+        rfn = jax.jit(step)
+        # warm-up compile outside the timed region (same convention as the
+        # scan path's AOT pre-compile); round is pure, result discarded
+        _s, _ps, _cs, _sl, _ws, _m = rfn(state, pstate, cstate, sstate,
+                                         wstate, batch,
+                                         jnp.zeros((), jnp.int32))
+        jax.block_until_ready(_m)
     hist = []
     stopped = False
     t0 = time.time()
     for i in range(num_rounds):
-        state, pstate, cstate, sstate, met = rfn(state, pstate, cstate,
-                                                 sstate, batch, jnp.int32(i))
+        state, pstate, cstate, sstate, wstate, met = rfn(
+            state, pstate, cstate, sstate, wstate, batch, jnp.int32(i))
         met_h = jax.device_get(met)
         hist.append(met_h)
         if tol > 0 and float(met_h[tol_metric]) < tol:
@@ -1032,7 +1399,9 @@ def _run_legacy_loop(round_fn, state, batch, num_rounds, tol, tol_metric,
 def _run_offload_loop(algo, state, batch, num_rounds, tol, tol_metric,
                       participation, clock, stale0, async_rounds,
                       spec, cap, compressor, donate_kernel, packed,
-                      max_staleness):
+                      max_staleness, faults=None, screening=None,
+                      quorum=0, checkpoint_every=0, checkpoint_dir=None,
+                      resume=False, fingerprint=None):
     """Host-driven round loop for ``run_rounds(store="offload")``.
 
     The resident ``flat_client_keys`` buffers, the per-client batch and
@@ -1122,7 +1491,8 @@ def _run_offload_loop(algo, state, batch, num_rounds, tol, tol_metric,
                                stale0.weighting, stale0.decay)
             s2, sl2, met = algo.round_flat_active(
                 st, batch_t, spec, aset, sl, compressor=compressor,
-                donate_kernel=donate_kernel)
+                donate_kernel=donate_kernel, faults=faults,
+                screening=screening)
             met = _with_staleness_metrics(met, sl2)
             refresh = None
             if not population and max_staleness > 0:
@@ -1133,7 +1503,8 @@ def _run_offload_loop(algo, state, batch, num_rounds, tol, tol_metric,
         else:
             s2, met = algo.round_flat_active(
                 st, batch_t, spec, aset, compressor=compressor,
-                donate_kernel=donate_kernel)
+                donate_kernel=donate_kernel, faults=faults,
+                screening=screening)
             sl_out = ()
         s2 = dict(s2)
         tiles2 = {k: s2.pop(k) for k in client_keys}
@@ -1185,17 +1556,60 @@ def _run_offload_loop(algo, state, batch, num_rounds, tol, tol_metric,
         lambda l: pt.gather_rows(l, i), tree)
     hist = []
     stopped = False
+    age = last_used = None
     if async_rounds:
         age, last_used = stale0.age, stale0.last_used
+
+    def ckpt_tree(pcs_at_round_start):
+        """The loop's full host-side state: globals, resident buffers,
+        stale anchor + ages, and the policy/clock state AS OF the start
+        of the next round (its select re-draws bitwise on resume — the
+        draw is a pure function of (pcs, round))."""
+        return {"gstate": gstate, "store": store.buffers,
+                "anchor": anchor_h if async_rounds else (),
+                "age": age if async_rounds else (),
+                "last_used": last_used if async_rounds else (),
+                "pcs": pcs_at_round_start}
+
     pcs = pcs0
-    mask, idx, now, pcs = select_c(pcs, jnp.int32(0))
+    start_round = 0
+    if resume:
+        step0 = ckpt_io.latest_step(checkpoint_dir)
+        if step0 is not None:
+            _check_fingerprint(checkpoint_dir, step0, fingerprint)
+            _, _, met_abs, _ = jax.eval_shape(
+                tile_round, jax.tree.map(abs_of, gstate), tiles_abs,
+                batch_abs, mask_abs, sl_abs)
+            hist_like = {k: np.zeros((0,), l.dtype)
+                         for k, l in met_abs.items()}
+            if clock is not None:
+                hist_like["sim_time"] = np.zeros((0,), np.float32)
+                if byte_clock:
+                    hist_like["bytes_up"] = np.zeros((0,), np.float32)
+                    hist_like["bytes_down"] = np.zeros((0,), np.float32)
+            if quorum > 0:
+                hist_like["degraded"] = np.zeros((0,), bool)
+            (snap, saved_hist), _ = ckpt_io.load_checkpoint(
+                checkpoint_dir, step0, (ckpt_tree(pcs0), hist_like))
+            gstate = snap["gstate"]
+            store.buffers = {k: pt.host_put(v)
+                             for k, v in snap["store"].items()}
+            if async_rounds:
+                anchor_h = pt.host_put(snap["anchor"])
+                age, last_used = snap["age"], snap["last_used"]
+            pcs = snap["pcs"]
+            saved_hist = jax.device_get(saved_hist)
+            hist = [{k: saved_hist[k][t] for k in saved_hist}
+                    for t in range(step0)]
+            start_round = step0
+    mask, idx, now, pcs = select_c(pcs, jnp.int32(start_round))
     if population:
         idx_h, staged = None, batch_dev
     else:
         idx_h = pt.host_put(idx)
         staged = to_dev(gather_h(batch_h, idx_h))
     t0 = time.time()
-    for i in range(num_rounds):
+    for i in range(start_round, num_rounds):
         if population:
             tiles = to_dev(store.buffers)
             sl_in = ((to_dev(anchor_h), age, last_used)
@@ -1206,6 +1620,7 @@ def _run_offload_loop(algo, state, batch, num_rounds, tol, tol_metric,
                       last_used) if async_rounds else ())
         out = round_c(gstate, tiles, staged, mask, sl_in)
         cur_mask, cur_idx_h, cur_now = mask, idx_h, now
+        pcs_prev = pcs
         if i + 1 < num_rounds:
             # double-buffer: next round's mask draw + read-only batch
             # tile overlap the in-flight device round; the mutable state
@@ -1214,32 +1629,59 @@ def _run_offload_loop(algo, state, batch, num_rounds, tol, tol_metric,
             if not population:
                 idx_h = pt.host_put(idx)
                 staged = to_dev(gather_h(batch_h, idx_h))
-        gstate, tiles2, met, sl_out = out
-        if population:
-            store.buffers = {k: pt.host_put(v) for k, v in tiles2.items()}
-        else:
-            store.scatter_tiles(cur_idx_h, tiles2)
-        if async_rounds:
-            anchor_new, age, last_used, refresh = sl_out
-            if population:
-                anchor_h = pt.host_put(anchor_new)
-            elif max_staleness > 0:
-                # the dense refresh write, host-side: participant +
-                # force-synced rows take the fresh x̄ — bitwise the
-                # on-device stores' row select (same inputs, same op)
-                anchor_h = jnp.where(
-                    pt.host_put(refresh)[:, None],
-                    pt.host_put(anchor_new)[None, :], anchor_h)
+        gstate_new, tiles2, met, sl_out = out
         met = dict(met)
         if clock is not None:
             met["sim_time"] = cur_now
             if byte_clock:
                 met = _with_byte_metrics(met, cur_mask, clock)
+        degraded = False
+        if quorum > 0:
+            # the accept/reject decision gates the host-side commit, so
+            # the round's count must reach the host BEFORE the scatter —
+            # one extra device sync per round, paid only under quorum
+            n_eff = met.get("screened", met["selected"])
+            degraded = bool(jax.device_get(n_eff) < quorum)
+            met["degraded"] = np.asarray(degraded)
+        if degraded:
+            # recorded no-op (run_rounds' quorum contract): resident
+            # tiles, stale anchor and ages keep their pre-round values;
+            # only the rng and the round counter advance
+            gstate = {k: (gstate_new[k] if k in ("rng", "round")
+                          else gstate[k]) for k in gstate_new}
+        else:
+            gstate = gstate_new
+            if population:
+                store.buffers = {k: pt.host_put(v)
+                                 for k, v in tiles2.items()}
+            else:
+                store.scatter_tiles(cur_idx_h, tiles2)
+            if async_rounds:
+                anchor_new, age, last_used, refresh = sl_out
+                if population:
+                    anchor_h = pt.host_put(anchor_new)
+                elif max_staleness > 0:
+                    # the dense refresh write, host-side: participant +
+                    # force-synced rows take the fresh x̄ — bitwise the
+                    # on-device stores' row select (same inputs, same op)
+                    anchor_h = jnp.where(
+                        pt.host_put(refresh)[:, None],
+                        pt.host_put(anchor_new)[None, :], anchor_h)
         met_h = jax.device_get(met)
         hist.append(met_h)
         if tol > 0 and float(met_h[tol_metric]) < tol:
             stopped = True
             break
+        if checkpoint_every > 0 and (i + 1) % checkpoint_every == 0:
+            # saved AFTER the stop check: a run that stops at a boundary
+            # writes no checkpoint for it, so a resume re-runs and
+            # re-stops at the same round — bitwise the uninterrupted run
+            hist_np = {k: np.asarray([h[k] for h in hist])
+                       for k in hist[0]}
+            ckpt_io.save_checkpoint(
+                checkpoint_dir, i + 1,
+                (jax.device_get(ckpt_tree(pcs_prev)), hist_np),
+                extra={"fingerprint": fingerprint})
     wall = time.time() - t0
     state_f = dict(gstate)
     for k, b in store.buffers.items():

@@ -1,0 +1,211 @@
+"""On-device client fault injection and server-side screening.
+
+FedGiA's convergence story (paper Thm. 2 / Assumption 1) holds for
+*well-behaved* partial participation: every selected client returns a
+finite, on-time update. This module is the adversarial-reality layer —
+a keyed :class:`FaultModel` corrupts the flat (rows, N) contribution
+buffer ON DEVICE just before eq. (11)'s aggregation, and a
+:class:`Screening` stage folds a per-row finite check + norm clip into
+the participation mask so the server aggregates only what survives.
+
+Fault taxonomy (``FAULT_KINDS``):
+
+  * ``crash``   — the client never uploads: its row leaves the round's
+    aggregation mask (and is zeroed, so the weighted numerators that
+    MULTIPLY by the mask-folded weights never see its bits).
+  * ``nan`` / ``inf`` — wire/accelerator corruption: the row's payload
+    columns are overwritten with non-finite values.
+  * ``explode`` — a diverged local solve: the row is scaled by
+    ``FaultSpec.scale`` (finite, so only the norm clip catches it).
+  * ``replay`` — a confused client re-sends its PREVIOUS successful
+    upload (the ``fault_prev`` carry buffer, engine-created like the
+    compression EF residual and riding ``flat_client_keys``).
+
+Determinism: the draw is STATELESS-keyed — per round the base key is
+``fold_in(PRNGKey(seed), round)`` and each client folds in its GLOBAL
+row id (the `api._compress_row_ids` convention), so the same clients
+fault in the same rounds whether the run is unsharded, client-sharded,
+scan or legacy, dense / active / offload — and across checkpoint
+resume, which never has to save fault state beyond ``fault_prev``.
+
+Screening preserves the one-psum invariant: the screened mask and clip
+scale are computed shard-locally BEFORE the collective and ride the
+existing mask/weight riders of `api.flat_round_aggregate[_active]`, so
+a screening-enabled sharded round still lowers to exactly {1 AR}
+(barrier) / {1 RS, 1 AG} (overlap) — HLO-asserted in tests/test_faults.py.
+With ``faults=None`` and ``screening=None`` every round path is
+STRUCTURALLY unchanged (bitwise the fault-free engine).
+
+See docs/faults.md for the full semantics (quorum, watchdog, resume).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+FAULT_KINDS = ("crash", "nan", "inf", "explode", "replay")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One fault process: ``kind`` with per-client per-round probability
+    ``rate``; ``scale`` is the multiplier of ``explode`` rows."""
+
+    kind: str
+    rate: float
+    scale: float = 1e6
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; pick from {FAULT_KINDS}")
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"fault rate must be in [0, 1], got {self.rate}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """A composite per-client fault process, drawn on-device each round.
+
+    Static round-fn configuration (like the compressor): the model holds
+    no traced state — the draw is keyed off ``(seed, round, row id)``
+    alone — except the replay buffer ``fault_prev``, which the engine
+    creates and threads through the carry exactly like the EF residual.
+    """
+
+    num_clients: int
+    specs: Tuple[FaultSpec, ...]
+    seed: int = 0
+
+    def __post_init__(self):
+        kinds = [s.kind for s in self.specs]
+        if len(set(kinds)) != len(kinds):
+            raise ValueError(f"duplicate fault kinds in {kinds}")
+
+    @property
+    def needs_prev(self) -> bool:
+        """True when the model replays — the engine then creates the
+        (m, N) ``fault_prev`` carry buffer."""
+        return any(s.kind == "replay" for s in self.specs)
+
+    def draw(self, round_idx: jax.Array, row_ids: jax.Array) -> dict:
+        """Per-client fault indicators for this round: {kind: (rows,) bool}.
+
+        ``row_ids`` are GLOBAL client ids (uint32) so sharded/packed rows
+        draw exactly the dense rows' faults."""
+        base = jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                  jnp.asarray(round_idx, jnp.uint32))
+        hits = {}
+        for j, s in enumerate(self.specs):
+            kkey = jax.random.fold_in(base, jnp.uint32(j))
+            keys = jax.vmap(lambda r, k=kkey: jax.random.fold_in(k, r))(
+                row_ids.astype(jnp.uint32))
+            u = jax.vmap(lambda k: jax.random.uniform(k, ()))(keys)
+            hits[s.kind] = u < jnp.float32(s.rate)
+        return hits
+
+    def apply(self, contrib: jax.Array, mask: Optional[jax.Array],
+              prev: Optional[jax.Array], round_idx: jax.Array,
+              row_ids: jax.Array, *, payload_cols: Optional[int] = None):
+        """Corrupt the decoded (rows, N) upload just before aggregation.
+
+        Order: replay (row <- last successful upload), explode (scale),
+        nan, inf, then crash — a crashed row leaves the arrival mask AND
+        is zeroed (the weighted aggregation paths multiply, and 0*NaN
+        would poison the numerator). ``payload_cols`` bounds the nan/inf
+        overwrite to the real model columns so the flat buffers'
+        zero-padding-tail invariant survives injection.
+
+        Returns ``(corrupt, arrive, prev')`` where ``arrive`` is the
+        post-crash participation mask and ``prev'`` the advanced replay
+        buffer (the HONEST pre-corruption upload of every arriving row —
+        what the client actually computed and sent; None when the model
+        carries no replay buffer).
+        """
+        hits = self.draw(round_idx, row_ids)
+        honest = contrib
+        out = contrib
+        if prev is not None and "replay" in hits:
+            out = jnp.where(hits["replay"][:, None], prev.astype(out.dtype),
+                            out)
+        if "explode" in hits:
+            scale = next(s.scale for s in self.specs if s.kind == "explode")
+            out = jnp.where(hits["explode"][:, None],
+                            out * jnp.asarray(scale, out.dtype), out)
+        cols = contrib.shape[-1] if payload_cols is None else payload_cols
+        col_ok = jnp.arange(contrib.shape[-1]) < cols
+        for kind, val in (("nan", jnp.nan), ("inf", jnp.inf)):
+            if kind in hits:
+                bad = jnp.logical_and(hits[kind][:, None], col_ok[None, :])
+                out = jnp.where(bad, jnp.asarray(val, out.dtype), out)
+        crash = hits.get("crash")
+        if crash is None:
+            arrive = (jnp.ones(contrib.shape[0], bool) if mask is None
+                      else mask)
+        else:
+            arrive = (~crash if mask is None
+                      else jnp.logical_and(mask, ~crash))
+        out = jnp.where(arrive[:, None], out, jnp.zeros_like(out))
+        prev_new = None
+        if prev is not None:
+            prev_new = jnp.where(arrive[:, None], honest.astype(prev.dtype),
+                                 prev)
+        return out, arrive, prev_new
+
+
+@dataclasses.dataclass(frozen=True)
+class Screening:
+    """Server-side upload screening: rows with any non-finite entry are
+    dropped from the aggregation mask (and zeroed, so no non-finite value
+    ever reaches eq. (11)'s psum); finite rows whose l2 norm exceeds
+    ``clip_norm`` are scaled down onto the clip ball."""
+
+    clip_norm: Optional[float] = None
+
+    def __post_init__(self):
+        if self.clip_norm is not None and self.clip_norm <= 0:
+            raise ValueError(f"clip_norm must be > 0, got {self.clip_norm}")
+
+
+def screen_rows(contrib: jax.Array, mask: Optional[jax.Array],
+                screening: Screening):
+    """Apply :class:`Screening` to a (rows, N) contribution buffer.
+
+    Returns ``(contrib', smask)`` with ``smask`` ⊆ ``mask`` (the screened
+    participation mask) and every row of ``contrib'`` finite — screened-out
+    rows are exact zeros, clipped rows scaled by ``clip/||row||``. All
+    shard-local: the caller's aggregation collective is unchanged."""
+    finite = jnp.all(jnp.isfinite(contrib), axis=-1)
+    smask = finite if mask is None else jnp.logical_and(mask, finite)
+    out = jnp.where(smask[:, None], contrib, jnp.zeros_like(contrib))
+    if screening.clip_norm is not None:
+        nrm = jnp.sqrt(jnp.sum(
+            (out * out).astype(jnp.float32), axis=-1))
+        c = jnp.float32(screening.clip_norm)
+        scale = jnp.where(nrm > c, c / jnp.maximum(nrm, jnp.float32(1e-30)),
+                          jnp.float32(1.0))
+        out = out * scale[:, None].astype(out.dtype)
+    return out, smask
+
+
+def make_faults(kinds: Sequence[str], rates: Sequence[float], *,
+                num_clients: int, seed: int = 0,
+                scale: float = 1e6) -> Optional[FaultModel]:
+    """Build a :class:`FaultModel` from parallel kind/rate lists (the CLI
+    surface: ``--faults crash,nan --fault-rate 0.1,0.01``). A single rate
+    broadcasts over all kinds; an empty kind list returns None (no
+    faults, structurally fault-free rounds)."""
+    kinds = [k for k in kinds if k]
+    if not kinds:
+        return None
+    rates = list(rates)
+    if len(rates) == 1 and len(kinds) > 1:
+        rates = rates * len(kinds)
+    if len(rates) != len(kinds):
+        raise ValueError(
+            f"--fault-rate needs 1 or {len(kinds)} values, got {len(rates)}")
+    specs = tuple(FaultSpec(k, float(r), scale) for k, r in zip(kinds, rates))
+    return FaultModel(num_clients=num_clients, specs=specs, seed=seed)

@@ -43,11 +43,11 @@ class FedGiA:
     # leaves with a leading client axis — what the engine shards over `data`
     # ("ef" = the error-feedback residual buffer, present only under a
     # lossy compressor with error_feedback — absent keys cost nothing)
-    client_state_keys = ("z", "pi", "h", "gram_chol", "ef")
+    client_state_keys = ("z", "pi", "h", "gram_chol", "ef", "fault_prev")
     # model-shaped state the flat engine ravels into (m, N) / (N,) buffers
     # (gram_chol is client-stacked but not model-shaped: it stays a
     # (m, n, n) factor either way)
-    flat_client_keys = ("z", "pi", "h", "ef")
+    flat_client_keys = ("z", "pi", "h", "ef", "fault_prev")
     flat_global_keys = ("x",)
     # FedGiA's GD branch (eqs. 15-17) rewrites EVERY non-selected client's
     # state from its fresh gradient each round, so the round's working set
@@ -237,7 +237,8 @@ class FedGiA:
 
     # ------------------------------------------------------------ flat round
     def round_flat(self, state, batch, spec, mask=None, stale=None,
-                   compressor=None, donate_kernel=False):
+                   compressor=None, donate_kernel=False,
+                   faults=None, screening=None):
         """One communication round on the FLAT client-state buffer.
 
         Same contract as `round`, but `state["z"]` / `state["pi"]` /
@@ -292,6 +293,9 @@ class FedGiA:
         # at the END of the previous round — the deferred half of the
         # split collective.
         ef_new = None
+        fprev_new = None
+        n_scr = None
+        hardened = faults is not None or screening is not None
         ovl = state.get("ovl_shard")
         if ovl is not None:
             xbar = api.flat_overlap_consensus(ovl)[0]
@@ -302,7 +306,18 @@ class FedGiA:
                 z_up, ef_new = api.compress_upload(
                     compressor, z_up, ef, spec,
                     key=compress.round_key(state["rng"], state["round"]))
-            xbar = api.client_mean(z_up, weights=api.stale_weights(stale))
+            # faults/screening (core/faults.py): FedGiA's upload is the
+            # whole population's z, so the screened mask starts from None
+            # (all m rows) and eq. (11) becomes the mean over the rows
+            # that arrived finite — same ONE psum, mask/count as riders.
+            sc_mask = None
+            if hardened:
+                z_up, sc_mask, fprev_new, n_scr = api.harden_upload(
+                    z_up, None, spec, faults=faults, screening=screening,
+                    fault_prev=state.get("fault_prev"),
+                    round_idx=state["round"])
+            xbar = api.client_mean(z_up, mask=sc_mask,
+                                   weights=api.stale_weights(stale))
 
         # (3) client selection — identical rng stream to the pytree round.
         rng, sel_key = jax.random.split(state["rng"])
@@ -380,9 +395,21 @@ class FedGiA:
                     compressor, z_up_new, ef, spec,
                     key=compress.round_key(rng, state["round"] + 1))
                 new_state["ef"] = ef_new
+            # faults/screening hit the upload where it happens — at the
+            # round END. The draw is keyed round+1 (the barrier round
+            # whose aggregation this upload feeds, matching the codec
+            # key convention), and the screened mask rides the same
+            # reduce-scatter's scalar lanes.
+            sc_mask = None
+            if hardened:
+                z_up_new, sc_mask, fprev_new, n_scr = api.harden_upload(
+                    z_up_new, None, spec, faults=faults,
+                    screening=screening,
+                    fault_prev=state.get("fault_prev"),
+                    round_idx=state["round"] + 1)
             slot, gsq, f_mean, n_sel = api.flat_overlap_aggregate(
                 z_up_new, spec.ravel_stacked(grads), losses, sel, spec,
-                weights=api.stale_weights(stale))
+                mask=sc_mask, weights=api.stale_weights(stale))
             new_state["ovl_shard"] = slot
             metrics = {
                 "f_xbar": f_mean,
@@ -400,6 +427,10 @@ class FedGiA:
                 "cr": 2.0 * (state["round"] + 1).astype(jnp.float32),
                 "local_grad_evals": jnp.float32(1.0),  # per client per round (C2)
             }
+        if fprev_new is not None:
+            new_state["fault_prev"] = fprev_new
+        if hardened:
+            metrics["screened"] = n_scr
         if stale is not None:
             return new_state, stale, metrics
         return new_state, metrics
@@ -524,7 +555,8 @@ class FedGiA:
 
     # ----------------------------------------------------- active-set round
     def round_flat_active(self, state, batch, spec, active, stale=None,
-                          compressor=None, donate_kernel=False):
+                          compressor=None, donate_kernel=False,
+                          faults=None, screening=None):
         """Active-store round (``run_rounds(store="active")``).
 
         FedGiA cannot shrink the round's working set: the GD branch
@@ -540,7 +572,8 @@ class FedGiA:
         codec through the dense upload path (all m rows)."""
         return self.round_flat(state, batch, spec, active.mask, stale,
                                compressor=compressor,
-                               donate_kernel=donate_kernel)
+                               donate_kernel=donate_kernel,
+                               faults=faults, screening=screening)
 
     # --------------------------------------------------------------- overlap
     def overlap_finalize(self, state, slot):

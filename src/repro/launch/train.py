@@ -59,6 +59,16 @@ makes the clock's comm time BYTE-ACCURATE (the codec's exact wire size
 prices each round), so compression shows up as simulated time-to-target,
 not just fewer bits (docs/compression.md).
 
+`--faults crash,nan,...` injects client faults into the decoded uplink ON
+DEVICE (stateless per-round keys — deterministic everywhere, including
+across `--resume`); `--screening` (+ `--clip-norm`) drops non-finite and
+clips oversized uploads as a rider on eq. (11)'s ONE collective;
+`--quorum` degrades under-quorum rounds to recorded no-ops and
+`--deadline-s` closes each simulated round at a wall-clock deadline;
+`--watchdog` rolls the state back to the best snapshot after sustained
+divergence; `--checkpoint-every N --checkpoint-dir D` snapshots the full
+round carry and `--resume` restores it BITWISE (docs/faults.md).
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --problem linreg --algo fedgia \
       --clients 128 --k0 10 --rounds 200 --tol 1e-7
@@ -81,7 +91,14 @@ import jax.numpy as jnp
 from repro.checkpoint import save_checkpoint
 from repro.config import FedConfig
 from repro.configs import get_config, list_architectures
-from repro.core import make_algorithm, make_clock, make_policy, run_rounds
+from repro.core import (
+    Screening,
+    make_algorithm,
+    make_clock,
+    make_faults,
+    make_policy,
+    run_rounds,
+)
 from repro.core.clock import CLOCKS
 from repro.core.selection import POLICIES
 from repro.data import linreg_noniid, logreg_data
@@ -162,7 +179,21 @@ def validate_flags(args) -> dict:
     single-device), `--overlap scatter` (no carry slot in the
     host-driven loop) or `--chunk auto` (no chunks to tune);
     `--aggregate packed` with `--store dense` (the packed sum needs the
-    participant tile).
+    participant tile); an unknown `--faults` kind, or `--faults` /
+    `--screening` with `--no-flat` (both operate on the flat comm
+    buffer); `--fault-rate` without `--faults`, with a rate outside
+    [0, 1] or a list length that is neither 1 nor len(kinds);
+    `--clip-norm` without `--screening`; `--quorum` outside [1, m] or
+    without a source of non-arrival (`--participation`, `--clock`,
+    `--faults` or `--screening`); `--deadline-s` without `--clock` (the
+    deadline cuts SIMULATED rounds) or without `--quorum` (a deadline
+    round can close with zero arrivals); `--watchdog-patience` /
+    `--watchdog-factor` without `--watchdog`, a patience < 1, a factor
+    <= 1, or `--watchdog` with `--store offload` (the snapshot would
+    double host residency); `--checkpoint-every` / `--resume` without
+    `--checkpoint-dir`, with `--shard-clients`, with `--chunk auto`, or
+    with `--no-scan` on a non-offload store (checkpointing rides the
+    chunked scan driver / the offload loop).
 
     Returns the resolved engine knobs: participation kind, clock kind,
     whether async rounds are on (a clock implies them), the parsed
@@ -308,6 +339,117 @@ def validate_flags(args) -> dict:
             raise SystemExit(
                 f"--shard-clients ({shard}) must be divisible by "
                 f"--pod ({pod}): each pod holds shard_clients/pod devices")
+    # --- fault-tolerant rounds (docs/faults.md) --------------------------
+    fault_kinds = [k for k in getattr(args, "faults", "").split(",") if k]
+    if fault_kinds:
+        from repro.core.faults import FAULT_KINDS
+        bad = sorted(set(fault_kinds) - set(FAULT_KINDS))
+        if bad:
+            raise SystemExit(
+                f"--faults: unknown kind(s) {','.join(bad)} "
+                f"(choose from {','.join(FAULT_KINDS)})")
+        if getattr(args, "no_flat", False):
+            raise SystemExit(
+                "--faults corrupts the flat (m, N) comm buffer and "
+                "requires the flat round path (drop --no-flat)")
+    rate_arg = getattr(args, "fault_rate", "")
+    if rate_arg and not fault_kinds:
+        raise SystemExit(
+            "--fault-rate is the injection probability of --faults — "
+            "pass --faults crash,nan,...")
+    fault_rates = [0.05]
+    if rate_arg:
+        try:
+            fault_rates = [float(v) for v in rate_arg.split(",")]
+        except ValueError as e:
+            raise SystemExit(f"--fault-rate: {e}")
+        if len(fault_rates) not in (1, len(fault_kinds)):
+            raise SystemExit(
+                f"--fault-rate needs 1 or {len(fault_kinds)} values, "
+                f"got {len(fault_rates)}")
+        if any(not 0.0 <= r <= 1.0 for r in fault_rates):
+            raise SystemExit(
+                f"--fault-rate values must be in [0, 1], got {rate_arg}")
+    screening = getattr(args, "screening", False)
+    if screening and getattr(args, "no_flat", False):
+        raise SystemExit(
+            "--screening filters the flat (m, N) comm buffer and "
+            "requires the flat round path (drop --no-flat)")
+    clip_norm = getattr(args, "clip_norm", 0.0)
+    if clip_norm:
+        if clip_norm < 0:
+            raise SystemExit(f"--clip-norm must be > 0, got {clip_norm}")
+        if not screening:
+            raise SystemExit(
+                "--clip-norm is the screening stage's norm clip — "
+                "pass --screening")
+    quorum = getattr(args, "quorum", 0)
+    if quorum:
+        if not 0 < quorum <= args.clients:
+            raise SystemExit(
+                f"--quorum must be in [1, m={args.clients}], got {quorum}")
+        if kind == "full" and clock_kind == "none" and not fault_kinds \
+                and not screening:
+            raise SystemExit(
+                "--quorum needs a source of non-arrival to guard against "
+                "— pass --participation, --clock, --faults or --screening")
+    deadline_s = getattr(args, "deadline_s", 0.0)
+    if deadline_s:
+        if deadline_s < 0:
+            raise SystemExit(f"--deadline-s must be > 0, got {deadline_s}")
+        if clock_kind == "none":
+            raise SystemExit(
+                "--deadline-s cuts simulated rounds at a wall-clock "
+                "deadline — it requires --clock")
+        if quorum < 1:
+            raise SystemExit(
+                "--deadline-s can close rounds with ZERO arrivals — pass "
+                "--quorum (>= 1) so they degrade to recorded no-ops "
+                "instead of aggregating nothing")
+    watchdog = getattr(args, "watchdog", False)
+    patience = getattr(args, "watchdog_patience", None)
+    factor = getattr(args, "watchdog_factor", None)
+    if not watchdog and (patience is not None or factor is not None):
+        raise SystemExit(
+            "--watchdog-patience/--watchdog-factor tune the divergence "
+            "watchdog — pass --watchdog")
+    if watchdog:
+        patience = 3 if patience is None else patience
+        factor = 2.0 if factor is None else factor
+        if patience < 1:
+            raise SystemExit(
+                f"--watchdog-patience must be >= 1, got {patience}")
+        if factor <= 1.0:
+            raise SystemExit(
+                "--watchdog-factor is a divergence threshold RELATIVE to "
+                f"the best f̄ seen and must be > 1, got {factor}")
+        if store == "offload":
+            raise SystemExit(
+                "--watchdog keeps a full state snapshot in the carry — "
+                "with --store offload that would double the host-resident "
+                "buffers; use --store dense/active")
+    ckpt_every = getattr(args, "checkpoint_every", 0)
+    resume = getattr(args, "resume", False)
+    if ckpt_every < 0:
+        raise SystemExit(
+            f"--checkpoint-every must be >= 0, got {ckpt_every}")
+    if ckpt_every or resume:
+        if not getattr(args, "checkpoint_dir", ""):
+            raise SystemExit(
+                "--checkpoint-every/--resume need --checkpoint-dir to "
+                "write/read the round-carry snapshots")
+        if getattr(args, "shard_clients", 0) > 1:
+            raise SystemExit(
+                "checkpointing round-trips the carry through host npz — "
+                "it runs unsharded (drop --shard-clients)")
+        if chunk == "auto":
+            raise SystemExit(
+                "--chunk auto re-times candidate chunk lengths — "
+                "checkpoint boundaries need a fixed --chunk")
+        if getattr(args, "no_scan", False) and store != "offload":
+            raise SystemExit(
+                "--checkpoint-every/--resume ride the chunked scan "
+                "driver (or the offload loop) — drop --no-scan")
     return {
         "kind": kind,
         "clock_kind": clock_kind,
@@ -327,6 +469,17 @@ def validate_flags(args) -> dict:
         "bandwidth_bps": bandwidth if bandwidth else None,
         "overlap": overlap,
         "pod": pod,
+        "fault_kinds": fault_kinds,
+        "fault_rates": fault_rates,
+        "screening": screening,
+        "clip_norm": clip_norm if clip_norm else None,
+        "quorum": quorum,
+        "deadline_s": deadline_s if deadline_s else None,
+        "watchdog": watchdog,
+        "watchdog_patience": 3 if patience is None else patience,
+        "watchdog_factor": 2.0 if factor is None else factor,
+        "checkpoint_every": ckpt_every,
+        "resume": resume,
     }
 
 
@@ -399,7 +552,40 @@ def train(args) -> dict:
         sigma=getattr(args, "clock_sigma", 0.5),
         seed=args.seed,
         bandwidth_bps=parsed["bandwidth_bps"],
+        deadline_s=parsed["deadline_s"],
     )
+    # fault-tolerant rounds (core/faults.py, docs/faults.md)
+    faults = make_faults(
+        parsed["fault_kinds"], parsed["fault_rates"],
+        num_clients=args.clients, seed=args.seed,
+        scale=getattr(args, "fault_scale", 1e6),
+    )
+    screening = (Screening(clip_norm=parsed["clip_norm"])
+                 if parsed["screening"] else None)
+    if faults is not None:
+        log.info("fault injection: %s at rate(s) %s (on-device, "
+                 "stateless per-round keys)",
+                 ",".join(parsed["fault_kinds"]),
+                 ",".join("%g" % r for r in parsed["fault_rates"]))
+    if screening is not None:
+        log.info("upload screening: finite check%s riding eq. (11)'s "
+                 "collective",
+                 (" + norm clip at %g" % parsed["clip_norm"])
+                 if parsed["clip_norm"] else "")
+    if parsed["quorum"]:
+        log.info("quorum: rounds with < %d accepted uploads degrade to "
+                 "recorded no-ops", parsed["quorum"])
+    if parsed["deadline_s"] is not None:
+        log.info("round deadline: %.3g simulated seconds (late clients "
+                 "re-arrive next round)", parsed["deadline_s"])
+    if parsed["watchdog"]:
+        log.info("divergence watchdog: rollback after %d rounds above "
+                 "%.2gx the best f̄", parsed["watchdog_patience"],
+                 parsed["watchdog_factor"])
+    if parsed["checkpoint_every"]:
+        log.info("checkpointing the round carry every %d rounds to %s%s",
+                 parsed["checkpoint_every"], args.checkpoint_dir,
+                 " (resuming)" if parsed["resume"] else "")
     if parsed["compression"] is not None:
         log.info("uplink compression: %s codec%s%s", parsed["compression"],
                  " + error feedback" if parsed["error_feedback"] else "",
@@ -451,6 +637,16 @@ def train(args) -> dict:
         topk_frac=parsed["topk_frac"],
         overlap=parsed["overlap"],
         client_axis=client_axis,
+        faults=faults,
+        screening=screening,
+        quorum=parsed["quorum"],
+        watchdog=parsed["watchdog"],
+        watchdog_patience=parsed["watchdog_patience"],
+        watchdog_factor=parsed["watchdog_factor"],
+        checkpoint_every=parsed["checkpoint_every"],
+        checkpoint_dir=(args.checkpoint_dir or None)
+        if (parsed["checkpoint_every"] or parsed["resume"]) else None,
+        resume=parsed["resume"],
     )
     history = [
         {"round": r, "f": float(res.history["f_xbar"][r]),
@@ -494,7 +690,23 @@ def train(args) -> dict:
             log.info("wire totals: %.0f B up / %.0f B down over %d rounds",
                      result["bytes_up"], result["bytes_down"],
                      res.rounds_run)
-    if args.checkpoint_dir:
+    if "screened" in res.history:
+        result["screened_min"] = int(res.history["screened"].min())
+    if "degraded" in res.history:
+        result["degraded_rounds"] = int(res.history["degraded"].sum())
+        if result["degraded_rounds"]:
+            log.info("%d round(s) missed the quorum and degraded to "
+                     "no-ops", result["degraded_rounds"])
+    if "rollback" in res.history:
+        result["rollbacks"] = int(res.history["rollback"].sum())
+        if result["rollbacks"]:
+            log.info("watchdog rolled the state back %d time(s)",
+                     result["rollbacks"])
+    if args.checkpoint_dir and not (parsed["checkpoint_every"]
+                                    or parsed["resume"]):
+        # legacy final-state save; when the engine owns the directory
+        # (--checkpoint-every/--resume) it already persisted the full
+        # round carry there and a state-only file would shadow it
         save_checkpoint(args.checkpoint_dir, res.rounds_run, res.state,
                         extra={"algo": args.algo})
         log.info("checkpoint written to %s", args.checkpoint_dir)
@@ -664,6 +876,76 @@ def build_parser() -> argparse.ArgumentParser:
                          "core/compress.py) and the run reports "
                          "bytes_up/bytes_down; 0 keeps the constant "
                          "comm-time model bitwise")
+    ap.add_argument("--faults", default="",
+                    help="comma-separated fault kinds injected into the "
+                         "decoded uplink ON DEVICE each round "
+                         "(core/faults.py, drawn from stateless per-round "
+                         "keys — deterministic across scan/legacy, stores, "
+                         "shardings and checkpoint resume): crash (drop "
+                         "the upload), nan / inf (corrupt a prefix of the "
+                         "row), explode (scale the update by "
+                         "--fault-scale), replay (re-send the previous "
+                         "round's upload). Requires the flat path")
+    ap.add_argument("--fault-rate", default="",
+                    help="per-client per-round injection probability for "
+                         "--faults: one value broadcast over all kinds, "
+                         "or one per kind (comma-separated); default 0.05")
+    ap.add_argument("--fault-scale", type=float, default=1e6,
+                    help="magnitude multiplier for the explode fault")
+    ap.add_argument("--screening", action="store_true",
+                    help="defensive server-side screening of the decoded "
+                         "uploads (api.harden_upload): rows with any "
+                         "non-finite entry are dropped from the "
+                         "aggregation mask before eq. (11)'s reduction — "
+                         "the round keeps its ONE model-size all-reduce "
+                         "(the finite check rides the same collective). "
+                         "Useful without --faults too (real NaN guards)")
+    ap.add_argument("--clip-norm", type=float, default=0.0,
+                    help="screening norm clip: finite rows with l2 norm "
+                         "above this are scaled onto the clip ball "
+                         "(defuses explode faults). Requires --screening")
+    ap.add_argument("--quorum", type=int, default=0,
+                    help="minimum accepted-upload count for a round to "
+                         "commit: an under-quorum round becomes a recorded "
+                         "no-op (x̄ carried, history row flagged "
+                         "degraded=1). Requires a source of non-arrival "
+                         "(--participation, --clock, --faults or "
+                         "--screening); required >= 1 with --deadline-s")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="wall-clock round deadline for --clock: each "
+                         "round closes after this many simulated seconds "
+                         "and only clients that finished participate "
+                         "(late clients re-arrive next round). Zero-"
+                         "arrival rounds degrade under --quorum")
+    ap.add_argument("--watchdog", action="store_true",
+                    help="divergence watchdog: track the best f̄ seen and "
+                         "a state snapshot in the carry; after "
+                         "--watchdog-patience consecutive rounds with "
+                         "f̄ > --watchdog-factor x best (NaN counts as "
+                         "diverged) restore the snapshot and flag "
+                         "rollback=1 in the history. Doubles the carry "
+                         "state; not available with --store offload")
+    ap.add_argument("--watchdog-patience", type=int, default=None,
+                    help="diverged rounds tolerated before the rollback "
+                         "(default 3). Requires --watchdog")
+    ap.add_argument("--watchdog-factor", type=float, default=None,
+                    help="divergence threshold relative to the best f̄ "
+                         "seen (default 2.0, must be > 1). Requires "
+                         "--watchdog")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="snapshot the FULL round carry (client buffers, "
+                         "policy/clock/staleness/watchdog state, rng, "
+                         "metric history) to --checkpoint-dir every this "
+                         "many rounds (atomic npz, checkpoint/); a "
+                         "--resume run restores the newest snapshot and "
+                         "is BITWISE identical to the uninterrupted run. "
+                         "Scan and offload paths; needs a fixed --chunk "
+                         "and no --shard-clients")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest checkpoint under "
+                         "--checkpoint-dir (fresh start when none "
+                         "exists); the run config must hash-match the "
+                         "checkpointing run")
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--rounds", type=int, default=100)
     ap.add_argument("--tol", type=float, default=1e-7)

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import warnings
 from typing import Tuple
 
 import jax
@@ -433,9 +434,48 @@ def host_placement():
     return placement
 
 
+def _demote_to_cpu():
+    """Permanently demote the process-wide host placement to the CPU
+    backend (the always-works path the init-time probe falls back to)."""
+    global _HOST_PLACEMENT
+    _HOST_PLACEMENT = jax.local_devices(backend="cpu")[0]
+    return _HOST_PLACEMENT
+
+
 def host_put(x) -> jax.Array:
-    """Commit an array to the offload store's host placement."""
-    return jax.device_put(x, host_placement())
+    """Commit an array to the offload store's host placement.
+
+    Hardened against MID-RUN transfer failures: the pinned-host pool can
+    exhaust or the DMA path can error long after the init-time probe in
+    :func:`host_placement` succeeded (e.g. another process grabbed the
+    pinned pool, or a transient driver hiccup). A failed transfer is
+    retried once with a warning; a second failure demotes the placement
+    to the CPU backend for the remainder of the process instead of
+    crashing the run — gather/scatter semantics are identical there
+    (same clip/drop row ops, bit-identical values), only the transfer
+    path is slower.
+    """
+    placement = host_placement()
+    try:
+        return jax.device_put(x, placement)
+    except Exception as exc:  # XlaRuntimeError has no stable subclass
+        warnings.warn(
+            "host_put: transfer to the offload host placement failed "
+            f"({type(exc).__name__}: {exc}); retrying once",
+            RuntimeWarning, stacklevel=2)
+    try:
+        return jax.device_put(x, placement)
+    except Exception as exc:
+        if not isinstance(placement, jax.sharding.Sharding):
+            # Already on the CPU-device fallback: nothing left to demote
+            # to — this is a real error, surface it.
+            raise
+        warnings.warn(
+            "host_put: pinned-host transfer failed twice "
+            f"({type(exc).__name__}: {exc}); falling back to the CPU "
+            "backend for the remainder of the run",
+            RuntimeWarning, stacklevel=2)
+        return jax.device_put(x, _demote_to_cpu())
 
 
 def host_put_tree(tree: Pytree) -> Pytree:

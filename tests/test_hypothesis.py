@@ -20,6 +20,7 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+from repro.core.faults import Screening, screen_rows
 from repro.utils import pytree as pt
 
 SETTINGS = dict(max_examples=25, deadline=None)
@@ -156,6 +157,61 @@ def test_active_scatter_touches_exactly_masked_rows(mc, seed):
     out = np.asarray(aset.scatter(buf, aset.gather(buf) + 1.0))
     expect = np.asarray(buf) + mask[:, None].astype(np.float32)
     np.testing.assert_array_equal(out, expect)
+
+
+# ------------------------------------------------------------------ Screening
+@st.composite
+def screened_uploads(draw):
+    """A (rows, n) contribution buffer seeded with random NaN/Inf cells
+    and heavy-tailed magnitudes, an optional participation mask, and an
+    optional clip norm — the full screen_rows input space."""
+    rows = draw(st.integers(1, 12))
+    n = draw(st.integers(1, 9))
+    r = np.random.default_rng(draw(st.integers(0, 2**16)))
+    buf = (r.standard_normal((rows, n)) *
+           10.0 ** r.integers(-2, 4, size=(rows, 1))).astype(np.float32)
+    for _ in range(draw(st.integers(0, rows))):  # poison some cells
+        buf[r.integers(rows), r.integers(n)] = draw(
+            st.sampled_from([np.nan, np.inf, -np.inf]))
+    mask = (np.asarray(draw(st.lists(st.booleans(), min_size=rows,
+                                     max_size=rows)), bool)
+            if draw(st.booleans()) else None)
+    clip = draw(st.one_of(st.none(),
+                          st.floats(1e-3, 1e4, allow_nan=False)))
+    return buf, mask, clip
+
+
+@given(sc=screened_uploads())
+@settings(**SETTINGS)
+def test_screen_rows_contract(sc):
+    """screen_rows' full contract, under random poisoning:
+      * smask ⊆ the participation mask, and smask is exactly
+        mask ∧ row-is-finite — screening never admits a non-arrival;
+      * no non-finite value survives into the returned buffer (so none
+        can reach eq. (11)'s psum), screened-out rows are exact zeros;
+      * with clip_norm set, every surviving row lands on or inside the
+        clip ball (small fp slack for the rescale), and rows already
+        inside it pass through BITWISE."""
+    buf, mask, clip = sc
+    out, smask = screen_rows(
+        jnp.asarray(buf), None if mask is None else jnp.asarray(mask),
+        Screening(clip_norm=clip))
+    out, smask = np.asarray(out), np.asarray(smask)
+    finite_rows = np.isfinite(buf).all(axis=-1)
+    expect_mask = finite_rows if mask is None else (mask & finite_rows)
+    np.testing.assert_array_equal(smask, expect_mask)
+    if mask is not None:
+        assert not (smask & ~mask).any()
+    assert np.isfinite(out).all()
+    np.testing.assert_array_equal(out[~smask],
+                                  np.zeros_like(out[~smask]))
+    if clip is not None:
+        nrm = np.linalg.norm(out.astype(np.float64), axis=-1)
+        assert (nrm <= clip * (1 + 1e-5)).all()
+        inside = smask & (np.linalg.norm(
+            np.where(expect_mask[:, None], buf, 0.0).astype(np.float64),
+            axis=-1) <= clip)
+        np.testing.assert_array_equal(out[inside], buf[inside])
 
 
 @given(mc=masks(), seed=st.integers(0, 2**16))

@@ -94,6 +94,46 @@ def _args(*extra):
      "--overlap scatter carries the reduce-scattered"),
     (["--pod", "2"], "--pod .* requires --shard-clients"),
     (["--pod", "3", "--shard-clients", "8"], "must be divisible by"),
+    # fault injection corrupts (and screening filters) the flat buffer
+    (["--faults", "bitflip"], "unknown kind"),
+    (["--faults", "crash", "--no-flat"], "--faults corrupts the flat"),
+    (["--screening", "--no-flat"], "--screening filters the flat"),
+    # fault rates belong to --faults: broadcast-or-per-kind, in [0, 1]
+    (["--fault-rate", "0.1"], "--fault-rate is the injection probability"),
+    (["--faults", "crash", "--fault-rate", "0.1,0.2"],
+     "--fault-rate needs 1 or 1 values"),
+    (["--faults", "crash", "--fault-rate", "1.5"], "values must be in"),
+    (["--faults", "crash", "--fault-rate", "lots"], "--fault-rate:"),
+    # the norm clip is a screening knob and must be positive
+    (["--clip-norm", "5"], "pass --screening"),
+    (["--screening", "--clip-norm", "-1"], "--clip-norm must be > 0"),
+    # quorum needs something that can withhold uploads, and fits [1, m]
+    (["--quorum", "2"], "needs a source of non-arrival"),
+    (["--participation", "uniform", "--quorum", "9"],
+     "--quorum must be in"),
+    # the deadline cuts SIMULATED rounds and can close them empty
+    (["--deadline-s", "2.5"], "requires --clock"),
+    (["--clock", "constant", "--deadline-s", "-1"],
+     "--deadline-s must be > 0"),
+    (["--clock", "constant", "--deadline-s", "2.5"], "pass .*--quorum"),
+    # watchdog tuning knobs need the watchdog; offload can't host it
+    (["--watchdog-patience", "2"], "pass --watchdog"),
+    (["--watchdog-factor", "3.0"], "pass --watchdog"),
+    (["--watchdog", "--watchdog-patience", "0"],
+     "--watchdog-patience must be >= 1"),
+    (["--watchdog", "--watchdog-factor", "1.0"], "RELATIVE to"),
+    (["--watchdog", "--store", "offload", "--participation", "uniform"],
+     "keeps a full state snapshot"),
+    # checkpointing rides the chunked scan on the local mesh
+    (["--checkpoint-every", "-1"], "--checkpoint-every must be >= 0"),
+    (["--checkpoint-every", "4"], "need --checkpoint-dir"),
+    (["--resume"], "need --checkpoint-dir"),
+    (["--checkpoint-every", "4", "--checkpoint-dir", "/tmp/ck",
+      "--shard-clients", "4"], "host npz"),
+    (["--checkpoint-every", "4", "--checkpoint-dir", "/tmp/ck",
+      "--chunk", "auto"], "fixed --chunk"),
+    (["--resume", "--checkpoint-dir", "/tmp/ck", "--no-scan"],
+     "chunked scan"),
 ])
 def test_rejected_flag_combinations(argv, match):
     with pytest.raises(SystemExit, match=match):
@@ -193,6 +233,65 @@ def test_compression_knobs_resolved():
                                   "constant", "--bandwidth-bps", "4000"))
     assert parsed["compression"] == "bf16"
     assert parsed["bandwidth_bps"] == 4000.0
+
+
+def test_fault_knobs_resolved():
+    # defaults: no faults, no screening, every fault knob off
+    parsed = validate_flags(_args())
+    assert parsed["fault_kinds"] == [] and not parsed["screening"]
+    assert parsed["clip_norm"] is None and parsed["quorum"] == 0
+    assert parsed["deadline_s"] is None and not parsed["watchdog"]
+    assert parsed["checkpoint_every"] == 0 and not parsed["resume"]
+    # one rate broadcasts over the kinds; per-kind rates parse in order
+    parsed = validate_flags(_args("--faults", "crash,nan",
+                                  "--fault-rate", "0.2"))
+    assert parsed["fault_kinds"] == ["crash", "nan"]
+    assert parsed["fault_rates"] == [0.2]
+    parsed = validate_flags(_args("--faults", "crash,explode",
+                                  "--fault-rate", "0.1,0.3"))
+    assert parsed["fault_rates"] == [0.1, 0.3]
+    # screening stands alone (real NaN guards) and carries the clip
+    parsed = validate_flags(_args("--screening", "--clip-norm", "100"))
+    assert parsed["screening"] and parsed["clip_norm"] == 100.0
+    # faults/screening are quorum sources in their own right
+    assert validate_flags(_args("--faults", "crash",
+                                "--quorum", "2"))["quorum"] == 2
+    assert validate_flags(_args("--screening",
+                                "--quorum", "2"))["quorum"] == 2
+
+
+def test_deadline_and_watchdog_resolved():
+    parsed = validate_flags(_args("--clock", "constant", "--deadline-s",
+                                  "2.5", "--quorum", "1"))
+    assert parsed["deadline_s"] == 2.5 and parsed["quorum"] == 1
+    assert parsed["async_rounds"]  # the clock still implies async rounds
+    # watchdog defaults apply only when the tuning flags are omitted
+    parsed = validate_flags(_args("--watchdog"))
+    assert parsed["watchdog"] and parsed["watchdog_patience"] == 3
+    assert parsed["watchdog_factor"] == 2.0
+    parsed = validate_flags(_args("--watchdog", "--watchdog-patience", "5",
+                                  "--watchdog-factor", "1.5"))
+    assert parsed["watchdog_patience"] == 5
+    assert parsed["watchdog_factor"] == 1.5
+
+
+def test_checkpoint_knobs_resolved():
+    parsed = validate_flags(_args("--checkpoint-every", "4",
+                                  "--checkpoint-dir", "/tmp/ck"))
+    assert parsed["checkpoint_every"] == 4 and not parsed["resume"]
+    # --resume without --checkpoint-every restores but writes no more
+    parsed = validate_flags(_args("--resume", "--checkpoint-dir", "/tmp/ck"))
+    assert parsed["resume"] and parsed["checkpoint_every"] == 0
+    # a fixed chunk and the offload store both compose with checkpointing
+    parsed = validate_flags(_args("--checkpoint-every", "2",
+                                  "--checkpoint-dir", "/tmp/ck",
+                                  "--chunk", "2"))
+    assert parsed["checkpoint_every"] == 2 and parsed["chunk"] == 2
+    parsed = validate_flags(_args("--checkpoint-every", "2",
+                                  "--checkpoint-dir", "/tmp/ck",
+                                  "--store", "offload",
+                                  "--participation", "uniform"))
+    assert parsed["store"] == "offload" and parsed["checkpoint_every"] == 2
 
 
 def test_flat_and_kernel_knobs_resolved():

@@ -2,7 +2,8 @@
 """Generate docs/api.md from the round-engine public surface's docstrings.
 
 The reference covers `repro.core.engine`, `repro.core.selection`,
-`repro.core.clock`, `repro.core.compress`, `repro.core.api` and
+`repro.core.clock`, `repro.core.compress`, `repro.core.faults`,
+`repro.core.api` and
 `repro.utils.pytree` — the modules whose docstrings carry the engine
 contracts (scan-carry layout, mask contract, staleness fields,
 wall-clock event semantics, codec wire formats, the flat-buffer ravel
@@ -29,7 +30,8 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 OUT = ROOT / "docs" / "api.md"
 MODULES = ("repro.core.engine", "repro.core.selection", "repro.core.clock",
-           "repro.core.compress", "repro.core.api", "repro.utils.pytree")
+           "repro.core.compress", "repro.core.faults", "repro.core.api",
+           "repro.utils.pytree")
 
 HEADER = """\
 # API reference (generated)
